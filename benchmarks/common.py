@@ -1,0 +1,88 @@
+"""Shared helpers for the benchmark suite: instance builders, timing, and
+result table I/O.
+
+Every benchmark module exposes ``run(quick: bool) -> list[dict]`` and gets
+aggregated by ``benchmarks.run``.  Results are also dumped to
+``results/bench/<module>.json`` so EXPERIMENTS.md tables regenerate from
+files, not from scrollback.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "bench")
+
+
+def instance(seed=0, n=2048, d=16, m=16, kind="coverage"):
+    """(oracle, X, feats_mk, ids_mk, valid_mk) — random ground set split
+    over m machines."""
+    from repro.core import FacilityLocation, FeatureCoverage
+
+    rng = np.random.default_rng(seed)
+    if kind == "coverage":
+        X = jnp.asarray((rng.random((n, d)).astype(np.float32)) ** 2)
+        oracle = FeatureCoverage(feat_dim=d)
+    elif kind == "facility":
+        X = jnp.asarray(rng.random((n, d)).astype(np.float32))
+        ref = X[:: max(1, n // 64)][:64]
+        oracle = FacilityLocation(feat_dim=d, reference=ref)
+    else:
+        raise ValueError(kind)
+    feats_mk = X.reshape(m, n // m, d)
+    ids_mk = jnp.arange(n, dtype=jnp.int32).reshape(m, n // m)
+    valid_mk = jnp.ones((m, n // m), bool)
+    return oracle, X, feats_mk, ids_mk, valid_mk
+
+
+def greedy_value(oracle, X, k):
+    from repro.core.sequential import greedy
+
+    _, _, gval = greedy(oracle, X, jnp.ones(X.shape[0], bool), k)
+    return float(gval)
+
+
+def timed(fn: Callable, *args, repeats=1, **kw):
+    """(result, best_seconds) with a warmup call (jit compile excluded)."""
+    out = fn(*args, **kw)
+    jax.block_until_ready(jax.tree.leaves(out)[0] if jax.tree.leaves(out)
+                          else out)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(jax.tree.leaves(out)[0] if jax.tree.leaves(out)
+                              else out)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def save(module: str, rows: List[Dict]) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{module}.json"), "w") as f:
+        json.dump(rows, f, indent=1, default=float)
+
+
+def print_table(title: str, rows: List[Dict]) -> None:
+    if not rows:
+        print(f"== {title}: no rows ==")
+        return
+    keys = list(rows[0].keys())
+    print(f"\n== {title} ==")
+    print(",".join(keys))
+    for r in rows:
+        print(",".join(_fmt(r.get(k)) for k in keys))
+
+
+def _fmt(v):
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)

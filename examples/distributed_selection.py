@@ -1,0 +1,66 @@
+"""The paper's algorithms side by side on one instance: round counts,
+central-machine memory, and solution quality — Algorithm 4 (known OPT),
+Theorem 8 (unknown OPT), Algorithm 5 (t thresholds), RandGreeDi, and
+MZ core-sets with duplication.
+
+    PYTHONPATH=src python examples/distributed_selection.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (FeatureCoverage, MRConfig, multi_threshold_sim,
+                        two_round_known_opt_sim, two_round_sim)
+from repro.core.distributed_baselines import mz_coresets, rand_greedi
+from repro.core.sequential import greedy
+
+n, d, k, m = 4096, 24, 24, 16
+X = jax.random.uniform(jax.random.PRNGKey(0), (n, d)) ** 2
+oracle = FeatureCoverage(feat_dim=d)
+feats_mk = X.reshape(m, n // m, d)
+ids_mk = jnp.arange(n, dtype=jnp.int32).reshape(m, n // m)
+valid_mk = jnp.ones((m, n // m), bool)
+ids = jnp.arange(n, dtype=jnp.int32)
+valid = jnp.ones((n,), bool)
+
+_, _, gval = greedy(oracle, X, valid, k)
+gval = float(gval)
+cfg = MRConfig(k=k, n_total=n, n_machines=m)
+
+print(f"ground set n={n}, k={k}, m={m} machines  "
+      f"(sequential greedy anchor: f={gval:.2f})\n")
+print(f"{'algorithm':34s} {'rounds':>6s} {'f(S)/greedy':>12s} "
+      f"{'central KB':>10s} {'dup':>4s}")
+
+
+def row(name, res, log, dup=1):
+    print(f"{name:34s} {log.n_rounds:6d} "
+          f"{float(res.value) / gval:12.3f} "
+          f"{log.max_central_bytes / 1024:10.1f} {dup:4d}")
+
+
+res, log = two_round_known_opt_sim(oracle, feats_mk, ids_mk, valid_mk,
+                                   gval, cfg, jax.random.PRNGKey(1))
+row("Alg 4 (2 rounds, OPT known)", res, log)
+
+res, log = two_round_sim(oracle, feats_mk, ids_mk, valid_mk, cfg,
+                         jax.random.PRNGKey(2))
+row("Thm 8 (2 rounds, OPT unknown)", res, log)
+
+for t in (2, 3, 4):
+    res, log = multi_threshold_sim(oracle, feats_mk, ids_mk, valid_mk,
+                                   gval, t, cfg, jax.random.PRNGKey(3))
+    bound = 1 - (1 - 1 / (t + 1)) ** t
+    row(f"Alg 5 (t={t}, {2 * t} rounds, >={bound:.3f})", res, log)
+
+res, log = rand_greedi(oracle, feats_mk, ids_mk, valid_mk, k)
+row("RandGreeDi [Barbosa et al.]", res, log)
+
+for dup in (1, 4):
+    res, log = mz_coresets(oracle, X, ids, valid, k, m,
+                           jax.random.PRNGKey(4), duplication=dup)
+    row(f"MZ core-sets (dup={dup})", res, log, dup)
+
+print("\nNote the paper's regime: 2 rounds, no duplication, ratio >= 1/2-eps"
+      "\n(MZ needs 4x duplication for 0.545; Alg 5 buys 1-(1-1/(t+1))^t "
+      "with 2t rounds).")

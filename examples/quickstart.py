@@ -1,0 +1,44 @@
+"""Quickstart: the paper's algorithm in five minutes.
+
+Selects a diverse subset of synthetic documents with the 2-round MapReduce
+thresholding algorithm (Theorem 8: no OPT knowledge, no duplication), and
+compares against the sequential greedy (1 - 1/e) anchor.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import FeatureCoverage, MRConfig, two_round_sim
+from repro.core.sequential import greedy
+
+# 1. a ground set: n documents embedded as nonneg feature rows
+n, d, k, m = 4096, 32, 32, 16
+key = jax.random.PRNGKey(0)
+X = jax.random.uniform(key, (n, d)) ** 2
+
+# 2. a monotone submodular objective (concave-over-modular coverage)
+oracle = FeatureCoverage(feat_dim=d)
+
+# 3. the paper's 2-round algorithm over m machines (vmapped MRC sim;
+#    repro.core.selector.DistributedSelector is the same thing on a real
+#    device mesh)
+cfg = MRConfig(k=k, n_total=n, n_machines=m)
+feats_mk = X.reshape(m, n // m, d)
+ids_mk = jnp.arange(n, dtype=jnp.int32).reshape(m, n // m)
+valid_mk = jnp.ones((m, n // m), bool)
+
+res, log = two_round_sim(oracle, feats_mk, ids_mk, valid_mk, cfg,
+                         jax.random.PRNGKey(1))
+
+# 4. anchor: sequential greedy (>= (1 - 1/e) OPT)
+_, _, greedy_val = greedy(oracle, X, jnp.ones(n, bool), k)
+
+print(log.summary())
+print(f"2-round MapReduce   f(S) = {float(res.value):8.3f}  "
+      f"(|S| = {int(res.sol_size)}, buffer overflows = {int(res.n_dropped)})")
+print(f"sequential greedy   f(S) = {float(greedy_val):8.3f}")
+print(f"ratio vs greedy     {float(res.value) / float(greedy_val):.3f}  "
+      f"(guarantee: >= {0.5 - cfg.eps:.2f} vs OPT; "
+      f"greedy itself is >= 0.63 OPT)")

@@ -1,0 +1,32 @@
+"""Serving example: batched prefill + greedy decode on a (reduced) assigned
+arch, including a hybrid (zamba2: Mamba2 + shared attention) to show SSM
+caches flowing through the same serve path.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch zamba2-2.7b]
+"""
+
+import argparse
+import subprocess
+import sys
+
+ARCHS = ["qwen3-1.7b", "zamba2-2.7b", "falcon-mamba-7b"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="default: demo all three families")
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    for arch in ([args.arch] if args.arch else ARCHS):
+        print(f"\n=== serving {arch} (reduced config) ===")
+        subprocess.run(
+            [sys.executable, "-m", "repro.launch.serve", "--arch", arch,
+             "--batch", "2", "--prompt-len", "32", "--gen", str(args.gen),
+             "--smoke"],
+            check=True)
+
+
+if __name__ == "__main__":
+    main()

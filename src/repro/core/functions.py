@@ -1,0 +1,280 @@
+"""Monotone submodular objective oracles, in a batched/JAX-friendly form.
+
+The paper assumes every machine has oracle access to ``f``.  To make that real
+on a TPU pod, each oracle here is *state-based*: the current solution ``S`` is
+summarized by a compact ``state`` pytree such that
+
+  * ``marginals(state, aux)`` scores a whole block of candidates at once
+    (vectorized / MXU-friendly — this is the hot loop ThresholdGreedy runs), and
+  * ``state`` is O(d)-sized and replicable, so the paper's "send the partial
+    greedy solution G to every machine" is a broadcast of ``state`` + the id
+    list, never a re-evaluation of f from scratch.
+
+Every element is represented by a dense *feature row*; a candidate block is a
+``(C, feat_dim)`` array.  ``prep`` turns a candidate block into per-candidate
+``aux`` (e.g. similarity rows for facility location), computed once per
+ThresholdGreedy call and reused across its iterations.
+
+Oracles implemented:
+
+  FeatureCoverage    f(S) = sum_f w_f * sqrt(sum_{e in S} x_{e,f})
+                     (concave-over-modular coverage; the workhorse for
+                     distributed data selection — state is a (d,) vector)
+  FacilityLocation   f(S) = sum_{v in R} max_{e in S} <x_v, x_e>
+                     over a replicated reference/client set R
+                     (the Pallas kernel target; state is the cover vector)
+  WeightedCoverage   classic weighted max-coverage (the paper's canonical
+                     application, cf. Assadi–Khanna / McGregor–Vu)
+  AdversarialThreshold  the hard instance of Theorem 4, in closed form
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class SubmodularOracle:
+    """Protocol (duck-typed) for batched submodular oracles.
+
+    feat_dim:     width of an element's feature row.
+    init_state(): state pytree for S = {}.
+    prep(state, cand_feats):      per-candidate aux, computed once per block.
+    marginals(state, aux):        (C,) marginal gains f_S(e) for the block.
+    add(state, aux_row):          state for S + {e}, from e's aux row.
+    value(state):                 f(S).
+    """
+
+    feat_dim: int
+
+    def init_state(self):  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def prep(self, state, cand_feats):
+        return cand_feats
+
+    def marginals(self, state, aux):  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def add(self, state, aux_row):  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def value(self, state):  # pragma: no cover - interface
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class FeatureCoverage(SubmodularOracle):
+    """f(S) = sum_f w_f sqrt(sum_{e in S} x_{e,f}),  x >= 0.
+
+    Concave-over-modular => monotone submodular.  The state is the modular
+    accumulator ``agg`` — O(d), trivially broadcastable, so the MapReduce
+    "ship G to everyone" is a d-float message.
+    """
+
+    feat_dim: int
+    weights: Any = None  # optional (d,) nonneg weights
+    use_kernel: bool = False  # route marginals through the Pallas kernel
+
+    def init_state(self):
+        return jnp.zeros((self.feat_dim,), jnp.float32)
+
+    def marginals(self, state, aux):
+        if self.use_kernel:
+            from repro.kernels import ops
+
+            return ops.coverage_marginals(aux, state, self.weights)
+        new = jnp.sqrt(state[None, :] + aux) - jnp.sqrt(state[None, :])
+        if self.weights is not None:
+            new = new * self.weights[None, :]
+        return jnp.sum(new, axis=-1)
+
+    def add(self, state, aux_row):
+        return state + aux_row
+
+    def value(self, state):
+        v = jnp.sqrt(state)
+        if self.weights is not None:
+            v = v * self.weights
+        return jnp.sum(v)
+
+
+@dataclasses.dataclass(frozen=True)
+class FacilityLocation(SubmodularOracle):
+    """f(S) = sum_{v in R} max(0, max_{e in S} <x_v, x_e>).
+
+    ``reference`` is a replicated client set (r, d) — standard practice for
+    distributed facility location (clients are a fixed subsample).  ``prep``
+    computes the (C, r) similarity block once; iterating ThresholdGreedy then
+    touches only (C, r) data.  The prep matmul + rectified reduction is the
+    compute hot spot and has a Pallas kernel (repro.kernels.facility_marginals);
+    set ``use_kernel=True`` to route through it.
+    """
+
+    feat_dim: int
+    reference: Any = None  # (r, d)
+    use_kernel: bool = False
+
+    def init_state(self):
+        r = self.reference.shape[0]
+        return jnp.zeros((r,), jnp.float32)
+
+    def prep(self, state, cand_feats):
+        # (C, r) similarities; nonneg similarities keep f monotone.
+        sims = cand_feats @ self.reference.T
+        return jnp.maximum(sims, 0.0)
+
+    def marginals(self, state, aux):
+        if self.use_kernel:
+            from repro.kernels import ops
+
+            return ops.rectified_residual_sum(aux, state)
+        return jnp.sum(jnp.maximum(aux - state[None, :], 0.0), axis=-1)
+
+    def add(self, state, aux_row):
+        return jnp.maximum(state, aux_row)
+
+    def value(self, state):
+        return jnp.sum(state)
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightedCoverage(SubmodularOracle):
+    """Weighted max-coverage: element e covers universe items u with inc[e,u]=1.
+
+    feature row = incidence row over the universe.  state = remaining
+    (uncovered) weight per universe item.
+    """
+
+    feat_dim: int  # universe size
+    weights: Any = None  # (U,) item weights; default all-ones
+
+    def _w(self):
+        if self.weights is None:
+            return jnp.ones((self.feat_dim,), jnp.float32)
+        return self.weights
+
+    def init_state(self):
+        return self._w()  # remaining weight
+
+    def marginals(self, state, aux):
+        return jnp.sum(state[None, :] * aux, axis=-1)
+
+    def add(self, state, aux_row):
+        return state * (1.0 - aux_row)
+
+    def value(self, state):
+        return jnp.sum(self._w()) - jnp.sum(state)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdversarialThreshold(SubmodularOracle):
+    """The Theorem-4 hard instance, as a closed-form oracle.
+
+    f(S' u O') = sum_{i in S'} v_i + (1 - sum_{i in S'} v_i / (k v*)) |O'| v*.
+
+    feature row = (value v_i, is_opt flag).  state = (sum of S'-values, |O'|).
+    Used to verify the thresholding upper bound 1 - (t/(t+1))^t is *achieved*
+    (i.e. our implementation is exactly as good as the theory allows, no
+    better, no worse).
+    """
+
+    feat_dim: int  # = 2
+    k: int = 1
+    vstar: float = 1.0
+
+    def init_state(self):
+        return (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+
+    def marginals(self, state, aux):
+        sum_s, n_o = state
+        v, is_opt = aux[:, 0], aux[:, 1]
+        gain_s = v * (1.0 - n_o / self.k)
+        gain_o = (1.0 - sum_s / (self.k * self.vstar)) * self.vstar
+        return jnp.where(is_opt > 0.5, gain_o, gain_s)
+
+    def add(self, state, aux_row):
+        sum_s, n_o = state
+        v, is_opt = aux_row[0], aux_row[1]
+        return (sum_s + jnp.where(is_opt > 0.5, 0.0, v),
+                n_o + jnp.where(is_opt > 0.5, 1.0, 0.0))
+
+    def value(self, state):
+        sum_s, n_o = state
+        return sum_s + (1.0 - sum_s / (self.k * self.vstar)) * n_o * self.vstar
+
+
+@dataclasses.dataclass(frozen=True)
+class TPOracle(SubmodularOracle):
+    """Tensor parallelism for the oracle: the wrapped oracle sees a SHARD
+    of the feature dimension (FeatureCoverage/WeightedCoverage: a d/tp
+    feature slice; FacilityLocation: an r/tp client slice) and marginal /
+    value sums are completed with a psum over ``axis``.
+
+    This is the DESIGN.md §2 'model axis splits the embedding dimension of
+    marginal evaluations' optimization: inside the MapReduce drivers the
+    central ThresholdGreedy phase runs replicated across the model axis, so
+    without this the model axis is idle — with it, every marginals pass
+    does 1/tp of the elementwise work and one (C,)-sized psum."""
+
+    base: Any = None
+    axis: str = "model"
+
+    @property
+    def feat_dim(self):  # local shard width
+        return self.base.feat_dim
+
+    def init_state(self):
+        return self.base.init_state()
+
+    def prep(self, state, cand_feats):
+        return self.base.prep(state, cand_feats)
+
+    def marginals(self, state, aux):
+        return jax.lax.psum(self.base.marginals(state, aux), self.axis)
+
+    def add(self, state, aux_row):
+        return self.base.add(state, aux_row)
+
+    def value(self, state):
+        return jax.lax.psum(self.base.value(state), self.axis)
+
+
+def make_adversarial_instance(k: int, thresholds, vstar: float = 1.0,
+                              margin: float = 2e-3):
+    """Element features for the Theorem-4 instance against a given threshold
+    schedule alpha_1 >= ... >= alpha_t (normalized so OPT = k * vstar).
+
+    n_l = (alpha_{l-1}/alpha_l - 1) k elements of value alpha_l, plus the k
+    optimal elements of value vstar.
+
+    The proof lets the adversary break marginal ties against the algorithm;
+    with floating point and a `>= tau` accept rule, exact ties go *for* the
+    algorithm instead.  ``margin`` realizes the adversary's tie-breaking:
+    decoy values are alpha_l (1 + margin) while the intended run thresholds
+    are alpha_l (1 + margin/2) (see ``adversarial_schedule``), so decoys
+    qualify and optimal elements' marginals land strictly below threshold
+    exactly as in the proof.
+
+    Returns (features (n, 2), opt_value).
+    """
+    import numpy as np
+
+    alphas = [vstar] + list(thresholds)
+    rows = []
+    for lo, hi in zip(alphas[1:], alphas[:-1]):
+        n_l = int(round((hi / lo - 1.0) * k))
+        rows += [[lo * (1.0 + margin), 0.0]] * n_l
+    rows += [[vstar, 1.0]] * k
+    feats = np.asarray(rows, np.float32)
+    return jnp.asarray(feats), float(k * vstar)
+
+
+def adversarial_schedule(thresholds, margin: float = 2e-3):
+    """Run thresholds matching ``make_adversarial_instance``'s margin."""
+    return [a * (1.0 + margin / 2.0) for a in thresholds]

@@ -1,0 +1,555 @@
+"""The paper's MapReduce algorithms (Algorithms 3–7, Theorem 8), on JAX.
+
+Two execution substrates share the same per-round local functions:
+
+* **sim** drivers — the m machines are a leading vmap axis on one device.
+  This is a faithful executable model of MRC (used by tests/benchmarks to
+  measure approximation ratios, round counts and message volumes without
+  needing a multi-device runtime).
+* **mesh** drivers — the m machines are the (pod×)data axes of a real device
+  mesh; each round's "send to central machine" is a `lax.all_gather`, and the
+  central phase runs redundantly-replicated on every device (see DESIGN.md §2
+  for why that is the right TPU adaptation).
+
+Static-shape discipline: every MRC message becomes a fixed-capacity packed
+buffer (`threshold.pack_by_mask`) with a validity mask + overflow counter.
+Capacities default to the paper's whp bounds (Lemma 2 / Lemma 6) with a
+safety factor; overflows are *reported*, so a capacity bust is an observable
+event rather than silent corruption.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.rounds import RoundLog, buffer_bytes
+from repro.core.threshold import (exclude_ids, pack_by_mask, threshold_filter,
+                                  threshold_greedy)
+
+
+class SelectionResult(NamedTuple):
+    sol_ids: jax.Array        # (k,) int32 global element ids, -1 padded
+    sol_size: jax.Array       # () int32
+    value: jax.Array          # () f(S)
+    n_dropped: jax.Array      # () int32 — total buffer overflow (0 whp)
+
+
+@dataclasses.dataclass(frozen=True)
+class MRConfig:
+    """Capacities & knobs. Defaults follow the paper's memory bounds."""
+    k: int
+    n_total: int
+    n_machines: int
+    eps: float = 0.15
+    sample_cap: Optional[int] = None      # per machine
+    survivor_cap: Optional[int] = None    # per machine
+    top_cap: Optional[int] = None         # per machine, Algorithm 7
+    n_grid: Optional[int] = None          # unknown-OPT threshold grid size
+    accept: str = "first"                 # "first" = Algorithm-1-faithful
+
+    @property
+    def sample_p(self) -> float:
+        return min(1.0, 4.0 * math.sqrt(self.k / self.n_total))
+
+    @property
+    def n_local(self) -> int:
+        return self.n_total // self.n_machines
+
+    def caps(self) -> Tuple[int, int, int]:
+        n_loc = self.n_local
+        exp_sample = self.sample_p * n_loc
+        s_cap = self.sample_cap or min(n_loc, int(3 * exp_sample) + 16)
+        exp_surv = math.sqrt(self.n_total * self.k) / self.n_machines
+        f_cap = self.survivor_cap or min(n_loc, int(4 * exp_surv) + self.k + 16)
+        t_cap = self.top_cap or min(n_loc, 2 * self.k + 16)
+        return s_cap, f_cap, t_cap
+
+    def grid_size(self) -> int:
+        # one tau_j within (1+eps) of OPT/2k needs ~log_{1+eps}(k) points
+        return self.n_grid or max(4, int(math.ceil(
+            math.log(max(2 * self.k, 4)) / math.log1p(self.eps))) + 2)
+
+
+def _empty_solution(oracle, k):
+    return (oracle.init_state(),
+            jnp.full((k,), -1, jnp.int32),
+            jnp.zeros((), jnp.int32))
+
+
+def _greedy(oracle, st, sol, size, feats, ids, valid, tau, k, accept):
+    valid = exclude_ids(ids, valid & (ids >= 0), sol)
+    return threshold_greedy(oracle, st, sol, size, feats, ids, valid, tau, k,
+                            accept=accept)
+
+
+# ---------------------------------------------------------------------------
+# shared local-round pieces (used by both substrates)
+# ---------------------------------------------------------------------------
+
+def _local_sample(oracle, key, feats, ids, valid, p, cap):
+    """Algorithm 3 local half: Bernoulli(p) sample, packed."""
+    mask = (jax.random.uniform(key, ids.shape) < p) & valid
+    return pack_by_mask(feats, ids, mask, cap)
+
+
+def _local_filter(oracle, st, sol, feats, ids, valid, tau, cap, size=None,
+                  k=None):
+    """Algorithm 2 local half: survivors of ThresholdFilter, packed.
+
+    Lemma 2's escape hatch: if the partial greedy solution already has k
+    elements, the algorithm is done and the machines send *nothing* to the
+    central machine ("In that case, we are done and do not send anything").
+    Without this, low thresholds in the unknown-OPT grid overflow their
+    whp-sized survivor buffers."""
+    v = exclude_ids(ids, valid, sol)
+    mask = threshold_filter(oracle, st, feats, v, tau)
+    if size is not None and k is not None:
+        mask = mask & (size < k)
+    return pack_by_mask(feats, ids, mask, cap)
+
+
+def _local_top(oracle, feats, ids, valid, cap):
+    """Algorithm 7 local half: top-`cap` elements by singleton value.
+
+    Truncation to the O(k) largest is the algorithm's *intended* behaviour
+    ("send the O(k) largest elements on each machine"), not a buffer
+    overflow — so n_dropped is reported as 0 here.  The sparse-path
+    guarantee (Lemma 7) rests on the balls-and-bins argument that all
+    globally-large elements survive this cut whp."""
+    st0 = oracle.init_state()
+    gains = oracle.marginals(st0, oracle.prep(st0, feats))
+    f, i, v, _ = pack_by_mask(feats, ids, valid, cap, priority=gains)
+    return f, i, v, jnp.zeros((), jnp.int32)
+
+
+def _tau_grid(oracle, cfg, s_feats, s_ids, s_valid):
+    """Threshold guesses tau_j = (v/2k)(1+eps)^j from the sampled max
+    singleton v (the 'dense' estimate; v in [OPT/2k, OPT] whp)."""
+    st0 = oracle.init_state()
+    singles = oracle.marginals(st0, oracle.prep(st0, s_feats))
+    v = jnp.max(jnp.where(s_valid, singles, 0.0))
+    j = jnp.arange(cfg.grid_size(), dtype=jnp.float32)
+    return (v / (2.0 * cfg.k)) * (1.0 + cfg.eps) ** j
+
+
+# ---------------------------------------------------------------------------
+# sim drivers — machines as a vmap axis (executable MRC model)
+# ---------------------------------------------------------------------------
+
+def two_round_known_opt_sim(oracle, feats_mk, ids_mk, valid_mk, opt, cfg: MRConfig,
+                            key) -> Tuple[SelectionResult, RoundLog]:
+    """Algorithm 4: 2 rounds, 1/2-approx, OPT known."""
+    m, n_loc, d = feats_mk.shape
+    k, tau = cfg.k, opt / (2.0 * cfg.k)
+    s_cap, f_cap, _ = cfg.caps()
+    log = RoundLog()
+
+    keys = jax.random.split(key, m)
+    sf, si, sv, sdrop = jax.vmap(
+        lambda ky, f, i, v: _local_sample(oracle, ky, f, i, v, cfg.sample_p, s_cap)
+    )(keys, feats_mk, ids_mk, valid_mk)
+    S = (sf.reshape(m * s_cap, d), si.reshape(-1), sv.reshape(-1))
+    log.add("gather-sample", buffer_bytes(s_cap, d),
+            buffer_bytes(m * s_cap, d), f"|S|cap={m*s_cap} p={cfg.sample_p:.4f}")
+
+    st, sol, size = _empty_solution(oracle, k)
+    st, sol, size = _greedy(oracle, st, sol, size, *S, tau, k, cfg.accept)
+
+    rf, ri, rv, rdrop = jax.vmap(
+        lambda f, i, v: _local_filter(oracle, st, sol, f, i, v, tau, f_cap,
+                                      size, k)
+    )(feats_mk, ids_mk, valid_mk)
+    R = (rf.reshape(m * f_cap, d), ri.reshape(-1), rv.reshape(-1))
+    log.add("gather-survivors", buffer_bytes(f_cap, d),
+            buffer_bytes(m * f_cap, d), f"|R|cap={m*f_cap} tau={float(tau):.4g}")
+
+    st, sol, size = _greedy(oracle, st, sol, size, *R, tau, k, cfg.accept)
+    res = SelectionResult(sol, size, oracle.value(st),
+                          jnp.sum(sdrop) + jnp.sum(rdrop))
+    return res, log
+
+
+def dense_two_round_sim(oracle, feats_mk, ids_mk, valid_mk, cfg: MRConfig,
+                        key) -> Tuple[SelectionResult, RoundLog]:
+    """Algorithm 6: 2 rounds, (1/2 - eps)-approx for 'dense' inputs.
+    Runs the Algorithm-4 pipeline for every tau_j in the grid (a vmapped
+    axis — the paper's '1/eps log k parallel copies')."""
+    m, n_loc, d = feats_mk.shape
+    k = cfg.k
+    s_cap, f_cap, _ = cfg.caps()
+    J = cfg.grid_size()
+    log = RoundLog()
+
+    keys = jax.random.split(key, m)
+    sf, si, sv, sdrop = jax.vmap(
+        lambda ky, f, i, v: _local_sample(oracle, ky, f, i, v, cfg.sample_p, s_cap)
+    )(keys, feats_mk, ids_mk, valid_mk)
+    S = (sf.reshape(m * s_cap, d), si.reshape(-1), sv.reshape(-1))
+    log.add("gather-sample", buffer_bytes(s_cap, d), buffer_bytes(m * s_cap, d))
+
+    taus = _tau_grid(oracle, cfg, *S)
+
+    def per_tau_phase1(tau):
+        st, sol, size = _empty_solution(oracle, k)
+        return _greedy(oracle, st, sol, size, *S, tau, k, cfg.accept)
+
+    st_j, sol_j, size_j = jax.vmap(per_tau_phase1)(taus)
+
+    def local_filter_all(f, i, v):
+        return jax.vmap(
+            lambda st, sol, size, tau: _local_filter(oracle, st, sol, f, i, v,
+                                                     tau, f_cap, size, k)
+        )(st_j, sol_j, size_j, taus)
+
+    rf, ri, rv, rdrop = jax.vmap(local_filter_all)(feats_mk, ids_mk, valid_mk)
+    # (m, J, cap, d) -> (J, m*cap, d)
+    rf = rf.transpose(1, 0, 2, 3).reshape(J, m * f_cap, d)
+    ri = ri.transpose(1, 0, 2).reshape(J, m * f_cap)
+    rv = rv.transpose(1, 0, 2).reshape(J, m * f_cap)
+    log.add("gather-survivors", J * buffer_bytes(f_cap, d),
+            J * buffer_bytes(m * f_cap, d), f"grid J={J}")
+
+    def per_tau_phase2(st, sol, size, f, i, v, tau):
+        st, sol, size = _greedy(oracle, st, sol, size, f, i, v, tau, k, cfg.accept)
+        return st, sol, size, oracle.value(st)
+
+    st_j, sol_j, size_j, val_j = jax.vmap(per_tau_phase2)(
+        st_j, sol_j, size_j, rf, ri, rv, taus)
+    best = jnp.argmax(val_j)
+    res = SelectionResult(sol_j[best], size_j[best], val_j[best],
+                          jnp.sum(sdrop) + jnp.sum(rdrop))
+    return res, log
+
+
+def sparse_two_round_sim(oracle, feats_mk, ids_mk, valid_mk, cfg: MRConfig,
+                         key) -> Tuple[SelectionResult, RoundLog]:
+    """Algorithm 7: 2 rounds, (1/2 - eps)-approx for 'sparse' inputs.
+    Each machine ships its O(k) largest singletons to the central machine,
+    which tries the threshold grid sequentially."""
+    m, n_loc, d = feats_mk.shape
+    k = cfg.k
+    _, _, t_cap = cfg.caps()
+    log = RoundLog()
+
+    tf, ti, tv, tdrop = jax.vmap(
+        lambda f, i, v: _local_top(oracle, f, i, v, t_cap)
+    )(feats_mk, ids_mk, valid_mk)
+    L = (tf.reshape(m * t_cap, d), ti.reshape(-1), tv.reshape(-1))
+    log.add("gather-top-singletons", buffer_bytes(t_cap, d),
+            buffer_bytes(m * t_cap, d), f"top {t_cap}/machine")
+
+    taus = _tau_grid(oracle, cfg, *L)
+
+    def per_tau(tau):
+        st, sol, size = _empty_solution(oracle, k)
+        st, sol, size = _greedy(oracle, st, sol, size, *L, tau, k, cfg.accept)
+        return sol, size, oracle.value(st)
+
+    sol_j, size_j, val_j = jax.vmap(per_tau)(taus)
+    log.add("broadcast-result", buffer_bytes(k, 0), buffer_bytes(k, 0),
+            "central solution out")
+    best = jnp.argmax(val_j)
+    res = SelectionResult(sol_j[best], size_j[best], val_j[best], jnp.sum(tdrop))
+    return res, log
+
+
+def two_round_sim(oracle, feats_mk, ids_mk, valid_mk, cfg: MRConfig,
+                  key) -> Tuple[SelectionResult, RoundLog]:
+    """Theorem 8: Algorithms 6 and 7 in parallel (same two rounds), best of
+    the two solutions.  This is the paper's headline (1/2 - eps) result with
+    no knowledge of OPT and no dataset duplication."""
+    kd, ks = jax.random.split(key)
+    dense, log_d = dense_two_round_sim(oracle, feats_mk, ids_mk, valid_mk, cfg, kd)
+    sparse, log_s = sparse_two_round_sim(oracle, feats_mk, ids_mk, valid_mk, cfg, ks)
+    pick_dense = dense.value >= sparse.value
+    res = SelectionResult(
+        jnp.where(pick_dense, dense.sol_ids, sparse.sol_ids),
+        jnp.where(pick_dense, dense.sol_size, sparse.sol_size),
+        jnp.maximum(dense.value, sparse.value),
+        dense.n_dropped + sparse.n_dropped)
+    log = RoundLog()
+    for a, b in zip(log_d.records, log_s.records):
+        log.add(f"{a.name}||{b.name}",
+                a.bytes_per_machine + b.bytes_per_machine,
+                a.bytes_total + b.bytes_total, "dense || sparse")
+    return res, log
+
+
+def multi_threshold_sim(oracle, feats_mk, ids_mk, valid_mk, opt, t: int,
+                        cfg: MRConfig, key, schedule=None
+                        ) -> Tuple[SelectionResult, RoundLog]:
+    """Algorithm 5: 2t rounds, 1 - (1 - 1/(t+1))^t approx, OPT known.
+    Threshold schedule alpha_l = (1 - 1/(t+1))^l OPT/k; each level runs a
+    sample-greedy round then a filter+central-completion round.
+
+    ``schedule`` optionally overrides the thresholds (absolute values,
+    descending) — used by the Theorem-4 adversarial benchmark, which needs
+    control over the boundary between element values and thresholds."""
+    m, n_loc, d = feats_mk.shape
+    k = cfg.k
+    s_cap, f_cap, _ = cfg.caps()
+    log = RoundLog()
+
+    st, sol, size = _empty_solution(oracle, k)
+    drops = jnp.zeros((), jnp.int32)
+    for ell in range(1, t + 1):
+        if schedule is not None:
+            alpha = schedule[ell - 1]
+        else:
+            alpha = (1.0 - 1.0 / (t + 1)) ** ell * opt / k
+        key, ks = jax.random.split(key)
+        keys = jax.random.split(ks, m)
+        sf, si, sv, sdrop = jax.vmap(
+            lambda ky, f, i, v: _local_sample(oracle, ky, f, i, v,
+                                              cfg.sample_p, s_cap)
+        )(keys, feats_mk, ids_mk, valid_mk)
+        S = (sf.reshape(m * s_cap, d), si.reshape(-1), sv.reshape(-1))
+        log.add(f"gather-sample-l{ell}", buffer_bytes(s_cap, d),
+                buffer_bytes(m * s_cap, d), f"alpha={alpha:.4g}")
+        st, sol, size = _greedy(oracle, st, sol, size, *S, alpha, k, cfg.accept)
+
+        rf, ri, rv, rdrop = jax.vmap(
+            lambda f, i, v: _local_filter(oracle, st, sol, f, i, v, alpha, f_cap,
+                                          size, k)
+        )(feats_mk, ids_mk, valid_mk)
+        R = (rf.reshape(m * f_cap, d), ri.reshape(-1), rv.reshape(-1))
+        log.add(f"gather-survivors-l{ell}", buffer_bytes(f_cap, d),
+                buffer_bytes(m * f_cap, d))
+        st, sol, size = _greedy(oracle, st, sol, size, *R, alpha, k, cfg.accept)
+        drops = drops + jnp.sum(sdrop) + jnp.sum(rdrop)
+
+    return SelectionResult(sol, size, oracle.value(st), drops), log
+
+
+# ---------------------------------------------------------------------------
+# mesh drivers — machines as mesh axes (the production path)
+# ---------------------------------------------------------------------------
+
+def _machine_axes_size(mesh: Mesh, axes) -> int:
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def two_round_known_opt_mesh(oracle, cfg: MRConfig, mesh: Mesh,
+                             axes=("data",), data_spec=None):
+    """Algorithm 4 on a device mesh.  Returns a jit-able fn
+    (feats_global, ids_global, key) -> SelectionResult, plus a RoundLog.
+
+    feats_global: (n, d) sharded over `axes` on dim 0.  The two all_gathers
+    inside the shard_map body *are* the two MapReduce rounds.
+    """
+    m = _machine_axes_size(mesh, axes)
+    k = cfg.k
+    s_cap, f_cap, _ = cfg.caps()
+    gather_axes = axes if len(axes) > 1 else axes[0]
+    data_spec = data_spec or P(axes if len(axes) > 1 else axes[0])
+    ids_spec = P(data_spec[0])
+
+    log = RoundLog()
+    log.add("gather-sample", buffer_bytes(s_cap, 0), buffer_bytes(m * s_cap, 0))
+    log.add("gather-survivors", buffer_bytes(f_cap, 0), buffer_bytes(m * f_cap, 0))
+
+    def body(feats, ids, opt, key):
+        d = feats.shape[-1]
+        tau = opt / (2.0 * k)
+        midx = jax.lax.axis_index(gather_axes)
+        ky = jax.random.fold_in(key, midx)
+        valid = ids >= 0
+
+        sf, si, sv, sdrop = _local_sample(oracle, ky, feats, ids, valid,
+                                          cfg.sample_p, s_cap)
+        S = (jax.lax.all_gather(sf, gather_axes, tiled=True),
+             jax.lax.all_gather(si, gather_axes, tiled=True),
+             jax.lax.all_gather(sv, gather_axes, tiled=True))
+
+        st, sol, size = _empty_solution(oracle, k)
+        st, sol, size = _greedy(oracle, st, sol, size, *S, tau, k, cfg.accept)
+
+        rf, ri, rv, rdrop = _local_filter(oracle, st, sol, feats, ids, valid,
+                                          tau, f_cap, size, k)
+        R = (jax.lax.all_gather(rf, gather_axes, tiled=True),
+             jax.lax.all_gather(ri, gather_axes, tiled=True),
+             jax.lax.all_gather(rv, gather_axes, tiled=True))
+
+        st, sol, size = _greedy(oracle, st, sol, size, *R, tau, k, cfg.accept)
+        drops = jax.lax.psum(sdrop + rdrop, gather_axes)
+        return SelectionResult(sol, size, oracle.value(st), drops)
+
+    from jax.experimental.shard_map import shard_map
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(data_spec, ids_spec, P(), P()),
+                   out_specs=P(),
+                   check_rep=False)
+
+    def run(feats_global, ids_global, opt, key):
+        out = fn(feats_global, ids_global, jnp.asarray(opt, jnp.float32), key)
+        return SelectionResult(*out)
+
+    return run, log
+
+
+def two_round_mesh(oracle, cfg: MRConfig, mesh: Mesh,
+                   axes=("data",), data_spec=None):
+    """Theorem 8 on a device mesh: the dense grid (Alg. 6) and sparse
+    top-singletons path (Alg. 7) share the same two all_gather rounds; the
+    best solution over all thresholds/paths wins.  OPT is NOT an input —
+    this is the paper's headline no-duplication 2-round (1/2-eps) result,
+    and the production default of DistributedSelector.
+
+    Returns a jit-able (feats_global, ids_global, key) -> SelectionResult
+    (the ids/opt argument order of the known-OPT driver is kept by
+    accepting and ignoring an `opt` argument when provided via wrapper)."""
+    m = _machine_axes_size(mesh, axes)
+    k = cfg.k
+    s_cap, f_cap, t_cap = cfg.caps()
+    J = cfg.grid_size()
+    gather_axes = axes if len(axes) > 1 else axes[0]
+    data_spec = data_spec or P(axes if len(axes) > 1 else axes[0])
+    ids_spec = P(data_spec[0])
+
+    log = RoundLog()
+    log.add("gather-sample||top", buffer_bytes(s_cap + t_cap, 0),
+            buffer_bytes(m * (s_cap + t_cap), 0), "dense || sparse round 1")
+    log.add("gather-survivors[grid]", J * buffer_bytes(f_cap, 0),
+            J * buffer_bytes(m * f_cap, 0), f"grid J={J}")
+
+    def _gather_packed(x, leading=False):
+        """all_gather a packed buffer; leading=True keeps a (J, ...) axis
+        and concatenates machine buffers on axis 1."""
+        if not leading:
+            return jax.lax.all_gather(x, gather_axes, tiled=True)
+        g = jax.lax.all_gather(x, gather_axes)  # (m, J, cap, ...)
+        g = jnp.moveaxis(g, 0, 1)                # (J, m, cap, ...)
+        return g.reshape((g.shape[0], g.shape[1] * g.shape[2])
+                         + g.shape[3:])
+
+    def body(feats, ids, key):
+        midx = jax.lax.axis_index(gather_axes)
+        ky = jax.random.fold_in(key, midx)
+        valid = ids >= 0
+
+        # ---- round 1: sample (dense) and top singletons (sparse) --------
+        sf, si, sv, sdrop = _local_sample(oracle, ky, feats, ids, valid,
+                                          cfg.sample_p, s_cap)
+        S = tuple(jax.lax.all_gather(x, gather_axes, tiled=True)
+                  for x in (sf, si, sv))
+        tf, ti, tv, _ = _local_top(oracle, feats, ids, valid, t_cap)
+        Ltop = tuple(jax.lax.all_gather(x, gather_axes, tiled=True)
+                     for x in (tf, ti, tv))
+
+        # ---- dense path: per-tau greedy on the replicated sample --------
+        taus = _tau_grid(oracle, cfg, *S)
+
+        def phase1(tau):
+            st, sol, size = _empty_solution(oracle, k)
+            return _greedy(oracle, st, sol, size, *S, tau, k, cfg.accept)
+
+        st_j, sol_j, size_j = jax.vmap(phase1)(taus)
+
+        # ---- round 2: per-tau survivors of the local shard ---------------
+        rf, ri, rv, rdrop = jax.vmap(
+            lambda st, sol, size, tau: _local_filter(
+                oracle, st, sol, feats, ids, valid, tau, f_cap, size, k)
+        )(st_j, sol_j, size_j, taus)
+        Rf = _gather_packed(rf, leading=True)
+        Ri = _gather_packed(ri, leading=True)
+        Rv = _gather_packed(rv, leading=True)
+
+        def phase2(st, sol, size, f, i, v, tau):
+            st, sol, size = _greedy(oracle, st, sol, size, f, i, v, tau, k,
+                                    cfg.accept)
+            return sol, size, oracle.value(st)
+
+        dsol, dsize, dval = jax.vmap(phase2)(st_j, sol_j, size_j,
+                                             Rf, Ri, Rv, taus)
+
+        # ---- sparse path: per-tau greedy on the top singletons ----------
+        taus_s = _tau_grid(oracle, cfg, *Ltop)
+
+        def sparse_tau(tau):
+            st, sol, size = _empty_solution(oracle, k)
+            st, sol, size = _greedy(oracle, st, sol, size, *Ltop, tau, k,
+                                    cfg.accept)
+            return sol, size, oracle.value(st)
+
+        ssol, ssize, sval = jax.vmap(sparse_tau)(taus_s)
+
+        sols = jnp.concatenate([dsol, ssol], axis=0)
+        sizes = jnp.concatenate([dsize, ssize], axis=0)
+        vals = jnp.concatenate([dval, sval], axis=0)
+        best = jnp.argmax(vals)
+        drops = jax.lax.psum(sdrop + jnp.sum(rdrop), gather_axes)
+        return SelectionResult(sols[best], sizes[best], vals[best], drops)
+
+    from jax.experimental.shard_map import shard_map
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(data_spec, ids_spec, P()),
+                   out_specs=P(),
+                   check_rep=False)
+
+    def run(feats_global, ids_global, key):
+        out = fn(feats_global, ids_global, key)
+        return SelectionResult(*out)
+
+    return run, log
+
+
+def multi_threshold_mesh(oracle, cfg: MRConfig, t: int, mesh: Mesh,
+                         axes=("data",), data_spec=None):
+    """Algorithm 5 on a device mesh: 2t all_gather phases in one program."""
+    m = _machine_axes_size(mesh, axes)
+    k = cfg.k
+    s_cap, f_cap, _ = cfg.caps()
+    gather_axes = axes if len(axes) > 1 else axes[0]
+    data_spec = data_spec or P(axes if len(axes) > 1 else axes[0])
+    ids_spec = P(data_spec[0])
+
+    log = RoundLog()
+    for ell in range(1, t + 1):
+        log.add(f"gather-sample-l{ell}", buffer_bytes(s_cap, 0),
+                buffer_bytes(m * s_cap, 0))
+        log.add(f"gather-survivors-l{ell}", buffer_bytes(f_cap, 0),
+                buffer_bytes(m * f_cap, 0))
+
+    def body(feats, ids, opt, key):
+        midx = jax.lax.axis_index(gather_axes)
+        valid = ids >= 0
+        st, sol, size = _empty_solution(oracle, k)
+        drops = jnp.zeros((), jnp.int32)
+        for ell in range(1, t + 1):
+            alpha = (1.0 - 1.0 / (t + 1)) ** ell * opt / k
+            key, ks = jax.random.split(key)
+            ky = jax.random.fold_in(ks, midx)
+            sf, si, sv, sdrop = _local_sample(oracle, ky, feats, ids, valid,
+                                              cfg.sample_p, s_cap)
+            S = tuple(jax.lax.all_gather(x, gather_axes, tiled=True)
+                      for x in (sf, si, sv))
+            st, sol, size = _greedy(oracle, st, sol, size, *S, alpha, k,
+                                    cfg.accept)
+            rf, ri, rv, rdrop = _local_filter(oracle, st, sol, feats, ids,
+                                              valid, alpha, f_cap, size, k)
+            R = tuple(jax.lax.all_gather(x, gather_axes, tiled=True)
+                      for x in (rf, ri, rv))
+            st, sol, size = _greedy(oracle, st, sol, size, *R, alpha, k,
+                                    cfg.accept)
+            drops = drops + sdrop + rdrop
+        drops = jax.lax.psum(drops, gather_axes)
+        return SelectionResult(sol, size, oracle.value(st), drops)
+
+    from jax.experimental.shard_map import shard_map
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(data_spec, ids_spec, P(), P()),
+                   out_specs=P(),
+                   check_rep=False)
+
+    def run(feats_global, ids_global, opt, key):
+        out = fn(feats_global, ids_global, jnp.asarray(opt, jnp.float32), key)
+        return SelectionResult(*out)
+
+    return run, log

@@ -1,0 +1,56 @@
+"""Round & communication accounting for the MapReduce drivers.
+
+The paper's complexity measure is the number of synchronous communication
+rounds (and the per-machine message volume).  On a TPU pod a "round" is a
+collective phase; the drivers in ``mapreduce.py`` construct a RoundLog from
+their *static* buffer shapes, so the claimed "2 rounds" / "2t rounds" and the
+Lemma-2/Lemma-6 memory bounds are checkable quantities, not comments.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundRecord:
+    name: str
+    bytes_per_machine: int   # outgoing message bound per machine
+    bytes_total: int         # total gathered volume (central-machine memory)
+    detail: str = ""
+
+
+@dataclasses.dataclass
+class RoundLog:
+    records: List[RoundRecord] = dataclasses.field(default_factory=list)
+
+    def add(self, name: str, bytes_per_machine: int, bytes_total: int,
+            detail: str = "") -> None:
+        self.records.append(
+            RoundRecord(name, int(bytes_per_machine), int(bytes_total), detail))
+
+    @property
+    def n_rounds(self) -> int:
+        return len(self.records)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(r.bytes_total for r in self.records)
+
+    @property
+    def max_central_bytes(self) -> int:
+        return max((r.bytes_total for r in self.records), default=0)
+
+    def summary(self) -> str:
+        lines = [f"rounds={self.n_rounds} total_gathered={self.total_bytes}B"]
+        for i, r in enumerate(self.records, 1):
+            lines.append(
+                f"  round {i}: {r.name:24s} per-machine<={r.bytes_per_machine}B "
+                f"gathered={r.bytes_total}B {r.detail}")
+        return "\n".join(lines)
+
+
+def buffer_bytes(cap: int, feat_dim: int, itemsize: int = 4) -> int:
+    """Bytes of one packed message buffer: features + ids + validity."""
+    return cap * (feat_dim * itemsize + 4 + 1)

@@ -1,0 +1,122 @@
+"""DistributedSelector — the framework-facing API for the paper's technique.
+
+The data pipeline (repro.data.selection) and the examples talk to this class,
+not to mapreduce.py directly.  It owns: oracle construction from a spec,
+MRConfig derivation from the mesh, algorithm choice, and jit caching.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import functions as F
+from repro.core import mapreduce as mr
+
+
+@dataclasses.dataclass(frozen=True)
+class SelectorSpec:
+    k: int
+    oracle: str = "feature_coverage"   # | facility_location | weighted_coverage
+    algorithm: str = "two_round"       # | multi_threshold | two_round_known_opt
+    t: int = 1                         # thresholds for multi_threshold
+    eps: float = 0.15
+    accept: str = "first"
+    reference_size: int = 256          # facility location client set
+    use_kernel: bool = False
+    oracle_tp: bool = False            # shard the feature dim over "model"
+    #                                    (TPOracle — the central phase's
+    #                                    elementwise work / tp per device)
+
+
+def make_oracle(spec: SelectorSpec, feat_dim: int, reference=None):
+    if spec.oracle == "feature_coverage":
+        return F.FeatureCoverage(feat_dim=feat_dim,
+                                 use_kernel=spec.use_kernel)
+    if spec.oracle == "facility_location":
+        assert reference is not None, "facility_location needs a reference set"
+        return F.FacilityLocation(feat_dim=feat_dim, reference=reference,
+                                  use_kernel=spec.use_kernel)
+    if spec.oracle == "weighted_coverage":
+        return F.WeightedCoverage(feat_dim=feat_dim)
+    raise ValueError(f"unknown oracle {spec.oracle!r}")
+
+
+class DistributedSelector:
+    """Runs the paper's MapReduce selection on a device mesh.
+
+    ``select(embeddings, opt_estimate, key)``: embeddings (n, d) sharded over
+    the machine axes; returns SelectionResult (replicated).  On a 1-device
+    mesh this degenerates gracefully (m=1: the algorithm is sequential
+    threshold greedy — still correct, zero communication).
+    """
+
+    def __init__(self, spec: SelectorSpec, mesh: Mesh, n_total: int,
+                 feat_dim: int, axes=("data",), reference=None):
+        self.spec = spec
+        self.mesh = mesh
+        self.axes = tuple(a for a in axes if a in mesh.shape)
+        m = 1
+        for a in self.axes:
+            m *= mesh.shape[a]
+        self.cfg = mr.MRConfig(k=spec.k, n_total=n_total, n_machines=m,
+                               eps=spec.eps, accept=spec.accept)
+        tp = mesh.shape.get("model", 1)
+        self.tp = (spec.oracle_tp and tp > 1 and feat_dim % tp == 0 and
+                   spec.oracle in ("feature_coverage", "weighted_coverage"))
+        if self.tp:
+            base = make_oracle(spec, feat_dim // tp, reference)
+            self.oracle = F.TPOracle(base=base, axis="model")
+            ax0 = self.axes if len(self.axes) > 1 else self.axes[0]
+            self._data_spec = P(ax0, "model")
+        else:
+            self.oracle = make_oracle(spec, feat_dim, reference)
+            self._data_spec = P(self.axes if len(self.axes) > 1
+                                else self.axes[0])
+        if spec.algorithm == "multi_threshold":
+            self._run, self.round_log = mr.multi_threshold_mesh(
+                self.oracle, self.cfg, spec.t, mesh, self.axes,
+                data_spec=self._data_spec)
+            self._needs_opt = True
+        elif spec.algorithm == "two_round_known_opt":
+            self._run, self.round_log = mr.two_round_known_opt_mesh(
+                self.oracle, self.cfg, mesh, self.axes,
+                data_spec=self._data_spec)
+            self._needs_opt = True
+        else:  # "two_round" = Theorem 8, OPT-free (the production default)
+            self._run, self.round_log = mr.two_round_mesh(
+                self.oracle, self.cfg, mesh, self.axes,
+                data_spec=self._data_spec)
+            self._needs_opt = False
+        self._jitted = None
+
+    def data_sharding(self) -> NamedSharding:
+        return NamedSharding(self.mesh, self._data_spec)
+
+    def select(self, embeddings, opt_estimate=None, key=None
+               ) -> mr.SelectionResult:
+        n = embeddings.shape[0]
+        ids = jnp.arange(n, dtype=jnp.int32)
+        if self._jitted is None:
+            self._jitted = jax.jit(self._run)
+        if self._needs_opt:
+            assert opt_estimate is not None, \
+                f"{self.spec.algorithm} needs an OPT estimate"
+            return self._jitted(embeddings, ids, opt_estimate, key)
+        return self._jitted(embeddings, ids, key)
+
+    def opt_upper_bound(self, embeddings) -> jax.Array:
+        """k * (max singleton value) >= OPT >= max singleton — the standard
+        first-round estimate (paper §2.2: 'an extra initial round').
+        Runs outside shard_map, so always on a full-width oracle."""
+        oracle = self.oracle.base if isinstance(self.oracle, F.TPOracle) \
+            else self.oracle
+        if isinstance(self.oracle, F.TPOracle):
+            oracle = make_oracle(self.spec, embeddings.shape[-1], None)
+        st0 = oracle.init_state()
+        singles = oracle.marginals(st0, oracle.prep(st0, embeddings))
+        return jnp.max(singles) * self.spec.k

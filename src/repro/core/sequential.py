@@ -1,0 +1,74 @@
+"""Single-machine baselines: classic greedy (Nemhauser–Wolsey–Fisher 1-1/e),
+sequential threshold greedy, and exact brute force for tiny instances.
+
+These anchor the benchmarks: the MapReduce algorithms' measured ratios are
+reported against (a) brute-force OPT when n is tiny and (b) the sequential
+greedy value (itself >= (1-1/e) OPT) at scale.
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def greedy(oracle, feats, valid, k: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Classic greedy: k batched argmax steps.  Returns (ids, size, value)."""
+    n = feats.shape[0]
+    st = oracle.init_state()
+    aux = oracle.prep(st, feats)
+    sol = jnp.full((k,), -1, jnp.int32)
+
+    def body(i, carry):
+        st, sol, taken = carry
+        gains = oracle.marginals(st, aux)
+        gains = jnp.where(valid & ~taken, gains, -jnp.inf)
+        best = jnp.argmax(gains)
+        ok = gains[best] > 0.0
+        aux_row = jax.tree.map(lambda a: a[best], aux)
+        new_st = oracle.add(st, aux_row)
+        st = jax.tree.map(lambda a, b: jnp.where(ok, a, b), new_st, st)
+        sol = jnp.where(ok, sol.at[i].set(best.astype(jnp.int32)), sol)
+        taken = taken.at[best].set(taken[best] | ok)
+        return st, sol, taken
+
+    st, sol, _ = jax.lax.fori_loop(0, k, body, (st, sol, jnp.zeros((n,), bool)))
+    return sol, jnp.sum(sol >= 0), oracle.value(st)
+
+
+def threshold_sequential(oracle, feats, valid, k: int, tau) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-machine ThresholdGreedy over the whole ground set (the paper's
+    Algorithm 1 run centrally) — used as the 'sequential version of
+    Algorithm 4' inside the sparse path, and as a test oracle."""
+    from repro.core.threshold import threshold_greedy
+    n = feats.shape[0]
+    st = oracle.init_state()
+    sol = jnp.full((k,), -1, jnp.int32)
+    ids = jnp.arange(n, dtype=jnp.int32)
+    st, sol, size = threshold_greedy(oracle, st, sol, jnp.zeros((), jnp.int32),
+                                     feats, ids, valid, tau, k)
+    return sol, size, oracle.value(st)
+
+
+def brute_force(oracle, feats_np: np.ndarray, k: int) -> Tuple[tuple, float]:
+    """Exact OPT by enumeration — only for tiny (n choose k)."""
+    n = feats_np.shape[0]
+    feats = jnp.asarray(feats_np)
+
+    def value_of(subset):
+        st = oracle.init_state()
+        aux = oracle.prep(st, feats[np.asarray(subset)])
+        for i in range(len(subset)):
+            st = oracle.add(st, jax.tree.map(lambda a: a[i], aux))
+        return float(oracle.value(st))
+
+    best, best_v = (), -1.0
+    for subset in itertools.combinations(range(n), min(k, n)):
+        v = value_of(subset)
+        if v > best_v:
+            best, best_v = subset, v
+    return best, best_v

@@ -1,0 +1,135 @@
+"""Algorithm 1 (ThresholdGreedy) and Algorithm 2 (ThresholdFilter).
+
+Paper-faithful semantics with TPU-shaped execution:
+
+* The paper streams elements one at a time and accepts any element whose
+  marginal is >= tau.  Sequential rank-1 oracle calls are hostile to a
+  vector machine, so each iteration here scores the *whole* candidate block
+  with one batched ``marginals`` call and then accepts per ``accept``:
+
+    - ``"first"`` (default, Algorithm-1-faithful): the earliest element in
+      the fixed stream order whose fresh marginal is >= tau.  Because all
+      marginals are recomputed against the current solution, the accepted
+      sequence is exactly what the paper's sequential loop would accept.
+    - ``"best"``: argmax above tau (beyond-paper; never worse — see
+      EXPERIMENTS.md §Perf).
+
+  Either rule preserves the two facts the proofs use: every accepted marginal
+  is >= tau, and on exit (with |G| < k) no candidate has marginal >= tau.
+
+* Everything is fixed-shape: candidate blocks carry a validity mask, the
+  solution is a fixed (k,) id buffer with a size counter.  ThresholdGreedy is
+  a ``lax.while_loop`` bounded by k accepts.
+
+All functions are pure and jit/shard_map friendly; determinism across
+machines (the paper needs G_0 identical everywhere) is inherited from
+replicated inputs + deterministic reductions.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+NEG = -jnp.inf
+
+
+class GreedyState(NamedTuple):
+    oracle_state: object
+    sol_ids: jax.Array      # (k,) int32, -1 padded
+    sol_size: jax.Array     # () int32
+    taken: jax.Array        # (C,) bool — candidates already taken this call
+    done: jax.Array         # () bool
+
+
+def threshold_greedy(oracle, oracle_state, sol_ids, sol_size, cand_feats,
+                     cand_ids, cand_valid, tau, k: int, accept: str = "first"):
+    """Algorithm 1.  Extends (sol_ids, sol_size, oracle_state) greedily with
+    candidates whose marginal w.r.t. the current solution is >= tau, until
+    |G| = k or no candidate qualifies.
+
+    cand_feats: (C, feat_dim); cand_ids: (C,) int32; cand_valid: (C,) bool.
+    Returns (oracle_state, sol_ids, sol_size).
+    """
+    aux = oracle.prep(oracle_state, cand_feats)
+    C = cand_feats.shape[0]
+    order = jnp.arange(C, dtype=jnp.int32)
+
+    def pick(gains, eligible):
+        ok = eligible & (gains >= tau)
+        if accept == "first":
+            key = jnp.where(ok, order, C)
+            idx = jnp.argmin(key)
+        else:
+            key = jnp.where(ok, gains, NEG)
+            idx = jnp.argmax(key)
+        return idx, jnp.any(ok)
+
+    def body(st: GreedyState) -> GreedyState:
+        gains = oracle.marginals(st.oracle_state, aux)
+        eligible = cand_valid & ~st.taken
+        idx, any_ok = pick(gains, eligible)
+        accept_now = any_ok & (st.sol_size < k)
+        aux_row = jax.tree.map(lambda a: a[idx], aux)
+        new_state = oracle.add(st.oracle_state, aux_row)
+        oracle_state = jax.tree.map(
+            lambda new, old: jnp.where(accept_now, new, old),
+            new_state, st.oracle_state)
+        sol_ids = jnp.where(
+            accept_now,
+            st.sol_ids.at[jnp.minimum(st.sol_size, k - 1)].set(cand_ids[idx]),
+            st.sol_ids)
+        sol_size = st.sol_size + jnp.where(accept_now, 1, 0)
+        taken = st.taken.at[idx].set(st.taken[idx] | accept_now)
+        return GreedyState(oracle_state, sol_ids, sol_size, taken,
+                           done=~accept_now)
+
+    def cond(st: GreedyState):
+        return (~st.done) & (st.sol_size < k)
+
+    init = GreedyState(oracle_state, sol_ids, sol_size,
+                       taken=jnp.zeros((C,), bool),
+                       done=jnp.asarray(False))
+    out = jax.lax.while_loop(cond, body, init)
+    return out.oracle_state, out.sol_ids, out.sol_size
+
+
+def threshold_filter(oracle, oracle_state, cand_feats, cand_valid, tau):
+    """Algorithm 2.  One batched oracle call: keep candidates whose marginal
+    w.r.t. the current solution is >= tau.  Returns the survivor mask."""
+    aux = oracle.prep(oracle_state, cand_feats)
+    gains = oracle.marginals(oracle_state, aux)
+    return cand_valid & (gains >= tau)
+
+
+def exclude_ids(cand_ids, cand_valid, sol_ids):
+    """Mask out candidates already selected (by global id)."""
+    hit = jnp.any(cand_ids[:, None] == sol_ids[None, :], axis=-1)
+    return cand_valid & ~hit
+
+
+@partial(jax.jit, static_argnums=(3,))
+def pack_by_mask(feats, ids, mask, cap: int, priority=None):
+    """Compress masked rows into a fixed-capacity buffer.
+
+    MRC messages are variable-size; XLA buffers are not.  This is the bridge:
+    take (up to) ``cap`` masked rows — in stream order, or by descending
+    ``priority`` if given (the "O(k) largest elements" of Algorithm 7) — and
+    report the overflow count so the paper's whp bounds become runtime checks.
+
+    Returns (feats (cap, d), ids (cap,), valid (cap,), n_dropped ()).
+    """
+    n = ids.shape[0]
+    if priority is None:
+        key = jnp.where(mask, jnp.arange(n, dtype=jnp.float32), jnp.inf)
+        take = jnp.argsort(key)[:cap]
+    else:
+        key = jnp.where(mask, priority, -jnp.inf)
+        take = jnp.argsort(-key)[:cap]
+    valid_sorted = mask[take]
+    count = jnp.sum(mask)
+    n_dropped = jnp.maximum(count - cap, 0)
+    return feats[take], jnp.where(valid_sorted, ids[take], -1), valid_sorted, n_dropped

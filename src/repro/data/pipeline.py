@@ -1,0 +1,85 @@
+"""Deterministic synthetic data pipeline, sharded over the batch axes.
+
+The pipeline is seeded and cursor-addressable: ``batch_at(step)`` is a pure
+function of (seed, step), which is what makes checkpoint/restart exact — the
+checkpoint stores only the cursor, and an elastic resize re-slices the same
+global stream.  Documents get zipf-ish token statistics so selection/dedup
+actually has structure to exploit."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.sharding import ShardingPolicy
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    global_batch: int = 8
+    seq_len: int = 128
+    # selection stage (the paper's technique in the input path)
+    select_every: int = 0          # 0 = off; else re-select pool each N steps
+    pool_factor: int = 4           # candidate pool = pool_factor * batch
+
+
+class SyntheticLM:
+    """Zipf-ish token stream; labels are next-token shifted."""
+
+    def __init__(self, cfg: ArchConfig, data: DataConfig):
+        self.cfg, self.data = cfg, data
+
+    def _tokens(self, key, b, s):
+        v = self.cfg.vocab_size
+        # mixture: zipf body + doc-specific "topic" tokens (structure for
+        # the selection oracle to find)
+        k1, k2, k3 = jax.random.split(key, 3)
+        u = jax.random.uniform(k1, (b, s))
+        body = (v * u ** 3).astype(jnp.int32)  # skewed to low ids
+        topic = jax.random.randint(k2, (b, 1), 0, v)
+        is_topic = jax.random.uniform(k3, (b, s)) < 0.2
+        return jnp.where(is_topic, topic, jnp.clip(body, 0, v - 1))
+
+    def batch_at(self, step: int) -> Dict[str, jax.Array]:
+        cfg, d = self.cfg, self.data
+        key = jax.random.fold_in(jax.random.PRNGKey(d.seed), step)
+        B, S = d.global_batch, d.seq_len
+        if cfg.family == "vlm":
+            s_txt = S - cfg.num_image_tokens
+            toks = self._tokens(key, B, s_txt + 1)
+            return {"tokens": toks[:, :-1],
+                    "image_embeds": jax.random.normal(
+                        jax.random.fold_in(key, 1),
+                        (B, cfg.num_image_tokens, cfg.d_model),
+                        jnp.bfloat16) * 0.02,
+                    "labels": toks[:, 1:]}
+        if cfg.frontend_stub:
+            frames = jax.random.normal(key, (B, S, cfg.d_model),
+                                       jnp.bfloat16)
+            labels = jax.random.randint(jax.random.fold_in(key, 1),
+                                        (B, S), 0, cfg.vocab_size)
+            return {"frames": frames, "labels": labels}
+        toks = self._tokens(key, B, S + 1)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    def place(self, batch, policy: ShardingPolicy):
+        return {k: jax.device_put(v, policy.sharding(
+            policy.batch_first(v.shape))) for k, v in batch.items()}
+
+
+def doc_embeddings(batch, dim: int = 64) -> jax.Array:
+    """Cheap per-document embeddings for the selection oracle: token-hash
+    histogram features (nonneg, so FeatureCoverage applies directly)."""
+    toks = batch["tokens"] if "tokens" in batch else None
+    if toks is None:
+        x = batch["frames"].astype(jnp.float32)
+        return jnp.abs(x.mean(axis=1))[:, :dim]
+    h = (toks.astype(jnp.uint32) * jnp.uint32(2654435761)
+         % jnp.uint32(dim)).astype(jnp.int32)
+    onehot = jax.nn.one_hot(h, dim, dtype=jnp.float32)
+    return onehot.mean(axis=1)  # (B, dim) histogram

@@ -1,0 +1,56 @@
+"""The paper's technique in the input path: submodular batch curation.
+
+Every ``select_every`` steps, a candidate pool of ``pool_factor * batch``
+documents is drawn, embedded (`doc_embeddings`), and the MapReduce selector
+picks the most diverse/covering ``batch`` of them — 2 communication rounds on
+the training mesh itself, no dataset duplication (the paper's headline
+regime).  MoE archs can alternatively select for *expert balance* by using
+router-assignment histograms as the coverage features."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.selector import DistributedSelector, SelectorSpec
+from repro.data.pipeline import DataConfig, SyntheticLM, doc_embeddings
+from repro.models.sharding import ShardingPolicy
+
+
+class SelectionPipeline:
+    """Wraps SyntheticLM with paper-powered batch curation."""
+
+    def __init__(self, base: SyntheticLM, policy: ShardingPolicy,
+                 emb_dim: int = 64, oracle: str = "feature_coverage"):
+        self.base = base
+        self.policy = policy
+        self.emb_dim = emb_dim
+        d = base.data
+        self.pool = d.pool_factor * d.global_batch
+        spec = SelectorSpec(k=d.global_batch, oracle=oracle,
+                            algorithm="two_round", oracle_tp=True)
+        self.selector = DistributedSelector(
+            spec, policy.mesh, n_total=self.pool, feat_dim=emb_dim,
+            axes=("pod", "data"))
+        self._last_sel = None
+
+    def batch_at(self, step: int):
+        d = self.base.data
+        if not d.select_every or step % d.select_every:
+            return self.base.batch_at(step)
+        # draw pool_factor candidate batches, embed, select k=batch docs
+        pools = [self.base.batch_at(step * d.pool_factor + i + 10_000)
+                 for i in range(d.pool_factor)]
+        cat = {k: jnp.concatenate([p[k] for p in pools], axis=0)
+               for k in pools[0]}
+        emb = doc_embeddings(cat, self.emb_dim)
+        opt_est = self.selector.opt_upper_bound(emb)
+        res = self.selector.select(
+            emb, opt_est, jax.random.fold_in(
+                jax.random.PRNGKey(d.seed + 77), step))
+        idx = jnp.where(res.sol_ids >= 0, res.sol_ids, 0)
+        self._last_sel = res
+        return {k: v[idx] for k, v in cat.items()}

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the oracle hot spot (facility-location marginals).
+
+facility_marginals.py — pl.pallas_call + BlockSpec implementations
+ops.py               — jit'd public wrappers (backend dispatch)
+ref.py               — pure-jnp oracles the tests sweep against
+"""

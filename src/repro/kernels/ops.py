@@ -1,0 +1,51 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+Backend dispatch: on TPU the kernels compile natively; everywhere else
+(this container is CPU) they run under ``interpret=True``, which executes
+the kernel body in Python with identical semantics — that is how the
+shape/dtype sweep tests validate them against ref.py.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import coverage_marginals as _cm
+from repro.kernels import facility_marginals as _fm
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def facility_marginals(cand, ref, state, *, block_c=None, block_r=None):
+    """Fused (C,d)x(r,d)->(C,) facility-location marginals."""
+    kw = {}
+    if block_c:
+        kw["block_c"] = block_c
+    if block_r:
+        kw["block_r"] = block_r
+    return _fm.facility_marginals(cand, ref, state,
+                                  interpret=_interpret(), **kw)
+
+
+def rectified_residual_sum(aux, state, *, block_c=None, block_r=None):
+    """Unfused (C,r)->(C,) rectified residual reduction."""
+    kw = {}
+    if block_c:
+        kw["block_c"] = block_c
+    if block_r:
+        kw["block_r"] = block_r
+    return _fm.rectified_residual_sum(aux, state,
+                                      interpret=_interpret(), **kw)
+
+
+def coverage_marginals(x, state, weights=None, *, block_c=None, block_f=None):
+    """Fused (C,d),(d,)->(C,) FeatureCoverage marginals."""
+    kw = {}
+    if block_c:
+        kw["block_c"] = block_c
+    if block_f:
+        kw["block_f"] = block_f
+    return _cm.coverage_marginals(x, state, weights,
+                                  interpret=_interpret(), **kw)

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics; the kernels must match them to float tolerance
+(tests/test_kernels.py sweeps shapes and dtypes against these).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rectified_residual_sum(aux, state):
+    """(C, r), (r,) -> (C,): sum_j max(aux[i, j] - state[j], 0).
+
+    The facility-location marginal given precomputed similarities `aux`
+    and the current cover vector `state`.
+    """
+    return jnp.sum(jnp.maximum(aux - state[None, :], 0.0), axis=-1) \
+        .astype(jnp.float32)
+
+
+def facility_marginals(cand, ref, state):
+    """(C, d), (r, d), (r,) -> (C,): fused matmul + rectified residual.
+
+    gains[i] = sum_j max(<cand_i, ref_j>_+ - state[j], 0)
+
+    Note the inner rectification max(sims, 0) (FacilityLocation.prep keeps
+    similarities nonnegative for monotonicity) happens BEFORE the residual:
+    since state >= 0 always (it starts at 0 and only maxes with nonneg
+    rows), max(max(s,0) - st, 0) == max(s - st, 0) for st >= 0 ... only when
+    s <= 0 => both 0.  So a single rectified residual suffices; we keep the
+    explicit form here for clarity.
+    """
+    sims = jnp.maximum(cand.astype(jnp.float32) @ ref.astype(jnp.float32).T,
+                       0.0)
+    return jnp.sum(jnp.maximum(sims - state[None, :], 0.0), axis=-1)
+
+
+def threshold_filter_mask(cand, ref, state, tau):
+    """Survivor mask of Algorithm 2 for facility location, fused end-to-end."""
+    return facility_marginals(cand, ref, state) >= tau
+
+
+def coverage_marginals(x, state, weights=None):
+    """(C, d), (d,)[, (d,)] -> (C,): FeatureCoverage marginal gains.
+
+    gains[i] = sum_f w_f (sqrt(state_f + x_{i,f}) - sqrt(state_f)).
+    """
+    g = jnp.sqrt(state[None, :] + x.astype(jnp.float32)) - \
+        jnp.sqrt(state[None, :])
+    if weights is not None:
+        g = g * weights[None, :]
+    return jnp.sum(g, axis=-1).astype(jnp.float32)

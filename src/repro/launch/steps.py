@@ -1,0 +1,187 @@
+"""Step builders shared by train.py / serve.py / dryrun.py.
+
+Each builder returns ``(step_fn, abstract_args, in_shardings,
+out_shardings, donate)`` so the dry-run can ``jit(...).lower(*abstract)``
+and the real launchers can call the same jitted function with concrete
+arrays — one definition of the computation for both paths.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SHAPES, ShapeSpec
+from repro.models.model import Model, build_model
+from repro.models.sharding import ShardingPolicy, make_policy
+from repro.optim import adamw
+
+
+@dataclasses.dataclass(frozen=True)
+class StepBundle:
+    fn: Any
+    abstract_args: Tuple
+    in_shardings: Tuple
+    out_shardings: Any
+    donate: Tuple[int, ...]
+    policy: ShardingPolicy
+
+
+def _abstract_opt_state(params_abs):
+    zeros = lambda t: jax.ShapeDtypeStruct(t.shape, jnp.float32)
+    return adamw.OptState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                          m=jax.tree.map(zeros, params_abs),
+                          v=jax.tree.map(zeros, params_abs))
+
+
+def _opt_shardings(param_sh):
+    """Moments inherit the param shardings (ZeRO-1 falls out of FSDP)."""
+    rep = jax.tree.leaves(param_sh)[0].spec  # noqa: F841  (doc only)
+    first = jax.tree.leaves(param_sh)[0]
+    scalar = jax.sharding.NamedSharding(first.mesh,
+                                        jax.sharding.PartitionSpec())
+    return adamw.OptState(step=scalar, m=param_sh, v=param_sh)
+
+
+def train_step_bundle(cfg: ArchConfig, shape: ShapeSpec, mesh,
+                      opt_cfg: adamw.AdamWConfig = None) -> StepBundle:
+    """Full production train step: fwd + bwd + clip + AdamW update."""
+    model = build_model(cfg)
+    A = max(1, cfg.microbatches)
+    # the policy sees the MICRObatch: batch axes must divide B/A
+    policy = make_policy(mesh, shape.global_batch // A, "train",
+                         head_fsdp=cfg.head_fsdp,
+                         pure_fsdp=cfg.parallelism == "fsdp")
+    opt_cfg = opt_cfg or adamw.AdamWConfig()
+
+    def train_step(params, opt_state, batch):
+        def grad_of(b):
+            def loss_of(p):
+                return model.loss(p, b, policy)
+            return jax.value_and_grad(loss_of, has_aux=True)(params)
+
+        if A == 1:
+            (loss, metrics), grads = grad_of(batch)
+        else:
+            # gradient accumulation: scan microbatch slices, grads
+            # accumulate in the (ZeRO-sharded) f32 carry — activation
+            # memory scales with B/A instead of B.
+            def resh(t):
+                return t.reshape((A, t.shape[0] // A) + t.shape[1:])
+            mb = {k: resh(v) for k, v in batch.items()}
+
+            def body(carry, b):
+                g_acc, l_acc, m_acc = carry
+                (l, m), g = grad_of(b)
+                g_acc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), g_acc, g)
+                m_acc = jax.tree.map(lambda a, x: a + x, m_acc, m)
+                return (g_acc, l_acc + l, m_acc), None
+
+            g0 = jax.tree.map(
+                lambda t: jnp.zeros(t.shape, jnp.float32), params)
+            (loss_abs, m_abs), _ = jax.eval_shape(
+                grad_of, {k: jax.ShapeDtypeStruct(v.shape[1:], v.dtype)
+                          for k, v in mb.items()})
+            m0 = jax.tree.map(
+                lambda s: jnp.zeros(s.shape, s.dtype), m_abs)
+            (grads, loss, metrics), _ = jax.lax.scan(
+                body, (g0, jnp.zeros((), jnp.float32), m0), mb)
+            grads = jax.tree.map(lambda g: g / A, grads)
+            loss = loss / A
+            metrics = jax.tree.map(lambda m: m / A, metrics)
+
+        new_params, new_opt, om = adamw.update(opt_cfg, params, grads,
+                                               opt_state)
+        metrics = dict(metrics, loss=loss, **om)
+        return new_params, new_opt, metrics
+
+    params_abs = model.abstract_params()
+    opt_abs = _abstract_opt_state(params_abs)
+    batch_abs = model.input_specs(shape)
+
+    param_sh = policy.param_shardings(params_abs)
+    opt_sh = _opt_shardings(param_sh)
+    batch_sh = policy.batch_shardings(batch_abs)
+    rep = policy.replicated()
+    metrics_sh = {k: rep for k in
+                  ("ce", "aux", "loss", "lr", "grad_norm")}
+
+    return StepBundle(
+        fn=train_step,
+        abstract_args=(params_abs, opt_abs, batch_abs),
+        in_shardings=(param_sh, opt_sh, batch_sh),
+        out_shardings=(param_sh, opt_sh, metrics_sh),
+        donate=(0, 1),
+        policy=policy)
+
+
+def prefill_bundle(cfg: ArchConfig, shape: ShapeSpec, mesh) -> StepBundle:
+    """Serving prefill: full sequence in, last-token logits + caches out."""
+    model = build_model(cfg)
+    policy = make_policy(mesh, shape.global_batch, "prefill",
+                         head_fsdp=cfg.head_fsdp,
+                         pure_fsdp=cfg.parallelism == "fsdp")
+
+    def prefill(params, batch):
+        return model.prefill(params, batch, policy, cache_len=shape.seq_len)
+
+    params_abs = model.abstract_params()
+    batch_abs = model.input_specs(shape)
+    param_sh = policy.param_shardings(params_abs)
+    batch_sh = policy.batch_shardings(batch_abs)
+
+    caches_abs = jax.eval_shape(prefill, params_abs, batch_abs)[1]
+    dec_policy = make_policy(mesh, shape.global_batch, "decode",
+                         head_fsdp=cfg.head_fsdp)
+    cache_sh = dec_policy.cache_shardings(caches_abs, cfg.ssm_version)
+    logits_sh = policy.sharding(policy.batch_first((shape.global_batch, 1, 1)))
+
+    return StepBundle(
+        fn=prefill,
+        abstract_args=(params_abs, batch_abs),
+        in_shardings=(param_sh, batch_sh),
+        out_shardings=(logits_sh, cache_sh),
+        donate=(),
+        policy=policy)
+
+
+def decode_step_bundle(cfg: ArchConfig, shape: ShapeSpec, mesh) -> StepBundle:
+    """serve_step: one new token through a seq_len KV/SSM cache."""
+    model = build_model(cfg)
+    policy = make_policy(mesh, shape.global_batch, "decode",
+                         head_fsdp=cfg.head_fsdp)
+    B = shape.global_batch
+
+    def serve_step(params, caches, tokens, positions):
+        return model.decode_step(params, caches, tokens, positions, policy)
+
+    params_abs = model.abstract_params()
+    caches_abs = model.abstract_caches(shape)
+    tok_abs = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos_abs = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+
+    param_sh = policy.param_shardings(params_abs)
+    cache_sh = policy.cache_shardings(caches_abs, cfg.ssm_version)
+    tok_sh = policy.sharding(policy.batch_first((B, 1)))
+    logits_sh = policy.sharding(policy.batch_first((B, 1, 1)))
+
+    return StepBundle(
+        fn=serve_step,
+        abstract_args=(params_abs, caches_abs, tok_abs, pos_abs),
+        in_shardings=(param_sh, cache_sh, tok_sh, tok_sh),
+        out_shardings=(logits_sh, cache_sh),
+        donate=(1,),
+        policy=policy)
+
+
+def bundle_for(cfg: ArchConfig, shape_name: str, mesh) -> StepBundle:
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return train_step_bundle(cfg, shape, mesh)
+    if shape.kind == "prefill":
+        return prefill_bundle(cfg, shape, mesh)
+    return decode_step_bundle(cfg, shape, mesh)

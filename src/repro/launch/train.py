@@ -1,0 +1,70 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+        --steps 100 --batch 8 --seq 256 [--smoke] [--select] \
+        [--ckpt-dir /tmp/ckpt]
+
+``--smoke`` (default on CPU) swaps in the reduced same-family config so the
+run finishes on one device; without it the full assigned config is used
+(real-hardware path).  The mesh adapts to the available device count via
+``make_mesh_for``; on a pod slice this is the production (data, model) mesh.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs.base import ShapeSpec, get_config
+from repro.launch.mesh import make_mesh_for
+from repro.optim import adamw
+from repro.runtime.trainer import TrainConfig, Trainer
+from repro.data.pipeline import DataConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="train an assigned arch")
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--smoke", action="store_true", default=None,
+                    help="use the reduced config (default when on CPU)")
+    ap.add_argument("--no-smoke", dest="smoke", action="store_false")
+    ap.add_argument("--select", action="store_true",
+                    help="enable submodular batch curation (the paper)")
+    ap.add_argument("--select-every", type=int, default=4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    smoke = args.smoke
+    if smoke is None:
+        smoke = jax.default_backend() == "cpu"
+    cfg = get_config(args.arch)
+    if smoke:
+        cfg = cfg.reduced()
+    shape = ShapeSpec("cli", args.seq, args.batch, "train")
+    mesh = make_mesh_for(len(jax.devices()),
+                         model_parallel=args.model_parallel)
+
+    trainer = Trainer(
+        cfg, shape, mesh,
+        data=DataConfig(global_batch=args.batch, seq_len=args.seq,
+                        select_every=args.select_every if args.select else 0),
+        train=TrainConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                          ckpt_every=args.ckpt_every),
+        opt=adamw.AdamWConfig(lr=args.lr),
+        select=args.select, verbose=True)
+    trainer.run()
+    losses = [r.loss for r in trainer.history]
+    if losses:
+        print(f"[train] done: steps={len(losses)} "
+              f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

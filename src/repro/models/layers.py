@@ -1,0 +1,281 @@
+"""Shared neural layers: RMSNorm, RoPE, GQA attention (full / sliding-window
+/ chunked-local, with qk_norm), blockwise flash-style attention for long
+sequences, gated MLP, embeddings.
+
+Conventions:
+  * pure functions: ``init_*(key, cfg) -> params`` and ``apply(params, ...)``;
+  * activations (B, S, D); attention heads (B, S, H, hd);
+  * compute dtype bf16 (params f32, cast at use), softmax/statistics f32;
+  * decode uses ring KV caches: SWA archs keep a ``window``-sized ring,
+    chunked-local layers an ``attention_chunk``-sized ring, global layers the
+    full sequence — this is what makes decode_32k/long_500k caches bounded
+    for the sub-quadratic archs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def dense_init(key, shape, in_dim=None):
+    in_dim = in_dim or shape[0]
+    return (jax.random.normal(key, shape, jnp.float32) * (in_dim ** -0.5))
+
+
+def rms_norm(x, w, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rope(x, positions, theta):
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[:, :, None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg):
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (D, H * hd)),
+        "wk": dense_init(ks[1], (D, KV * hd)),
+        "wv": dense_init(ks[2], (D, KV * hd)),
+        "wo": dense_init(ks[3], (H * hd, D), in_dim=H * hd),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _mask(pos_q, pos_kv, *, causal, window, chunk):
+    """(..., Sq, Skv) boolean validity from positions."""
+    pq, pk = pos_q[..., :, None], pos_kv[..., None, :]
+    m = jnp.ones(jnp.broadcast_shapes(pq.shape, pk.shape), bool)
+    if causal:
+        m &= pk <= pq
+    if window:
+        m &= pk > pq - window
+    if chunk:
+        m &= (pk // chunk) == (pq // chunk)
+    m &= pos_kv[..., None, :] >= 0  # ring slots not yet written
+    return m
+
+
+def blockwise_attention(q, k, v, pos_q, pos_kv, *, causal, window, chunk,
+                        kv_block, q_block=0):
+    """Flash-style online-softmax attention, lax.scan over KV blocks.
+
+    q: (B, Sq, KV, G, hd); k, v: (B, Skv, KV, hd); pos_*: (B, S*).
+    Never materializes the (Sq, Skv) score matrix — peak extra memory is
+    O(Sq * kv_block) per (batch, head), which is what makes prefill_32k
+    compile within HBM.
+
+    q_block > 0 additionally scans over query blocks (double-blocked
+    flash): peak becomes O(q_block * kv_block) per (batch, head) — the
+    XLA analogue of tiling both matmul dims into VMEM; see §Perf.
+    """
+    B, Sq, KVh, G, hd = q.shape
+    if q_block and Sq > q_block and Sq % q_block == 0:
+        nqb = Sq // q_block
+        qs = q.reshape(B, nqb, q_block, KVh, G, hd).transpose(1, 0, 2, 3,
+                                                              4, 5)
+        ps = pos_q.reshape(B, nqb, q_block).transpose(1, 0, 2)
+
+        def qstep(_, blk):
+            qb, pb = blk
+            ob = blockwise_attention(qb, k, v, pb, pos_kv, causal=causal,
+                                     window=window, chunk=chunk,
+                                     kv_block=kv_block, q_block=0)
+            return None, ob
+
+        _, outs = jax.lax.scan(jax.checkpoint(qstep), None, (qs, ps))
+        return outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, KVh, G, hd)
+    Skv = k.shape[1]
+    kv_block = min(kv_block, Skv)
+    pad = (-Skv) % kv_block
+    if pad:  # padded slots carry pos=-1 and are masked out
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos_kv = jnp.pad(pos_kv, ((0, 0), (0, pad)), constant_values=-1)
+        Skv += pad
+    nb = Skv // kv_block
+    scale = hd ** -0.5
+
+    kb = k.reshape(B, nb, kv_block, KVh, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nb, kv_block, KVh, hd).transpose(1, 0, 2, 3, 4)
+    pb = pos_kv.reshape(B, nb, kv_block).transpose(1, 0, 2)
+
+    m0 = jnp.full((B, Sq, KVh, G), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Sq, KVh, G), jnp.float32)
+    a0 = jnp.zeros((B, Sq, KVh, G, hd), jnp.float32)
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kc, vc, pc = blk
+        s = jnp.einsum("bqkgh,bckh->bqkgc", q, kc,
+                       preferred_element_type=jnp.float32) * scale
+        msk = _mask(pos_q, pc, causal=causal, window=window, chunk=chunk)
+        s = jnp.where(msk[:, :, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard all -inf rows
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bqkgc,bckh->bqkgh", p.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32)
+        return (m_new, l, acc), None
+
+    # checkpoint the BODY: scan's vjp otherwise saves every block's f32
+    # score/prob tensors (fwd-of-bwd over all iterations = the full
+    # (Sq, Skv) matrix, defeating flash) — with the checkpoint, bwd
+    # recomputes them one kv-block at a time.  §Perf llama4 it3.
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(step), (m0, l0, a0),
+                                  (kb, vb, pb))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return out.astype(q.dtype)
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, C, KV, hd)
+    v: jax.Array          # (B, C, KV, hd)
+    slot_pos: jax.Array   # (C,) int32 — position held by each ring slot, -1 empty
+
+
+def init_kv_cache(cfg, batch, cache_len, is_global_layer=True):
+    KVh, hd = cfg.n_kv_heads, cfg.head_dim_
+    C = cache_len
+    if cfg.sliding_window:
+        C = min(C, cfg.sliding_window)
+    elif cfg.attention_chunk and not is_global_layer:
+        C = min(C, cfg.attention_chunk)
+    return KVCache(
+        k=jnp.zeros((batch, C, KVh, hd), COMPUTE_DTYPE),
+        v=jnp.zeros((batch, C, KVh, hd), COMPUTE_DTYPE),
+        slot_pos=jnp.full((C,), -1, jnp.int32))
+
+
+def attention(p, x, positions, cfg, *, is_global=True, cache=None,
+              deterministic=True):
+    """Returns (out, new_cache).
+
+    cache None        -> training/prefill full-sequence path (blockwise).
+    cache KVCache     -> single-token decode: x is (B, 1, D), positions (B, 1).
+    """
+    B, S, D = x.shape
+    H, KVh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    G = H // KVh
+    cd = x.dtype
+
+    q = (x @ p["wq"].astype(cd)).reshape(B, S, H, hd)
+    k = (x @ p["wk"].astype(cd)).reshape(B, S, KVh, hd)
+    v = (x @ p["wv"].astype(cd)).reshape(B, S, KVh, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    window = cfg.sliding_window
+    chunk = 0 if (is_global or not cfg.attention_chunk) else cfg.attention_chunk
+
+    if cache is None:
+        qg = q.reshape(B, S, KVh, G, hd)
+        out = blockwise_attention(
+            qg, k, v, positions, positions,
+            causal=not cfg.is_encoder, window=window, chunk=chunk,
+            kv_block=cfg.kv_block, q_block=cfg.q_block)
+        out = out.reshape(B, S, H * hd)
+        return out @ p["wo"].astype(cd), (k, v)
+
+    # ---- decode: one new token into a ring cache ----
+    C = cache.k.shape[1]
+    pos = positions[:, 0]                      # (B,) current position
+    slot = (pos[0] % C).astype(jnp.int32)      # same position across batch
+    ck = jax.lax.dynamic_update_slice(cache.k, k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache.v, v, (0, slot, 0, 0))
+    spos = jax.lax.dynamic_update_slice(cache.slot_pos, pos[:1], (slot,))
+
+    qg = q.reshape(B, 1, KVh, G, hd)
+    s = jnp.einsum("bqkgh,bckh->bqkgc", qg, ck,
+                   preferred_element_type=jnp.float32) * (hd ** -0.5)
+    msk = _mask(pos[:, None], spos[None, :], causal=True, window=window,
+                chunk=chunk)  # (B, 1, C)
+    s = jnp.where(msk[:, :, None, None, :], s, -jnp.inf)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    pr = jnp.exp(s - m)
+    pr = jnp.where(jnp.isfinite(s), pr, 0.0)
+    o = jnp.einsum("bqkgc,bckh->bqkgh", pr.astype(cv.dtype), cv,
+                   preferred_element_type=jnp.float32)
+    o = o / jnp.maximum(jnp.sum(pr, axis=-1), 1e-20)[..., None]
+    out = o.astype(cd).reshape(B, 1, H * hd)
+    return out @ p["wo"].astype(cd), KVCache(ck, cv, spos)
+
+
+def prefill_to_cache(cfg, k, v, positions, cache_len, is_global_layer=True):
+    """Convert full-sequence K/V from prefill into a (ring) KVCache."""
+    B, S, KVh, hd = k.shape
+    cache = init_kv_cache(cfg, B, cache_len, is_global_layer)
+    C = cache.k.shape[1]
+    if C >= S:
+        ck = jax.lax.dynamic_update_slice(cache.k, k, (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache.v, v, (0, 0, 0, 0))
+        spos = jax.lax.dynamic_update_slice(
+            cache.slot_pos, positions[0].astype(jnp.int32), (0,))
+        return KVCache(ck, cv, spos)
+    # keep the last C positions, placed at their ring slots
+    last_pos = positions[0, -1]
+    keep_pos = last_pos - C + 1 + jnp.arange(C)          # (C,) positions kept
+    src = keep_pos - positions[0, 0]                     # indices into S
+    slots = keep_pos % C
+    ck = jnp.zeros_like(cache.k).at[:, slots].set(k[:, src])
+    cv = jnp.zeros_like(cache.v).at[:, slots].set(v[:, src])
+    spos = jnp.full((C,), -1, jnp.int32).at[slots].set(keep_pos)
+    return KVCache(ck, cv, spos)
+
+
+# ---------------------------------------------------------------------------
+# MLP & embeddings
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model, d_ff):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"wg": dense_init(k1, (d_model, d_ff)),
+            "wu": dense_init(k2, (d_model, d_ff)),
+            "wd": dense_init(k3, (d_ff, d_model), in_dim=d_ff)}
+
+
+def mlp(p, x):
+    cd = x.dtype
+    g = jax.nn.silu(x @ p["wg"].astype(cd))
+    return (g * (x @ p["wu"].astype(cd))) @ p["wd"].astype(cd)
+
+
+def init_embed(key, vocab, d_model):
+    return {"table": jax.random.normal(key, (vocab, d_model),
+                                       jnp.float32) * 0.02}
+
+
+def embed(p, tokens):
+    return p["table"].astype(COMPUTE_DTYPE)[tokens]

@@ -1,0 +1,96 @@
+"""Model facade: build once from an ArchConfig, get init/loss/prefill/decode
+plus abstract input specs for the dry-run."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SHAPES, ShapeSpec
+from repro.models import transformer as T
+from repro.models.layers import COMPUTE_DTYPE
+from repro.models.sharding import ShardingPolicy
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # -- construction ------------------------------------------------------
+    def init(self, key):
+        return T.init_params(key, self.cfg)
+
+    def abstract_params(self):
+        return jax.eval_shape(self.init, jax.random.PRNGKey(0))
+
+    # -- steps -------------------------------------------------------------
+    def loss(self, params, batch, policy: ShardingPolicy):
+        return T.loss_fn(params, batch, self.cfg, policy)
+
+    def prefill(self, params, batch, policy: ShardingPolicy,
+                cache_len=None):
+        hidden, caches, _ = T.forward(params, batch, self.cfg, policy,
+                                      mode="prefill", cache_len=cache_len)
+        logits = T.logits_fn(params, hidden[:, -1:], self.cfg, policy)
+        return logits, caches
+
+    def decode_step(self, params, caches, tokens, positions,
+                    policy: ShardingPolicy):
+        hidden, caches, _ = T.forward(params, {"tokens": tokens}, self.cfg,
+                                      policy, mode="decode", caches=caches,
+                                      positions=positions)
+        logits = T.logits_fn(params, hidden, self.cfg, policy)
+        return logits, caches
+
+    def encode(self, params, batch, policy: ShardingPolicy):
+        """Encoder-only forward (hubert): per-frame logits."""
+        hidden, _, _ = T.forward(params, batch, self.cfg, policy,
+                                 mode="train")
+        return T.logits_fn(params, hidden, self.cfg, policy)
+
+    # -- abstract inputs (dry-run: no allocation) ----------------------------
+    def input_specs(self, shape: ShapeSpec) -> Dict[str, Any]:
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+
+        def tok(b, s):
+            return jax.ShapeDtypeStruct((b, s), i32)
+
+        if shape.kind == "decode":
+            return {"tokens": tok(B, 1), "positions": tok(B, 1)}
+        if cfg.family == "vlm":
+            s_txt = S - cfg.num_image_tokens
+            spec = {"tokens": tok(B, s_txt),
+                    "image_embeds": jax.ShapeDtypeStruct(
+                        (B, cfg.num_image_tokens, cfg.d_model),
+                        COMPUTE_DTYPE)}
+            if shape.kind == "train":
+                spec["labels"] = tok(B, s_txt)
+            return spec
+        if cfg.frontend_stub:  # audio
+            spec = {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                   COMPUTE_DTYPE)}
+            if shape.kind == "train":
+                spec["labels"] = tok(B, S)
+            return spec
+        spec = {"tokens": tok(B, S)}
+        if shape.kind == "train":
+            spec["labels"] = tok(B, S)
+        return spec
+
+    def abstract_caches(self, shape: ShapeSpec):
+        """Cache pytree ShapeDtypeStructs for a decode shape."""
+        return jax.eval_shape(
+            lambda: T.init_caches(self.cfg, shape.global_batch,
+                                  cache_len=shape.seq_len))
+
+
+def build_model(cfg_or_name) -> Model:
+    if isinstance(cfg_or_name, str):
+        from repro.configs.base import get_config
+        cfg_or_name = get_config(cfg_or_name)
+    return Model(cfg_or_name)

@@ -1,0 +1,218 @@
+"""Capacity-based top-k routed MoE with shared expert(s).
+
+Dispatch runs inside a ``shard_map`` island over the batch axes (tokens stay
+local to their data shard — the MoE analogue of the paper's "machine"), and
+the expert FFN is parallelized over the ``model`` axis in one of two modes:
+
+  * **ep** — experts divide the model axis (llama4: 16e/16): each model peer
+    computes its expert slice and the outputs are all-gathered back;
+  * **tp** — experts don't divide (qwen2-moe: 60e/16): every peer computes
+    all experts on a d_ff shard and the down-projection is psum-reduced.
+
+Token→slot assignment is the classic one-hot-cumsum capacity scheme (GShard/
+Switch): fully static shapes, overflow tokens dropped (capacity_factor
+controls the drop rate; the router aux loss keeps loads balanced).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.models.layers import dense_init, init_mlp, mlp
+
+
+def init_moe(key, cfg):
+    D, E, Fe = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (D, E)),
+        "we_gate": dense_init(ks[1], (E, D, Fe), in_dim=D),
+        "we_up": dense_init(ks[2], (E, D, Fe), in_dim=D),
+        "we_down": dense_init(ks[3], (E, Fe, D), in_dim=Fe),
+    }
+    if cfg.n_shared_experts:
+        # qwen2-moe: shared expert of width n_shared*Fe (== cfg.d_ff);
+        # llama4: one shared expert of width d_ff
+        p["shared"] = init_mlp(ks[4], D, cfg.d_ff)
+    return p
+
+
+def _capacity(cfg, tokens_local: int) -> int:
+    c = int(tokens_local * cfg.experts_per_token * cfg.capacity_factor /
+            max(cfg.n_experts, 1))
+    return max(8, min(c, tokens_local))
+
+
+def _route(logits, cfg):
+    """-> gate (T,k), idx (T,k), aux-loss scalar."""
+    E, k = cfg.n_experts, cfg.experts_per_token
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)
+    if k > 1:  # qwen-style renorm
+        gate = gate / jnp.maximum(jnp.sum(gate, -1, keepdims=True), 1e-9)
+    # switch-style load-balance loss
+    assign = jnp.zeros_like(probs).at[
+        jnp.arange(logits.shape[0])[:, None], idx].add(1.0)
+    frac = jnp.mean(assign, axis=0) / k
+    mean_p = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac * mean_p)
+    return gate.astype(jnp.float32), idx, aux
+
+
+def _local_moe(x, router, wg, wu, wd, cfg, mode, model_axis, model_size):
+    """Per-data-shard MoE. x: (B_loc, S, D) local; expert weights local
+    shards per `mode`.  Runs inside shard_map."""
+    B, S, D = x.shape
+    T = B * S
+    k = cfg.experts_per_token
+    E = cfg.n_experts
+    C = _capacity(cfg, T)
+    cd = x.dtype
+
+    xt = x.reshape(T, D)
+    logits = (xt.astype(jnp.float32) @ router.astype(jnp.float32))
+    gate, idx, aux = _route(logits, cfg)
+
+    flat_e = idx.reshape(T * k)                        # token-major
+    onehot = (flat_e[:, None] == jnp.arange(E)[None, :]).astype(jnp.float32)
+    pos = (jnp.cumsum(onehot, axis=0) - onehot)        # count before me
+    pos = jnp.sum(pos * onehot, axis=1).astype(jnp.int32)   # (T*k,)
+    keep = pos < C
+
+    xt_rep = jnp.repeat(xt, k, axis=0) if k > 1 else xt
+    buf = jnp.zeros((E, C, D), cd).at[flat_e, pos].add(
+        jnp.where(keep[:, None], xt_rep, 0), mode="drop")
+
+    if mode == "ep":
+        eloc = E // model_size
+        if model_size > 1:
+            mi = jax.lax.axis_index(model_axis)
+            buf_l = jax.lax.dynamic_slice_in_dim(buf, mi * eloc, eloc, 0)
+        else:
+            buf_l = buf
+        h = jnp.einsum("ecd,edf->ecf", buf_l, wg.astype(cd))
+        u = jnp.einsum("ecd,edf->ecf", buf_l, wu.astype(cd))
+        y_l = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, wd.astype(cd))
+        y = jax.lax.all_gather(y_l, model_axis, axis=0, tiled=True) \
+            if model_size > 1 else y_l
+    else:  # tp: wg/wu are (E, D, F_loc), wd (E, F_loc, D)
+        h = jnp.einsum("ecd,edf->ecf", buf, wg.astype(cd))
+        u = jnp.einsum("ecd,edf->ecf", buf, wu.astype(cd))
+        y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, wd.astype(cd))
+        y = jax.lax.psum(y, model_axis)
+
+    got = y[flat_e, jnp.minimum(pos, C - 1)]           # (T*k, D)
+    got = jnp.where(keep[:, None], got, 0)
+    out = jnp.sum(got.reshape(T, k, D) * gate[:, :, None].astype(cd), axis=1)
+    return out.reshape(B, S, D), aux[None]
+
+
+def _local_moe_a2a(x, router, wg, wu, wd, cfg, model_axis, model_size):
+    """ZeRO+EP dispatch: tokens are batch-sharded over ALL axes; experts
+    live one-slice-per-model-peer.  Each shard routes its own tokens into a
+    per-expert capacity buffer, all_to_all ships slot buffers to the expert
+    home peers (bytes ~ T_loc * D — independent of E), the expert FFN runs
+    on local weights, and a reverse all_to_all returns the outputs.  This is
+    the DeepSeek/Switch-style production dispatch; vs replicating the
+    (E, C, D) buffer per data shard it removes both the replicated compute
+    and the all-gather of expert outputs."""
+    B, S, D = x.shape
+    T = B * S
+    k = cfg.experts_per_token
+    E = cfg.n_experts
+    eloc = E // model_size
+    C = _capacity(cfg, T)
+    cd = x.dtype
+
+    xt = x.reshape(T, D)
+    logits = (xt.astype(jnp.float32) @ router.astype(jnp.float32))
+    gate, idx, aux = _route(logits, cfg)
+
+    flat_e = idx.reshape(T * k)
+    onehot = (flat_e[:, None] == jnp.arange(E)[None, :]).astype(jnp.float32)
+    pos = (jnp.cumsum(onehot, axis=0) - onehot)
+    pos = jnp.sum(pos * onehot, axis=1).astype(jnp.int32)
+    keep = pos < C
+
+    xt_rep = jnp.repeat(xt, k, axis=0) if k > 1 else xt
+    buf = jnp.zeros((E, C, D), cd).at[flat_e, pos].add(
+        jnp.where(keep[:, None], xt_rep, 0), mode="drop")
+
+    # (E, C, D) -> ship expert-major blocks to their home peer:
+    # after a2a, axis 0 is the SOURCE peer, rows are my local experts.
+    buf = buf.reshape(model_size, eloc, C, D)
+    recv = jax.lax.all_to_all(buf, model_axis, split_axis=0, concat_axis=0,
+                              tiled=False)            # (P, eloc, C, D)
+    toks = recv.transpose(1, 0, 2, 3).reshape(eloc, model_size * C, D)
+
+    h = jnp.einsum("ecd,edf->ecf", toks, wg.astype(cd))
+    u = jnp.einsum("ecd,edf->ecf", toks, wu.astype(cd))
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, wd.astype(cd))
+
+    y = y.reshape(eloc, model_size, C, D).transpose(1, 0, 2, 3)
+    back = jax.lax.all_to_all(y, model_axis, split_axis=0, concat_axis=0,
+                              tiled=False)            # (P, eloc, C, D)
+    y_full = back.reshape(E, C, D)
+
+    got = y_full[flat_e, jnp.minimum(pos, C - 1)]
+    got = jnp.where(keep[:, None], got, 0)
+    out = jnp.sum(got.reshape(T, k, D) * gate[:, :, None].astype(cd), axis=1)
+    return out.reshape(B, S, D), aux[None]
+
+
+def moe_ffn(p, x, cfg, policy):
+    """Routed + shared expert FFN. Returns (out, aux_loss scalar)."""
+    E = cfg.n_experts
+    ba = policy.batch_axes
+    bentry = ba if len(ba) > 1 else (ba[0] if ba else None)
+    msize = policy.model_size
+    m = policy.model_axis if msize > 1 else None
+
+    if policy.pure_fsdp and m is not None and E % msize == 0:
+        # ZeRO+EP: batch over all axes, experts over the model axis, a2a
+        # dispatch (see _local_moe_a2a).  Under sequence parallelism the
+        # model axis carries S instead of batch — the local token block is
+        # (B_loc, S_loc) either way, so the same body applies; the in_spec
+        # just has to match, else SPMD re-gathers S around every layer.
+        seq = policy.seq_shard
+        xspec = P(bentry, seq, None)
+        fn = shard_map(
+            partial(_local_moe_a2a, cfg=cfg, model_axis=m,
+                    model_size=msize),
+            mesh=policy.mesh,
+            in_specs=(xspec, P(None, None),
+                      P(m, None, None), P(m, None, None), P(m, None, None)),
+            out_specs=(xspec, P(bentry)),
+            check_rep=False)
+        out, aux = fn(x, p["router"], p["we_gate"], p["we_up"],
+                      p["we_down"])
+        out = out + (mlp(p["shared"], x) if "shared" in p else 0)
+        return out, jnp.mean(aux)
+
+    if policy.pure_fsdp:
+        m, msize = None, 1  # ZeRO without EP: all experts local on
+        #                     gathered weights (E not divisible)
+    mode = "ep" if (msize == 1 or E % msize == 0) else "tp"
+
+    if mode == "ep":
+        wspec = (P(m, None, None), P(m, None, None), P(m, None, None))
+    else:
+        wspec = (P(None, None, m), P(None, None, m), P(None, m, None))
+
+    seq = policy.seq_shard if policy.pure_fsdp else None
+    xspec = P(bentry, seq, None)
+    fn = shard_map(
+        partial(_local_moe, cfg=cfg, mode=mode,
+                model_axis=m, model_size=msize),
+        mesh=policy.mesh,
+        in_specs=(xspec, P(None, None), *wspec),
+        out_specs=(xspec, P(bentry)),
+        check_rep=False)
+    out, aux = fn(x, p["router"], p["we_gate"], p["we_up"], p["we_down"])
+    out = out + (mlp(p["shared"], x) if "shared" in p else 0)
+    return out, jnp.mean(aux)

@@ -1,0 +1,321 @@
+"""ShardingPolicy: one object that answers every "which axis?" question.
+
+Scheme (DESIGN.md §6):
+  * batch   -> ("pod", "data")  (pod only on the multi-pod mesh)
+  * TP      -> "model" on heads / d_ff / experts / vocab
+  * FSDP    -> "data" on the d_model dim of weights (ZeRO-ish; XLA turns it
+               into per-layer weight all-gathers inside the layer scan)
+  * decode long-context: KV-cache *sequence* over "data" (batch=1), head_dim
+    over "model" — XLA inserts the flash-merge all-reduces for the softmax.
+
+Every spec is validated against actual divisibility (``_fit``): a non-dividing
+axis is dropped to None instead of crashing, which is what lets the same
+rules serve the 512-device production mesh and the 1-device smoke mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    mesh: Mesh
+    global_batch: int
+    kind: str = "train"            # train | prefill | decode
+    model_axis: str = "model"
+    fsdp: bool = True
+    head_fsdp: bool = True         # False: vocab-parallel lm_head (None, m)
+    pure_fsdp: bool = False        # ZeRO-3: batch over ALL axes, weights
+                                   # sharded over ("data","model") on one dim,
+                                   # no tensor parallelism (vocab stays on
+                                   # "model" for the CE).  Right choice when
+                                   # params/chip is small vs activations —
+                                   # see EXPERIMENTS.md §Perf it3.
+    seq_shard: Optional[str] = None  # axis carrying the SEQUENCE dim of
+                                   # activations (sequence/context
+                                   # parallelism): set for prefill when the
+                                   # request batch cannot fill the mesh —
+                                   # attention all-gathers K/V, everything
+                                   # else stays local.  §Perf pair-2.
+
+    @property
+    def batch_axes(self) -> Tuple[str, ...]:
+        cand = ("pod", "data", "model") if self.pure_fsdp else ("pod", "data")
+        axes = tuple(a for a in cand if a in self.mesh.shape)
+        size = 1
+        out = []
+        for a in axes:
+            if self.global_batch % (size * self.mesh.shape[a]) == 0:
+                out.append(a)
+                size *= self.mesh.shape[a]
+        return tuple(out)
+
+    @property
+    def data_parallel_size(self) -> int:
+        s = 1
+        for a in self.batch_axes:
+            s *= self.mesh.shape[a]
+        return s
+
+    @property
+    def model_size(self) -> int:
+        return self.mesh.shape.get(self.model_axis, 1)
+
+    @property
+    def seq_axis(self) -> Optional[str]:
+        """Axis for KV-cache sequence sharding when batch can't fill 'data'
+        (the long_500k path)."""
+        if "data" in self.batch_axes or "data" not in self.mesh.shape:
+            return None
+        return "data"
+
+    # -- spec helpers ------------------------------------------------------
+    def _fit(self, spec: P, shape) -> P:
+        fixed = []
+        for dim, entry in enumerate(spec):
+            if entry is None:
+                fixed.append(None)
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            size = 1
+            for a in axes:
+                size *= self.mesh.shape.get(a, 1)
+            if dim < len(shape) and shape[dim] % size == 0 and size > 1:
+                fixed.append(entry)
+            else:
+                fixed.append(None)
+        return P(*fixed)
+
+    def spec(self, *entries, shape=None) -> P:
+        s = P(*entries)
+        return self._fit(s, shape) if shape is not None else s
+
+    def batch_first(self, shape) -> P:
+        ba = self.batch_axes
+        entry = ba if len(ba) > 1 else (ba[0] if ba else None)
+        rest = [None] * (len(shape) - 1)
+        if self.seq_shard and len(shape) >= 2 and \
+                self.seq_shard not in ba:
+            rest[0] = self.seq_shard  # dim 1 = sequence
+        return self._fit(P(entry, *rest), shape)
+
+    def sharding(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    def constrain(self, x, spec: P):
+        return jax.lax.with_sharding_constraint(x, self.sharding(
+            self._fit(spec, x.shape)))
+
+    def constrain_tokens(self, x):
+        """(B, S, ...) activations: batch over batch_axes."""
+        return self.constrain(x, self.batch_first(x.shape))
+
+    # -- parameter rules ---------------------------------------------------
+    def param_spec(self, path: str, shape) -> P:
+        """Rule table keyed on leaf-name substrings; `path` is the
+        '/'-joined tree path.  Stacked layer dims (leading n_groups /
+        group-size dims) are detected by the 'groups' segment."""
+        fsdp = "data" if self.fsdp else None
+        m = self.model_axis
+        leaf = path.split("/")[-1]
+
+        if self.pure_fsdp:
+            return self._pure_fsdp_rule(leaf, shape)
+
+        def base_rule() -> Tuple:
+            if leaf in ("table",):                    # embedding (V, D)
+                # head_fsdp=False: vocab-parallel table (Megatron-style) —
+                # the tied head matmul contracts an UNsharded D and yields
+                # vocab-sharded logits; the embedding lookup becomes a
+                # masked local gather + (B,S,D) psum.  Default (None, m)
+                # shards D, which makes the tied head emit partial-sum
+                # logits (full-vocab all-reduce).  Non-dividing vocabs
+                # (granite 49155) keep the D sharding — a vocab entry that
+                # _fit would drop leaves the table REPLICATED, worse.
+                if not self.head_fsdp and shape[-2] % self.model_size == 0:
+                    return (m, None)
+                return (None, m)
+            if leaf in ("lm_head",):                  # (D, V)
+                # head_fsdp splits the CONTRACTION dim: XLA then builds the
+                # logits from partial sums with a full-vocab all-reduce
+                # (9.5GB/chunk at qwen vocab) — vocab-parallel (None, m) is
+                # the production setting; see EXPERIMENTS.md §Perf iter 1.
+                # Non-dividing vocab => keep (fsdp, m) (partial-sum AR is
+                # tiny at decode, and train CE chunks bound it).
+                if not self.head_fsdp and shape[-1] % self.model_size == 0:
+                    return (None, m)
+                return (fsdp, m)
+            if leaf in ("wq", "wk", "wv", "wg", "wu", "in_proj", "router"):
+                return (fsdp, m)
+            if leaf in ("wo", "wd", "out_proj"):
+                return (m, fsdp)
+            if leaf in ("x_proj",):                   # (di, R+2N)
+                return (m, None)
+            if leaf in ("dt_proj",):                  # (R, di)
+                return (None, m)
+            if leaf in ("conv_w", "A_log"):           # (ch, ...) / (H,)...
+                return (m,) + (None,) * 16
+            if leaf in ("dt_bias", "D_skip"):
+                return (m,)
+            if leaf in ("we_gate", "we_up"):          # (E, D, F)
+                if self.n_experts_divisible(shape[-3]):
+                    return (m, None, None)
+                return (None, fsdp, m)
+            if leaf == "we_down":                     # (E, F, D)
+                if self.n_experts_divisible(shape[-3]):
+                    return (m, None, None)
+                return (None, m, fsdp)
+            return (None,) * 16
+
+        rule = base_rule()
+        # rules are written for the unstacked leaf; scanned layers add
+        # leading (n_groups[, group_size]) dims, detected via base rank
+        base_rank = {"table": 2, "lm_head": 2, "wq": 2, "wk": 2, "wv": 2,
+                     "wg": 2, "wu": 2, "in_proj": 2, "router": 2, "wo": 2,
+                     "wd": 2, "out_proj": 2, "x_proj": 2, "dt_proj": 2,
+                     "conv_w": 2, "dt_bias": 1, "D_skip": 1,
+                     "we_gate": 3, "we_up": 3, "we_down": 3}.get(leaf)
+        if base_rank is None:
+            if leaf == "A_log":
+                base_rank = min(len(shape), 2)
+            else:
+                base_rank = min(len(shape), 1)  # norms/biases: 1-D leaves
+        n_stack = max(0, len(shape) - base_rank)
+        entries = (None,) * n_stack + tuple(rule[: len(shape) - n_stack])
+        return self._fit(P(*entries), shape)
+
+    def _pure_fsdp_rule(self, leaf: str, shape) -> P:
+        """ZeRO-3 rules: one dim of every weight sharded over
+        ("data","model") jointly (XLA inserts per-layer weight all-gathers
+        and gradient reduce-scatters); the vocab dim of table/lm_head stays
+        on "model" so the CE logits remain vocab-sharded (never partial-sum
+        over a sharded contraction)."""
+        m = self.model_axis
+        all_ax = tuple(a for a in ("data", m) if a in self.mesh.shape)
+        aa = all_ax if len(all_ax) > 1 else (all_ax[0] if all_ax else None)
+        base = {
+            # (V, D): vocab over model when it divides, else ZeRO over D
+            "table": (m, "data") if len(shape) == 2 and
+            shape[0] % max(self.model_size, 1) == 0 else (None, aa),
+            # (D, V): vocab-parallel (D replicated) when vocab divides,
+            # else ZeRO-shard D — never leave a 1B-param head replicated
+            "lm_head": (None, m) if len(shape) == 2 and
+            shape[1] % max(self.model_size, 1) == 0 else (aa, None),
+            "wq": (aa, None), "wk": (aa, None), "wv": (aa, None),
+            "wg": (aa, None), "wu": (aa, None), "in_proj": (aa, None),
+            "router": (aa, None),
+            "wo": (aa, None), "wd": (aa, None), "out_proj": (aa, None),
+            "x_proj": (aa, None), "dt_proj": (None, aa),
+            "conv_w": (aa,) + (None,) * 16,
+            "A_log": (aa,) + (None,) * 16,
+            "dt_bias": (aa,), "D_skip": (aa,),
+            # a2a-EP layout: experts over "model", ZeRO dim over "data"
+            "we_gate": (m, "data", None), "we_up": (m, "data", None),
+            "we_down": (m, "data", None),
+        }
+        rule = base.get(leaf)
+        base_rank = {"table": 2, "lm_head": 2, "wq": 2, "wk": 2, "wv": 2,
+                     "wg": 2, "wu": 2, "in_proj": 2, "router": 2, "wo": 2,
+                     "wd": 2, "out_proj": 2, "x_proj": 2, "dt_proj": 2,
+                     "conv_w": 2, "dt_bias": 1, "D_skip": 1,
+                     "we_gate": 3, "we_up": 3, "we_down": 3}.get(leaf)
+        if rule is None or base_rank is None:
+            if leaf == "A_log":
+                rule, base_rank = base["A_log"], min(len(shape), 2)
+            else:
+                rule, base_rank = (aa,), min(len(shape), 1)
+        n_stack = max(0, len(shape) - base_rank)
+        entries = (None,) * n_stack + tuple(rule[: len(shape) - n_stack])
+        return self._fit(P(*entries), shape)
+
+    def n_experts_divisible(self, n_experts: int) -> bool:
+        return self.model_size > 1 and n_experts % self.model_size == 0 or \
+            self.model_size == 1
+
+    def param_shardings(self, params):
+        def walk(tree, prefix):
+            if isinstance(tree, dict):
+                return {k: walk(v, prefix + "/" + k) for k, v in tree.items()}
+            if isinstance(tree, (list, tuple)):
+                out = [walk(v, f"{prefix}/{i}") for i, v in enumerate(tree)]
+                return type(tree)(out) if isinstance(tree, tuple) else out
+            return self.sharding(self.param_spec(prefix, tree.shape))
+        return walk(params, "")
+
+    # -- cache rules -------------------------------------------------------
+    def kv_cache_spec(self, shape) -> P:
+        """(B, C, KV, hd) (+ leading stack dims).  Batch over batch_axes when
+        divisible; else sequence over 'data'. head_dim over 'model'."""
+        ba = self.batch_axes
+        bentry = ba if len(ba) > 1 else (ba[0] if ba else None)
+        sentry = self.seq_axis
+        entries = [None] * (len(shape) - 4) + [bentry, sentry, None,
+                                               self.model_axis]
+        return self._fit(P(*entries), shape)
+
+    def ssm_cache_spec(self, shape, kind: str) -> P:
+        ba = self.batch_axes
+        bentry = ba if len(ba) > 1 else (ba[0] if ba else None)
+        if kind == "conv":   # (B, cw-1, ch)
+            entries = [None] * (len(shape) - 3) + [bentry, None,
+                                                   self.model_axis]
+        elif kind == "h1":   # (B, di, N)
+            entries = [None] * (len(shape) - 3) + [bentry, self.model_axis,
+                                                   None]
+        else:                # h2: (B, H, hd, N)
+            entries = [None] * (len(shape) - 4) + [bentry, self.model_axis,
+                                                   None, None]
+        return self._fit(P(*entries), shape)
+
+
+    # -- pytree walkers ----------------------------------------------------
+    def cache_shardings(self, caches, ssm_version: int = 0):
+        """NamedShardings for a decode-cache pytree (KVCache / Mamba*Cache
+        leaves, with or without stacked leading group dims)."""
+        def spec_for(path, leaf):
+            name = str(path[-1].name) if hasattr(path[-1], "name") else \
+                str(getattr(path[-1], "key", path[-1]))
+            shape = leaf.shape
+            if name in ("k", "v"):
+                return self.kv_cache_spec(shape)
+            if name == "slot_pos":
+                return P(*([None] * len(shape)))
+            if name == "conv":
+                return self.ssm_cache_spec(shape, "conv")
+            if name == "h":
+                return self.ssm_cache_spec(
+                    shape, "h2" if ssm_version == 2 else "h1")
+            return P(*([None] * len(shape)))
+
+        flat, treedef = jax.tree_util.tree_flatten_with_path(caches)
+        shardings = [self.sharding(self._fit(spec_for(p, l), l.shape))
+                     for p, l in flat]
+        return jax.tree_util.tree_unflatten(treedef, shardings)
+
+    def batch_shardings(self, batch):
+        return {k: self.sharding(self.batch_first(v.shape))
+                for k, v in batch.items()}
+
+    def replicated(self):
+        return NamedSharding(self.mesh, P())
+
+
+def make_policy(mesh: Mesh, global_batch: int, kind: str = "train",
+                fsdp: bool = True, head_fsdp: bool = True,
+                pure_fsdp: bool = False) -> ShardingPolicy:
+    p = ShardingPolicy(mesh=mesh, global_batch=global_batch, kind=kind,
+                       fsdp=fsdp, head_fsdp=head_fsdp,
+                       pure_fsdp=pure_fsdp)
+    if pure_fsdp and kind in ("train", "prefill") and \
+            p.model_axis in p.mesh.shape and \
+            p.model_axis not in p.batch_axes:
+        # batch can't fill the mesh: spill the sequence onto the idle
+        # model axis (sequence/context parallelism)
+        p = dataclasses.replace(p, seq_shard=p.model_axis)
+    return p

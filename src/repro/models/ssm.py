@@ -1,0 +1,288 @@
+"""Mamba1 (falcon-mamba) and Mamba2/SSD (zamba2) blocks.
+
+TPU adaptation (see DESIGN.md): the CUDA selective-scan kernel is replaced by
+*chunked* formulations that turn the recurrence into MXU-shaped matmuls —
+  * Mamba1: within-chunk ``associative_scan`` on the diagonal recurrence
+    (h_t = a_t ⊙ h_{t-1} + b_t), sequential ``lax.scan`` across chunks;
+  * Mamba2: the SSD block decomposition (intra-chunk "attention-like"
+    matmuls + inter-chunk state passing), scalar-per-head decay.
+
+Both paths are O(S) memory in chunks and give O(1)-state decode steps —
+this is why the SSM/hybrid archs run the long_500k shape.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B, S, C), w: (C, cw), b: (C,)."""
+    B, S, C = x.shape
+    cw = w.shape[1]
+    xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp, w.T[:, None, :].astype(x.dtype),  # (cw, 1, C)
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=C)
+    return out + b.astype(x.dtype)
+
+
+def _conv_step(x_t, conv_state, w, b):
+    """Single-token causal conv. x_t: (B, 1, C); conv_state: (B, cw-1, C)."""
+    win = jnp.concatenate([conv_state, x_t], axis=1)         # (B, cw, C)
+    out = jnp.einsum("bwc,cw->bc", win.astype(jnp.float32),
+                     w.astype(jnp.float32)) + b
+    return out[:, None, :].astype(x_t.dtype), win[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# Mamba1
+# ---------------------------------------------------------------------------
+
+class Mamba1Cache(NamedTuple):
+    conv: jax.Array   # (B, cw-1, di)
+    h: jax.Array      # (B, di, N) f32
+
+
+def init_mamba1(key, cfg):
+    D, di, N, cw = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    R = max(D // 16, 1)  # dt_rank
+    ks = jax.random.split(key, 6)
+    dt = jnp.exp(jax.random.uniform(ks[4], (di,)) *
+                 (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001))
+    return {
+        "in_proj": dense_init(ks[0], (D, 2 * di)),
+        "conv_w": jax.random.normal(ks[1], (di, cw), jnp.float32) * 0.2,
+        "conv_b": jnp.zeros((di,), jnp.float32),
+        "x_proj": dense_init(ks[2], (di, R + 2 * N), in_dim=di),
+        "dt_proj": dense_init(ks[3], (R, di), in_dim=R),
+        "dt_bias": jnp.log(jnp.expm1(dt)),  # softplus^{-1}(dt)
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, N + 1, dtype=jnp.float32), (di, N))),
+        "D_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], (di, D), in_dim=di),
+    }
+
+
+def _mamba1_chunk_scan(xc, dt, Bm, Cm, A, h0, chunk):
+    """xc, dt: (B,S,di) f32; Bm, Cm: (B,S,N) f32; A: (di,N); h0: (B,di,N).
+    Returns (y (B,S,di) f32, h_last)."""
+    B, S, di = xc.shape
+    N = A.shape[1]
+    cl = min(chunk, S)
+    pad = (-S) % cl
+    if pad:  # dt=0 padding is a no-op on the state (a=1, b=0)
+        z = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        xc, dt, Bm, Cm = z(xc), z(dt), z(Bm), z(Cm)
+        S = S + pad
+    nc = S // cl
+
+    def to_chunks(t):
+        return t.reshape(B, nc, cl, *t.shape[2:]).transpose(
+            1, 0, 2, *range(3, t.ndim + 1))
+
+    def chunk_step(h, inp):
+        xc_c, dt_c, B_c, C_c = inp
+        la = dt_c[..., None] * A                       # (B,cl,di,N), <= 0
+        a = jnp.exp(la)
+        b = (dt_c * xc_c)[..., None] * B_c[:, :, None, :]
+
+        def comb(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        aa, bb = jax.lax.associative_scan(comb, (a, b), axis=1)
+        hs = aa * h[:, None] + bb                      # (B,cl,di,N)
+        y = jnp.einsum("bcdn,bcn->bcd", hs, C_c)
+        return hs[:, -1], y
+
+    # checkpointed body: the scan vjp otherwise saves every chunk's
+    # (B, cl, di, N) hidden-state expansion (~B*S*di*N f32 per layer)
+    h_last, ys = jax.lax.scan(
+        jax.checkpoint(chunk_step), h0,
+        (to_chunks(xc), to_chunks(dt), to_chunks(Bm), to_chunks(Cm)))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, di)
+    return y[:, :S - pad] if pad else y, h_last
+
+
+def mamba1(p, x, cfg, cache=None):
+    """x: (B, S, D). cache None -> full-seq (returns prefill cache);
+    else single-token decode. Returns (out, new_cache)."""
+    B, S, D = x.shape
+    di, N, cw = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    R = max(D // 16, 1)
+    cd = x.dtype
+
+    xz = x @ p["in_proj"].astype(cd)
+    xi, z = jnp.split(xz, [di], axis=-1)
+
+    if cache is None:
+        xc = _causal_conv(xi, p["conv_w"], p["conv_b"])
+        conv_tail = xi[:, -(cw - 1):, :] if S >= cw - 1 else jnp.pad(
+            xi, ((0, 0), (cw - 1 - S, 0), (0, 0)))
+        h0 = jnp.zeros((B, di, N), jnp.float32)
+    else:
+        xc, conv_win = _conv_step(xi, cache.conv, p["conv_w"], p["conv_b"])
+        conv_tail = conv_win
+        h0 = cache.h
+    xc = jax.nn.silu(xc)
+
+    dbc = xc @ p["x_proj"].astype(cd)
+    dt_r, Bm, Cm = jnp.split(dbc, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(
+        (dt_r @ p["dt_proj"].astype(cd)).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    xc32, Bm32, Cm32 = (t.astype(jnp.float32) for t in (xc, Bm, Cm))
+    if cache is None:
+        y, h_last = _mamba1_chunk_scan(xc32, dt, Bm32, Cm32, A, h0,
+                                       cfg.ssm_chunk)
+    else:
+        a = jnp.exp(dt[:, 0, :, None] * A)            # (B,di,N)
+        b = (dt[:, 0] * xc32[:, 0])[..., None] * Bm32[:, 0][:, None, :]
+        h_last = a * h0 + b
+        y = jnp.einsum("bdn,bn->bd", h_last, Cm32[:, 0])[:, None, :]
+
+    y = y + p["D_skip"] * xc32
+    y = (y.astype(cd)) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(cd)
+    return out, Mamba1Cache(conv=conv_tail, h=h_last)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+class Mamba2Cache(NamedTuple):
+    conv: jax.Array   # (B, cw-1, di + 2N)
+    h: jax.Array      # (B, H, hd, N) f32
+
+
+def mamba2_heads(cfg):
+    return cfg.d_inner // cfg.ssm_head_dim
+
+
+def init_mamba2(key, cfg):
+    D, di, N, cw = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    H = mamba2_heads(cfg)
+    ks = jax.random.split(key, 4)
+    dt = jnp.exp(jax.random.uniform(ks[2], (H,)) *
+                 (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001))
+    return {
+        "in_proj": dense_init(ks[0], (D, 2 * di + 2 * N + H)),
+        "conv_w": jax.random.normal(ks[1], (di + 2 * N, cw),
+                                    jnp.float32) * 0.2,
+        "conv_b": jnp.zeros((di + 2 * N,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(dt)),
+        "A_log2": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "norm_w": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[3], (di, D), in_dim=di),
+    }
+
+
+def _ssd_chunk_scan(xh, la, dt, Bm, Cm, h0, chunk):
+    """SSD: xh (B,S,H,hd) f32, la/dt (B,S,H) f32, Bm/Cm (B,S,N) f32,
+    h0 (B,H,hd,N).  Returns (y (B,S,H,hd), h_last)."""
+    B, S, H, hd = xh.shape
+    N = Bm.shape[-1]
+    cl = min(chunk, S)
+    pad = (-S) % cl
+    if pad:  # dt=0 padding is a no-op on the state
+        z = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        xh, la, dt, Bm, Cm = z(xh), z(la), z(dt), z(Bm), z(Cm)
+        S = S + pad
+    nc = S // cl
+
+    def to_chunks(t):
+        return t.reshape(B, nc, cl, *t.shape[2:]).transpose(
+            1, 0, 2, *range(3, t.ndim + 1))
+
+    tri = jnp.tril(jnp.ones((cl, cl), bool))
+
+    def chunk_step(h, inp):
+        x_c, la_c, dt_c, B_c, C_c = inp               # (B,cl,...)
+        cum = jnp.cumsum(la_c, axis=1)                # (B,cl,H), <= 0
+        cb = jnp.einsum("btn,bsn->bts", C_c, B_c)     # (B,cl,cl)
+        expo = cum[:, :, None, :] - cum[:, None, :, :]    # (B,t,s,H)
+        expo = jnp.where(tri[None, :, :, None], expo, -jnp.inf)
+        w = cb[..., None] * jnp.exp(expo) * dt_c[:, None, :, :]
+        y_intra = jnp.einsum("btsh,bshd->bthd", w, x_c)
+        y_inter = jnp.einsum("btn,bhdn->bthd", C_c, h) * \
+            jnp.exp(cum)[..., None]
+        dec_end = jnp.exp(cum[:, -1:, :] - cum)       # (B,cl,H)
+        h_inc = jnp.einsum("bsh,bsn,bshd->bhdn", dec_end * dt_c, B_c, x_c)
+        h_new = jnp.exp(cum[:, -1])[:, :, None, None] * h + h_inc
+        return h_new, y_intra + y_inter
+
+    h_last, ys = jax.lax.scan(
+        jax.checkpoint(chunk_step), h0,
+        (to_chunks(xh), to_chunks(la), to_chunks(dt), to_chunks(Bm),
+         to_chunks(Cm)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+    return y[:, :S - pad] if pad else y, h_last
+
+
+def mamba2(p, x, cfg, cache=None):
+    """Mamba2 block. x: (B, S, D) -> (out, new_cache)."""
+    B, S, D = x.shape
+    di, N, cw = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    H = mamba2_heads(cfg)
+    hd = cfg.ssm_head_dim
+    cd = x.dtype
+
+    zxbcdt = x @ p["in_proj"].astype(cd)
+    z, xBC, dt_in = jnp.split(zxbcdt, [di, 2 * di + 2 * N], axis=-1)
+
+    if cache is None:
+        xBC_c = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+        conv_tail = xBC[:, -(cw - 1):, :] if S >= cw - 1 else jnp.pad(
+            xBC, ((0, 0), (cw - 1 - S, 0), (0, 0)))
+        h0 = jnp.zeros((B, H, hd, N), jnp.float32)
+    else:
+        xBC_c, conv_win = _conv_step(xBC, cache.conv, p["conv_w"],
+                                     p["conv_b"])
+        conv_tail = conv_win
+        h0 = cache.h
+    xBC_c = jax.nn.silu(xBC_c)
+    xi, Bm, Cm = jnp.split(xBC_c, [di, di + N], axis=-1)
+
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log2"])                                        # (H,)
+    la = dt * A
+
+    xh = xi.astype(jnp.float32).reshape(B, S, H, hd)
+    Bm32, Cm32 = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+    if cache is None:
+        y, h_last = _ssd_chunk_scan(xh, la, dt, Bm32, Cm32, h0, cfg.ssm_chunk)
+    else:
+        a = jnp.exp(la[:, 0])                          # (B,H)
+        h_last = a[:, :, None, None] * h0 + jnp.einsum(
+            "bh,bn,bhd->bhdn", dt[:, 0], Bm32[:, 0], xh[:, 0])
+        y = jnp.einsum("bn,bhdn->bhd", Cm32[:, 0], h_last)[:, None]
+
+    y = y + p["D_skip"][None, None, :, None] * xh
+    y = y.reshape(B, S, di).astype(cd)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(cd)
+    return out, Mamba2Cache(conv=conv_tail, h=h_last)
+
+
+def init_ssm_cache(cfg, batch):
+    di, N, cw = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    if cfg.ssm_version == 1:
+        return Mamba1Cache(
+            conv=jnp.zeros((batch, cw - 1, di), jnp.bfloat16),
+            h=jnp.zeros((batch, di, N), jnp.float32))
+    H, hd = mamba2_heads(cfg), cfg.ssm_head_dim
+    return Mamba2Cache(
+        conv=jnp.zeros((batch, cw - 1, di + 2 * N), jnp.bfloat16),
+        h=jnp.zeros((batch, H, hd, N), jnp.float32))

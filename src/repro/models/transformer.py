@@ -1,0 +1,446 @@
+"""Model assembly for all assigned families.
+
+Layers are organized into scanned *groups* so the HLO stays small (one group
+body × lax.scan over groups) and remat applies per group:
+
+  dense / audio / vlm : group = 1 attention+FFN layer
+  moe                 : group = 1 attention+MoE layer (llama4: 4 layers,
+                        3 chunked-local + 1 global — iRoPE pattern)
+  ssm                 : group = 1 mamba layer
+  hybrid (zamba2)     : group = `shared_attn_every` mamba2 layers + ONE
+                        shared attention+FFN block (same params every group —
+                        zamba's parameter-sharing trick)
+
+Modes: "train" (no caches), "prefill" (returns ring caches), "decode"
+(one token through the caches).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models.layers import COMPUTE_DTYPE
+
+
+# ---------------------------------------------------------------------------
+# group structure
+# ---------------------------------------------------------------------------
+
+def group_layout(cfg):
+    """-> (n_groups, [kind-per-sublayer], has_shared_attn)."""
+    if cfg.family == "hybrid":
+        gs = cfg.shared_attn_every
+        assert cfg.n_layers % gs == 0
+        return cfg.n_layers // gs, ["ssm"] * gs, True
+    if cfg.family == "ssm":
+        return cfg.n_layers, ["ssm"], False
+    if cfg.global_attn_every:
+        ge = cfg.global_attn_every
+        assert cfg.n_layers % ge == 0
+        return cfg.n_layers // ge, ["attn"] * ge, False
+    return cfg.n_layers, ["attn"], False
+
+
+def sublayer_is_global(cfg, i, n_sub):
+    if cfg.global_attn_every:
+        return i == n_sub - 1
+    return True
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_sublayer(key, cfg, kind):
+    ks = jax.random.split(key, 3)
+    if kind == "ssm":
+        init = SSM.init_mamba1 if cfg.ssm_version == 1 else SSM.init_mamba2
+        return {"ln1": jnp.ones((cfg.d_model,), jnp.float32),
+                "ssm": init(ks[0], cfg)}
+    p = {"ln1": jnp.ones((cfg.d_model,), jnp.float32),
+         "attn": L.init_attention(ks[0], cfg),
+         "ln2": jnp.ones((cfg.d_model,), jnp.float32)}
+    if cfg.family == "moe":
+        p["moe"] = MOE.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff)
+    return p
+
+
+def _init_group(key, cfg):
+    _, kinds, _ = group_layout(cfg)
+    ks = jax.random.split(key, len(kinds))
+    return [
+        _init_sublayer(ks[i], cfg, kinds[i]) for i in range(len(kinds))]
+
+
+def init_params(key, cfg) -> Dict[str, Any]:
+    n_groups, kinds, has_shared = group_layout(cfg)
+    k_embed, k_groups, k_shared, k_head, k_norm = jax.random.split(key, 5)
+    params: Dict[str, Any] = {}
+    if not cfg.frontend_stub or cfg.family == "vlm":
+        # padded rows (Megatron-style) keep odd vocabs shardable; the
+        # extra logits are masked in logits_fn and never indexed by tokens
+        params["embed"] = L.init_embed(k_embed, cfg.padded_vocab,
+                                       cfg.d_model)
+    group_keys = jax.random.split(k_groups, n_groups)
+    stacked = jax.vmap(lambda k: _init_group(k, cfg))(group_keys)
+    params["groups"] = stacked
+    if has_shared:
+        ks = jax.random.split(k_shared, 2)
+        params["shared_block"] = {
+            "ln1": jnp.ones((cfg.d_model,), jnp.float32),
+            "attn": L.init_attention(ks[0], cfg),
+            "ln2": jnp.ones((cfg.d_model,), jnp.float32),
+            "mlp": L.init_mlp(ks[1], cfg.d_model, cfg.d_ff),
+        }
+    params["final_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(k_head, (cfg.d_model,
+                                                  cfg.padded_vocab))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# sublayer application
+# ---------------------------------------------------------------------------
+
+def _apply_attn_block(p, x, positions, cfg, policy, is_global, cache, mode,
+                      cache_len=None):
+    h, kv = L.attention(p["attn"], L.rms_norm(x, p["ln1"], cfg.norm_eps),
+                        positions, cfg, is_global=is_global,
+                        cache=cache if mode == "decode" else None)
+    # barrier each projection output in bf16: without it, SPMD sinks the
+    # TP partial-sum all-reduce past the rms_norm f32 upcast and the
+    # residual add, putting f32 tensors on the wire (2x bytes) — §Perf it2.
+    # (a plain sharding constraint does NOT stop the sink; an
+    # optimization_barrier does.)
+    if policy.model_size > 1 and not policy.pure_fsdp:
+        h = jax.lax.optimization_barrier(policy.constrain_tokens(h))
+    x = x + h
+    aux = jnp.zeros((), jnp.float32)
+    xn = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        h2, aux = MOE.moe_ffn(p["moe"], xn, cfg, policy)
+    else:
+        h2 = L.mlp(p["mlp"], xn)
+    if policy.model_size > 1 and not policy.pure_fsdp:
+        h2 = jax.lax.optimization_barrier(policy.constrain_tokens(h2))
+    x = policy.constrain_tokens(x + h2)
+    if mode == "train":
+        new_cache = None
+    elif mode == "prefill":
+        k, v = kv
+        new_cache = L.prefill_to_cache(
+            cfg, k, v, positions,
+            cache_len=cache_len or positions.shape[1],
+            is_global_layer=is_global)
+    else:  # decode: L.attention already returned the updated KVCache
+        new_cache = kv
+    return x, new_cache, aux
+
+
+def _apply_ssm_block(p, x, positions, cfg, policy, cache, mode):
+    h, new_cache = SSM.mamba1(p["ssm"], L.rms_norm(x, p["ln1"], cfg.norm_eps),
+                              cfg, cache) if cfg.ssm_version == 1 else \
+        SSM.mamba2(p["ssm"], L.rms_norm(x, p["ln1"], cfg.norm_eps), cfg,
+                   cache)
+    x = policy.constrain_tokens(x + policy.constrain_tokens(h))
+    if mode == "train":
+        new_cache = None
+    return x, new_cache, jnp.zeros((), jnp.float32)
+
+
+def _apply_group(gp, shared_p, x, positions, cfg, policy, caches, mode,
+                 cache_len=None):
+    """One group: list of sublayers (+ optional shared attention block).
+    caches: dict {"sub": [per-sublayer cache], "shared": cache} or None."""
+    _, kinds, has_shared = group_layout(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    new_sub = []
+    for i, kind in enumerate(kinds):
+        c = caches["sub"][i] if caches is not None else None
+        if kind == "ssm":
+            x, nc, a = _apply_ssm_block(gp[i], x, positions, cfg, policy,
+                                        c, mode)
+        else:
+            x, nc, a = _apply_attn_block(
+                gp[i], x, positions, cfg, policy,
+                sublayer_is_global(cfg, i, len(kinds)), c, mode,
+                cache_len=cache_len)
+        aux += a
+        new_sub.append(nc)
+    new_caches = None
+    if has_shared:
+        c = caches["shared"] if caches is not None else None
+        x, nshared, a = _apply_attn_block(shared_p, x, positions, cfg,
+                                          policy, True, c, mode,
+                                          cache_len=cache_len)
+        aux += a
+        if mode != "train":
+            new_caches = {"sub": new_sub, "shared": nshared}
+    elif mode != "train":
+        new_caches = {"sub": new_sub}
+    return x, new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# full forward
+# ---------------------------------------------------------------------------
+
+def _vocab_parallel_embed(params, tokens, policy):
+    """Embedding lookup for the pure-fsdp layout (batch over all axes,
+    table sharded (V/model, D/data)).  The naive gather makes XLA
+    materialize a FULL (V, D) f32 table grad per device; here each model
+    peer looks its vocab shard up for the whole model ring and a
+    reduce-scatter returns each peer its own tokens — the table grad is
+    then (V/tp, D) local by construction.  Megatron's vocab-parallel
+    embedding, as a shard_map."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as _P
+    mesh = policy.mesh
+    m = policy.model_axis
+    ba = policy.batch_axes
+    bent = ba if len(ba) > 1 else (ba[0] if ba else None)
+    msize = policy.model_size
+    vloc_axis_data = "data" if "data" in mesh.shape else None
+
+    def body(tok, tbl):
+        # tok (B_loc, S); tbl (V/m, D/data)
+        if vloc_axis_data:
+            tbl = jax.lax.all_gather(tbl, vloc_axis_data, axis=1,
+                                     tiled=True)          # (V/m, D)
+        tbl = tbl.astype(COMPUTE_DTYPE)
+        ids = jax.lax.all_gather(tok, m, axis=0, tiled=True)  # (P*B_loc, S)
+        vloc = tbl.shape[0]
+        lo = jax.lax.axis_index(m) * vloc
+        loc = ids - lo
+        ok = (loc >= 0) & (loc < vloc)
+        emb = tbl[jnp.clip(loc, 0, vloc - 1)]              # (P*B_loc, S, D)
+        emb = jnp.where(ok[..., None], emb, 0)
+        return jax.lax.psum_scatter(emb, m, scatter_dimension=0,
+                                    tiled=True)            # (B_loc, S, D)
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(_P(bent, None), _P(m, vloc_axis_data)),
+                   out_specs=_P(bent, None, None),
+                   check_rep=False)
+    return fn(tokens, params["embed"]["table"])
+
+
+def _embed_tokens(params, tokens, cfg, policy):
+    if policy.pure_fsdp and policy.model_axis in policy.batch_axes \
+            and policy.model_size > 1 \
+            and cfg.padded_vocab % policy.model_size == 0:
+        # (non-dividing vocabs — granite 49155, internvl2 92553 — keep the
+        # plain gather; their table sharding degrades via _fit anyway)
+        return _vocab_parallel_embed(params, tokens, policy)
+    return L.embed(params["embed"], tokens)
+
+
+def _embed_inputs(params, batch, cfg, policy):
+    """-> (x (B,S,D) bf16, positions (B,S), label_offset)."""
+    if cfg.family == "vlm":
+        tok_emb = _embed_tokens(params, batch["tokens"], cfg, policy)
+        x = jnp.concatenate(
+            [batch["image_embeds"].astype(COMPUTE_DTYPE), tok_emb], axis=1)
+        offset = batch["image_embeds"].shape[1]
+    elif cfg.frontend_stub:  # audio
+        x = batch["frames"].astype(COMPUTE_DTYPE)
+        offset = 0
+    else:
+        x = _embed_tokens(params, batch["tokens"], cfg, policy)
+        offset = 0
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    return policy.constrain_tokens(x), positions, offset
+
+
+def forward(params, batch, cfg, policy, mode="train", caches=None,
+            positions=None, cache_len=None):
+    """mode train/prefill: batch holds full sequences.
+    mode decode: batch {"tokens": (B,1)} (+ caches, positions (B,1)).
+    Returns (hidden (B,S,D), new_caches, aux)."""
+    if mode == "decode":
+        if cfg.frontend_stub and cfg.family != "vlm":
+            raise ValueError("encoder-only arch has no decode step")
+        x = L.embed(params["embed"], batch["tokens"])
+        pos = positions
+    else:
+        x, pos, _ = _embed_inputs(params, batch, cfg, policy)
+
+    shared_p = params.get("shared_block")
+    group_fn = partial(_apply_group, cfg=cfg, policy=policy, mode=mode,
+                       cache_len=cache_len)
+
+    if cfg.scan_layers:
+        if mode == "train":
+            def body(carry, gp):
+                x, aux = carry
+                raw = lambda g, y: group_fn(g, shared_p, y, pos,
+                                            caches=None)[::2]
+                fn = jax.checkpoint(raw) if cfg.remat else raw
+                x, a = fn(gp, x)
+                return (x, aux + a), None
+
+            (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                       params["groups"])
+            new_caches = None
+        elif mode == "prefill":
+            def body(carry, gp):
+                x, aux = carry
+                x, nc, a = group_fn(gp, shared_p, x, pos, caches=None)
+                return (x, aux + a), nc
+
+            (x, aux), new_caches = jax.lax.scan(
+                body, (x, jnp.zeros((), jnp.float32)), params["groups"])
+        else:  # decode
+            def body(carry, xs):
+                x = carry
+                gp, cc = xs
+                x, nc, _ = group_fn(gp, shared_p, x, pos, caches=cc)
+                return x, nc
+
+            x, new_caches = jax.lax.scan(body, x, (params["groups"], caches))
+            aux = jnp.zeros((), jnp.float32)
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        new_list = []
+        n_groups = group_layout(cfg)[0]
+        for g in range(n_groups):
+            gp = jax.tree.map(lambda t: t[g], params["groups"])
+            cc = jax.tree.map(lambda t: t[g], caches) if caches is not None \
+                else None
+            if mode == "train" and cfg.remat:
+                # same remat policy as the scanned path, so the unrolled
+                # program (used for per-layer cost extrapolation) has
+                # identical per-group flops/bytes.
+                raw = lambda g_, y: group_fn(g_, shared_p, y, pos,
+                                             caches=None)[::2]
+                x, a = jax.checkpoint(raw)(gp, x)
+                nc = None
+            else:
+                x, nc, a = group_fn(gp, shared_p, x, pos, caches=cc)
+            aux += a
+            new_list.append(nc)
+        new_caches = jax.tree.map(lambda *ts: jnp.stack(ts), *new_list) \
+            if new_list and new_list[0] is not None else None
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, new_caches, aux
+
+
+def logits_fn(params, hidden, cfg, policy):
+    head = params["embed"]["table"].T if cfg.tie_embeddings \
+        else params["lm_head"]
+    logits = hidden @ head.astype(hidden.dtype)
+    if cfg.padded_vocab != cfg.vocab_size:
+        # mask pad columns (large-negative, not -inf: keeps lse finite)
+        col = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                       logits.ndim - 1)
+        logits = jnp.where(col < cfg.vocab_size, logits,
+                           jnp.asarray(-1e30, logits.dtype))
+    ba = policy.batch_axes
+    m = policy.model_axis
+    if m in ba:
+        # pure-fsdp CE: batch is resharded off the model axis pre-CE
+        # (see loss_fn) so the vocab can stay model-sharded — keeps the
+        # f32 head-grad partials at (D, V/tp) instead of (D, V) per dev.
+        ba = tuple(a for a in ba if a != m)
+    vocab_axis = m
+    return policy.constrain(logits, jax.sharding.PartitionSpec(
+        ba if len(ba) > 1 else (ba[0] if ba else None),
+        None, vocab_axis))
+
+
+def loss_fn(params, batch, cfg, policy):
+    """Token-level CE (vocab kept sharded; lse/gather reduce over the
+    sharded axis via XLA collectives).  Optionally chunked over sequence
+    (cfg.loss_chunk) to bound the (B, S_chunk, V) logits buffer."""
+    hidden, _, aux = forward(params, batch, cfg, policy, mode="train")
+    if cfg.family == "vlm":
+        hidden = hidden[:, batch["image_embeds"].shape[1]:]
+    labels = batch["labels"]
+    mask = batch.get("loss_mask", jnp.ones_like(labels, jnp.float32))
+
+    m = policy.model_axis
+    if m in policy.batch_axes:
+        # pure-fsdp: hand the model axis back to the vocab for the CE —
+        # batch reshards over the remaining axes (one small collective),
+        # logits and head-grads stay vocab-sharded.
+        ba2 = tuple(a for a in policy.batch_axes if a != m)
+        bent = ba2 if len(ba2) > 1 else (ba2[0] if ba2 else None)
+        from jax.sharding import PartitionSpec as _P
+        hidden = policy.constrain(hidden, _P(bent, None, None))
+        labels = policy.constrain(labels, _P(bent, None))
+        mask = policy.constrain(mask, _P(bent, None))
+
+    def ce(h, y, msk):
+        lg = logits_fn(params, h, cfg, policy).astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        if cfg.ce_onehot:
+            # contraction over the (model-)sharded vocab axis: XLA lowers
+            # this to a local masked sum + small psum of (B, S) instead of
+            # replicating the logits for the gather.
+            onehot = jax.nn.one_hot(y, lg.shape[-1], dtype=lg.dtype)
+            true = jnp.einsum("bsv,bsv->bs", lg, onehot)
+        else:
+            true = jnp.take_along_axis(lg, y[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - true) * msk), jnp.sum(msk)
+
+    if cfg.loss_chunk and hidden.shape[1] % cfg.loss_chunk == 0 and \
+            hidden.shape[1] > cfg.loss_chunk:
+        nch = hidden.shape[1] // cfg.loss_chunk
+        resh = lambda t: t.reshape(t.shape[0], nch, cfg.loss_chunk,
+                                   *t.shape[2:]).swapaxes(0, 1)
+
+        def body(carry, xs):
+            s, c = carry
+            h, y, msk = xs
+            ds, dc = ce(h, y, msk)
+            return (s + ds, c + dc), None
+
+        # checkpointed body: otherwise the scan vjp keeps one f32 head/
+        # table-grad partial per chunk alive simultaneously
+        (tot, cnt), _ = jax.lax.scan(
+            jax.checkpoint(body), (jnp.zeros(()), jnp.zeros(())),
+            (resh(hidden), resh(labels), resh(mask)))
+    else:
+        tot, cnt = ce(hidden, labels, mask)
+    loss = tot / jnp.maximum(cnt, 1.0)
+    return loss + cfg.router_aux_coef * aux, {"ce": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# cache construction (decode input specs / serve init)
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg, batch, cache_len):
+    """Abstract-friendly cache pytree for all groups (stacked leading G)."""
+    n_groups, kinds, has_shared = group_layout(cfg)
+
+    def one_group():
+        sub = []
+        for i, kind in enumerate(kinds):
+            if kind == "ssm":
+                sub.append(SSM.init_ssm_cache(cfg, batch))
+            else:
+                sub.append(L.init_kv_cache(
+                    cfg, batch, cache_len,
+                    is_global_layer=sublayer_is_global(cfg, i, len(kinds))))
+        out = {"sub": sub}
+        if has_shared:
+            out["shared"] = L.init_kv_cache(cfg, batch, cache_len, True)
+        return out
+
+    g = one_group()
+    return jax.tree.map(
+        lambda t: jnp.broadcast_to(t[None], (n_groups,) + t.shape), g)

@@ -1,0 +1,69 @@
+"""Gradient compression with error feedback for the cross-pod (DCI) data-
+parallel axis.
+
+On hardware the quantized payload is what crosses the pod interconnect: the
+train step applies ``compress`` to the gradient *before* the optimizer and
+carries the quantization error to the next step (error feedback keeps the
+update unbiased in the long run; cf. 1-bit Adam / EF-SGD lines of work).
+We implement int8 per-tensor symmetric quantization and top-k sparsification;
+EXPERIMENTS.md §Perf counts the 4x/8x byte reduction against the collective
+roofline term of the pod axis."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    kind: str = "none"        # none | int8 | topk
+    topk_frac: float = 0.01
+
+
+class CompressionState(NamedTuple):
+    error: Any  # pytree like grads, f32
+
+
+def init(grads_shape) -> CompressionState:
+    return CompressionState(error=jax.tree.map(
+        lambda t: jnp.zeros(t.shape, jnp.float32), grads_shape))
+
+
+def _int8_roundtrip(g):
+    scale = jnp.max(jnp.abs(g)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def _topk_roundtrip(g, frac):
+    flat = g.reshape(-1)
+    k = max(1, int(flat.shape[0] * frac))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    return jnp.where(jnp.abs(g) >= thresh, g, 0.0)
+
+
+def compress(cfg: CompressionConfig, grads, state: CompressionState):
+    """-> (decompressed grads as seen after the collective, new state,
+    bytes_factor: payload bytes / f32 bytes)."""
+    if cfg.kind == "none":
+        return grads, state, 1.0
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        if cfg.kind == "int8":
+            out = _int8_roundtrip(g32)
+        else:
+            out = _topk_roundtrip(g32, cfg.topk_frac)
+        return out.astype(g.dtype), g32 - out
+
+    pairs = jax.tree.map(one, grads, state.error)
+    out = jax.tree.map(lambda p: p[0], pairs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    err = jax.tree.map(lambda p: p[1], pairs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    factor = 0.25 if cfg.kind == "int8" else (cfg.topk_frac * 2)
+    return out, CompressionState(error=err), factor

@@ -1,0 +1,174 @@
+"""Production training loop: step function from launch.steps, data from the
+(selection-)pipeline, async checkpointing, fault-tolerance hooks.
+
+Large-scale runnability features exercised here (and tested in
+tests/test_runtime.py):
+
+* **checkpoint/restart** — state = (params, opt, data cursor, rng); restore
+  is resume-exact because the pipeline is cursor-addressable.
+* **straggler mitigation** — per-step wall-clock EWMA with a deadline
+  multiple; a step exceeding it is recorded and (in a real deployment)
+  triggers the elastic path below.  On a synchronous TPU pod stragglers are
+  machine-level, so mitigation = evict + re-mesh, not work stealing.
+* **elastic re-mesh** — on simulated machine loss the runner rebuilds the
+  mesh with fewer data shards and re-shards params/opt from the checkpoint.
+  The *selector* state needs no migration at all: the paper's random
+  partition is oblivious to m (PartitionAndSample just re-draws), which is
+  recorded in DESIGN.md as a provable elasticity win of the technique.
+* **preemption signal** — a cooperative `should_stop` callable checked per
+  step (SIGTERM handler in a real deployment), with a final sync save.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.data.selection import SelectionPipeline
+from repro.launch.steps import train_step_bundle
+from repro.optim import adamw
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    ckpt_async: bool = True
+    log_every: int = 10
+    straggler_factor: float = 3.0   # deadline = factor * EWMA(step time)
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class StepRecord:
+    step: int
+    loss: float
+    seconds: float
+    straggler: bool
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, shape: ShapeSpec, mesh,
+                 data: DataConfig = None, train: TrainConfig = None,
+                 opt: adamw.AdamWConfig = None, select: bool = False,
+                 verbose: bool = False):
+        self.cfg, self.shape, self.mesh = cfg, shape, mesh
+        self.train_cfg = train or TrainConfig()
+        self.data_cfg = data or DataConfig(
+            global_batch=shape.global_batch, seq_len=shape.seq_len)
+        self.opt_cfg = opt or adamw.AdamWConfig()
+        self.verbose = verbose
+
+        self.bundle = train_step_bundle(cfg, shape, mesh, self.opt_cfg)
+        self.policy = self.bundle.policy
+        self._step_fn = jax.jit(
+            self.bundle.fn,
+            in_shardings=self.bundle.in_shardings,
+            out_shardings=self.bundle.out_shardings,
+            donate_argnums=self.bundle.donate)
+
+        base = SyntheticLM(cfg, self.data_cfg)
+        self.pipeline = SelectionPipeline(base, self.policy) if select \
+            else base
+
+        self.ckpt = Checkpointer(self.train_cfg.ckpt_dir) \
+            if self.train_cfg.ckpt_dir else None
+        self.history: list[StepRecord] = []
+        self._ewma: Optional[float] = None
+
+    # ------------------------------------------------------------------
+    def init_state(self):
+        from repro.models.model import build_model
+        model = build_model(self.cfg)
+        with self.mesh:
+            params = jax.jit(
+                model.init,
+                out_shardings=self.bundle.in_shardings[0])(
+                jax.random.PRNGKey(self.train_cfg.seed))
+            opt = jax.jit(
+                adamw.init,
+                out_shardings=self.bundle.in_shardings[1])(params)
+        return params, opt, 0
+
+    def restore_or_init(self):
+        if self.ckpt and self.ckpt.latest_step() is not None:
+            params_abs, opt_abs, _ = self.bundle.abstract_args
+            tmpl = {"params": params_abs, "opt": opt_abs,
+                    "cursor": jnp.zeros((), jnp.int32)}
+            state, step = self.ckpt.restore(tmpl)
+            with self.mesh:
+                params = jax.device_put(state["params"],
+                                        self.bundle.in_shardings[0])
+                opt = jax.device_put(state["opt"],
+                                     self.bundle.in_shardings[1])
+            return params, opt, int(state["cursor"])
+        return self.init_state()
+
+    def save(self, params, opt, step: int, blocking: bool = False):
+        if not self.ckpt:
+            return
+        state = {"params": params, "opt": opt,
+                 "cursor": jnp.asarray(step, jnp.int32)}
+        self.ckpt.save(step, state,
+                       blocking=blocking or not self.train_cfg.ckpt_async)
+
+    # ------------------------------------------------------------------
+    def run(self, should_stop: Callable[[], bool] = None,
+            on_step: Callable[[StepRecord], None] = None):
+        params, opt, start = self.restore_or_init()
+        tc = self.train_cfg
+        step = start
+        for step in range(start, tc.steps):
+            if should_stop and should_stop():
+                break
+            batch = self.pipeline.batch_at(step)
+            batch = {k: jax.device_put(v, self.policy.sharding(
+                self.policy.batch_first(v.shape)))
+                for k, v in batch.items()}
+            t0 = time.time()
+            with self.mesh:
+                params, opt, metrics = self._step_fn(params, opt, batch)
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+
+            ew = self._ewma
+            self._ewma = dt if ew is None else 0.9 * ew + 0.1 * dt
+            straggler = ew is not None and dt > tc.straggler_factor * ew
+            rec = StepRecord(step, loss, dt, straggler)
+            self.history.append(rec)
+            if on_step:
+                on_step(rec)
+            if self.verbose and step % tc.log_every == 0:
+                print(f"[train] step={step} loss={loss:.4f} "
+                      f"dt={dt * 1e3:.0f}ms"
+                      f"{' STRAGGLER' if straggler else ''}", flush=True)
+            if self.ckpt and (step + 1) % tc.ckpt_every == 0:
+                self.save(params, opt, step + 1)
+        if self.ckpt:
+            self.save(params, opt, step + 1, blocking=True)
+            self.ckpt.wait()
+        return params, opt
+
+
+# ---------------------------------------------------------------------------
+# elastic re-mesh
+# ---------------------------------------------------------------------------
+
+def elastic_remesh(trainer: Trainer, new_mesh) -> Trainer:
+    """Machine loss/gain: rebuild the trainer on `new_mesh`, carrying state
+    through the checkpoint.  The paper's selection state migrates for free
+    (random partition is oblivious to m); params/opt re-shard on restore."""
+    t2 = Trainer(trainer.cfg, trainer.shape, new_mesh,
+                 data=trainer.data_cfg, train=trainer.train_cfg,
+                 opt=trainer.opt_cfg,
+                 select=isinstance(trainer.pipeline, SelectionPipeline),
+                 verbose=trainer.verbose)
+    return t2

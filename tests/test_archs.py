@@ -1,0 +1,136 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch, reduced
+config, one train step on CPU — asserts output shapes, finite loss, and
+gradient flow; decoder archs additionally run prefill+decode shape checks."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_config
+from repro.models.model import build_model
+from repro.models.sharding import make_policy
+
+jax.config.update("jax_platform_name", "cpu")
+MESH = jax.make_mesh((1, 1), ("data", "model"))
+B, S = 2, 64
+
+
+def _batch(cfg, key, train=True):
+    if cfg.family == "vlm":
+        s_txt = S - cfg.num_image_tokens
+        b = {"tokens": jax.random.randint(key, (B, s_txt), 0, cfg.vocab_size),
+             "image_embeds": jax.random.normal(
+                 key, (B, cfg.num_image_tokens, cfg.d_model),
+                 jnp.bfloat16) * 0.02}
+        if train:
+            b["labels"] = jnp.ones((B, s_txt), jnp.int32)
+        return b
+    if cfg.frontend_stub:
+        b = {"frames": jax.random.normal(key, (B, S, cfg.d_model),
+                                         jnp.bfloat16)}
+        if train:
+            b["labels"] = jnp.ones((B, S), jnp.int32)
+        return b
+    b = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if train:
+        b["labels"] = jnp.ones((B, S), jnp.int32)
+    return b
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_train_step_smoke(name):
+    cfg = get_config(name).reduced()
+    model = build_model(cfg)
+    policy = make_policy(MESH, B, "train")
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+
+    def loss_of(p):
+        return model.loss(p, batch, policy)[0]
+
+    with MESH:
+        loss, grads = jax.jit(jax.value_and_grad(loss_of))(params)
+    assert np.isfinite(float(loss)), f"{name}: non-finite loss"
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                         for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0, \
+        f"{name}: bad grad norm {gnorm}"
+
+
+@pytest.mark.parametrize("name", [a for a in ARCH_IDS
+                                  if get_config(a).supports_decode])
+def test_prefill_decode_shapes(name):
+    cfg = get_config(name).reduced()
+    model = build_model(cfg)
+    policy = make_policy(MESH, B, "decode")
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(cfg, jax.random.PRNGKey(1), train=False)
+    with MESH:
+        logits, caches = model.prefill(params, batch, policy,
+                                       cache_len=S + 4)
+        assert logits.shape == (B, 1, cfg.vocab_size)
+        tok = jnp.ones((B, 1), jnp.int32)
+        pos = jnp.full((B, 1), S, jnp.int32)
+        logits2, caches2 = model.decode_step(params, caches, tok, pos, policy)
+    assert logits2.shape == (B, 1, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits2, np.float32)).all()
+    # cache pytree structure preserved
+    assert jax.tree.structure(caches) == jax.tree.structure(caches2)
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_full_config_exact_assignment(name):
+    """The FULL configs carry the exact assigned figures (never reduced)."""
+    cfg = get_config(name)
+    expected = {
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+        "h2o-danube-1.8b": (24, 2560, 32, 8, 6912, 32000),
+        "granite-3-2b": (40, 2048, 32, 8, 8192, 49155),
+        "qwen3-14b": (40, 5120, 40, 8, 17408, 151936),
+        "qwen3-1.7b": (28, 2048, 16, 8, 6144, 151936),
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 5632, 151936),
+        "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+        "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+        "falcon-mamba-7b": (64, 4096, 0, 0, 0, 65024),
+        "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+    }[name]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.d_ff if cfg.family != "moe" else
+           (cfg.d_ff if name.startswith("qwen2") or
+            name.startswith("llama4") else cfg.d_ff),
+           cfg.vocab_size)
+    if name == "qwen2-moe-a2.7b":
+        assert cfg.d_ff_expert == 1408 and cfg.n_experts == 60 and \
+            cfg.experts_per_token == 4
+    if name == "llama4-scout-17b-a16e":
+        assert cfg.n_experts == 16 and cfg.experts_per_token == 1
+    if name in ("zamba2-2.7b",):
+        assert cfg.ssm_state == 64
+    if name == "falcon-mamba-7b":
+        assert cfg.ssm_state == 16 and cfg.ssm_version == 1
+    assert got == expected, f"{name}: {got} != {expected}"
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_shape_eligibility(name):
+    cfg = get_config(name)
+    shapes = cfg.shapes()
+    assert "train_4k" in shapes and "prefill_32k" in shapes
+    if cfg.is_encoder:
+        assert "decode_32k" not in shapes and "long_500k" not in shapes
+    if name in ("zamba2-2.7b", "falcon-mamba-7b", "h2o-danube-1.8b"):
+        assert "long_500k" in shapes
+    if name in ("granite-3-2b", "qwen3-14b", "qwen3-1.7b", "qwen2-moe-a2.7b",
+                "internvl2-26b", "llama4-scout-17b-a16e"):
+        assert "long_500k" not in shapes  # full/global attention
+
+
+def test_param_counts_near_nameplate():
+    """Analytic param counts line up with the nameplate model sizes."""
+    approx = {"qwen3-14b": 14.8e9, "falcon-mamba-7b": 7.27e9,
+              "granite-3-2b": 2.5e9, "qwen3-1.7b": 2.0e9,
+              "hubert-xlarge": 0.96e9}
+    for name, target in approx.items():
+        n = get_config(name).param_count()
+        assert 0.7 * target < n < 1.35 * target, f"{name}: {n:.3g}"

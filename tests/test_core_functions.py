@@ -1,0 +1,101 @@
+"""Property tests: the oracles really are monotone submodular, and their
+state-based marginals agree with direct f(S+e) - f(S) evaluation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AdversarialThreshold, FacilityLocation,
+                        FeatureCoverage, WeightedCoverage)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand_feats(rng, n, d, kind):
+    if kind == "coverage":
+        return (rng.random((n, d)) < 0.3).astype(np.float32)
+    return (rng.random((n, d)).astype(np.float32)) ** 2
+
+
+def _oracles(d, rng):
+    ref = jnp.asarray(rng.random((8, d)).astype(np.float32))
+    return {
+        "feature_coverage": (FeatureCoverage(feat_dim=d), "dense"),
+        "facility_location": (FacilityLocation(feat_dim=d, reference=ref), "dense"),
+        "weighted_coverage": (WeightedCoverage(
+            feat_dim=d, weights=jnp.asarray(rng.random(d).astype(np.float32))),
+            "coverage"),
+    }
+
+
+def _f_of(oracle, feats, subset):
+    st_ = oracle.init_state()
+    if len(subset):
+        aux = oracle.prep(st_, feats[np.asarray(subset)])
+        for i in range(len(subset)):
+            st_ = oracle.add(st_, jax.tree.map(lambda a: a[i], aux))
+    return float(oracle.value(st_))
+
+
+@pytest.mark.parametrize("name", ["feature_coverage", "facility_location",
+                                  "weighted_coverage"])
+@given(seed=st.integers(0, 2**16))
+@settings(max_examples=12, deadline=None)
+def test_monotone_submodular(name, seed):
+    rng = np.random.default_rng(seed)
+    d, n = 6, 10
+    oracle, kind = _oracles(d, rng)[name]
+    feats = jnp.asarray(_rand_feats(rng, n, d, kind))
+
+    A = sorted(rng.choice(n, size=3, replace=False).tolist())
+    extra = [i for i in range(n) if i not in A]
+    B = sorted(A + rng.choice(extra, size=2, replace=False).tolist())
+    e = int(rng.choice([i for i in range(n) if i not in B]))
+
+    fA, fB = _f_of(oracle, feats, A), _f_of(oracle, feats, B)
+    fAe, fBe = _f_of(oracle, feats, A + [e]), _f_of(oracle, feats, B + [e])
+    tol = 1e-4 * max(1.0, abs(fB))
+    assert fAe - fA >= -tol, "monotonicity (A)"
+    assert fBe - fB >= -tol, "monotonicity (B)"
+    assert (fAe - fA) - (fBe - fB) >= -tol, "diminishing returns"
+
+
+@pytest.mark.parametrize("name", ["feature_coverage", "facility_location",
+                                  "weighted_coverage"])
+def test_marginals_match_direct_evaluation(name):
+    rng = np.random.default_rng(0)
+    d, n = 8, 16
+    oracle, kind = _oracles(d, rng)[name]
+    feats = jnp.asarray(_rand_feats(rng, n, d, kind))
+
+    S = [1, 4, 9]
+    st_ = oracle.init_state()
+    aux_all = oracle.prep(st_, feats)
+    for i in S:
+        st_ = oracle.add(st_, jax.tree.map(lambda a: a[i], aux_all))
+    gains = np.asarray(oracle.marginals(st_, aux_all))
+    fS = _f_of(oracle, feats, S)
+    for e in range(n):
+        direct = _f_of(oracle, feats, S + [e]) - fS
+        np.testing.assert_allclose(gains[e], direct, rtol=2e-4, atol=2e-5)
+
+
+def test_adversarial_oracle_closed_form():
+    k, vstar = 5, 1.0
+    oracle = AdversarialThreshold(feat_dim=2, k=k, vstar=vstar)
+    feats = jnp.asarray([[0.5, 0.0], [0.7, 0.0], [1.0, 1.0], [1.0, 1.0]],
+                        jnp.float32)
+    st_ = oracle.init_state()
+    aux = oracle.prep(st_, feats)
+    # add decoy 0 and one opt element
+    st_ = oracle.add(st_, aux[0])
+    st_ = oracle.add(st_, aux[2])
+    # f = 0.5 + (1 - 0.5/5)*1*1 = 1.4
+    np.testing.assert_allclose(float(oracle.value(st_)), 0.5 + 0.9, rtol=1e-6)
+    gains = np.asarray(oracle.marginals(st_, aux))
+    # decoy marginal: v (1 - nO/k) = 0.7*0.8
+    np.testing.assert_allclose(gains[1], 0.7 * 0.8, rtol=1e-6)
+    # opt marginal: (1 - sumS/(k vstar)) vstar = 0.9
+    np.testing.assert_allclose(gains[3], 0.9, rtol=1e-6)

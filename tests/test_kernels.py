@@ -1,0 +1,188 @@
+"""Pallas kernel validation: shape/dtype sweeps against the ref.py oracles
+(interpret=True on CPU), plus hypothesis property tests on the kernel's
+algebraic invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.facility_marginals import (facility_marginals,
+                                              rectified_residual_sum)
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+SHAPES_FM = [
+    # (C, r, d) — exact tile multiples, ragged, tiny, tall, wide
+    (256, 512, 64), (256, 512, 128), (100, 300, 96), (8, 128, 16),
+    (1, 1, 1), (513, 257, 33), (1024, 128, 256), (37, 1024, 8),
+]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("C,r,d", SHAPES_FM)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_facility_marginals_matches_ref(C, r, d, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(C * 7 + r), 3)
+    cand = _rand(k1, (C, d), dtype)
+    refs = _rand(k2, (r, d), dtype)
+    state = jnp.abs(_rand(k3, (r,), jnp.float32))
+    got = facility_marginals(cand, refs, state, interpret=True)
+    want = ref.facility_marginals(cand, refs, state)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol * d)
+
+
+@pytest.mark.parametrize("C,r", [(256, 512), (100, 300), (1, 1), (513, 129),
+                                 (8, 2048)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_rectified_residual_sum_matches_ref(C, r, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(C + r))
+    aux = jnp.abs(_rand(k1, (C, r), dtype))
+    state = jnp.abs(_rand(k2, (r,), jnp.float32))
+    got = rectified_residual_sum(aux, state, interpret=True)
+    want = ref.rectified_residual_sum(aux.astype(jnp.float32), state)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol * r)
+
+
+@pytest.mark.parametrize("block_c,block_r", [(8, 128), (64, 128), (256, 512),
+                                             (16, 256)])
+def test_block_shape_invariance(block_c, block_r):
+    """Output must not depend on the tiling."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    cand = _rand(k1, (200, 48), jnp.float32)
+    refs = _rand(k2, (333, 48), jnp.float32)
+    state = jnp.abs(_rand(k3, (333,), jnp.float32))
+    base = ref.facility_marginals(cand, refs, state)
+    got = facility_marginals(cand, refs, state, block_c=block_c,
+                             block_r=block_r, interpret=True)
+    np.testing.assert_allclose(got, base, rtol=1e-5, atol=1e-4)
+
+
+def test_ops_dispatch_cpu_interpret():
+    """ops.* entry points run (interpret) on CPU and match ref."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(3), 3)
+    cand = _rand(k1, (64, 32), jnp.float32)
+    refs = _rand(k2, (96, 32), jnp.float32)
+    state = jnp.abs(_rand(k3, (96,), jnp.float32))
+    np.testing.assert_allclose(ops.facility_marginals(cand, refs, state),
+                               ref.facility_marginals(cand, refs, state),
+                               rtol=1e-5, atol=1e-4)
+    aux = jnp.maximum(cand @ refs.T, 0.0)
+    np.testing.assert_allclose(ops.rectified_residual_sum(aux, state),
+                               ref.rectified_residual_sum(aux, state),
+                               rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# property tests: kernel output obeys the submodular-marginal invariants
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 40), st.integers(2, 60), st.integers(1, 16),
+       st.integers(0, 2 ** 31 - 1))
+def test_marginals_nonneg_and_monotone_in_state(C, r, d, seed):
+    """gains >= 0 always; pointwise-larger state => pointwise-smaller gains
+    (diminishing returns as the cover grows)."""
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(seed), 4)
+    cand = jax.random.normal(k1, (C, d))
+    refs = jax.random.normal(k2, (r, d))
+    st0 = jnp.abs(jax.random.normal(k3, (r,)))
+    bump = jnp.abs(jax.random.normal(k4, (r,)))
+    g0 = facility_marginals(cand, refs, st0, interpret=True)
+    g1 = facility_marginals(cand, refs, st0 + bump, interpret=True)
+    assert bool(jnp.all(g0 >= 0)) and bool(jnp.all(g1 <= g0 + 1e-5))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 30), st.integers(1, 50), st.integers(1, 12),
+       st.integers(0, 2 ** 31 - 1))
+def test_zero_state_reduces_to_sum_of_sims(C, r, d, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    cand = jax.random.normal(k1, (C, d))
+    refs = jax.random.normal(k2, (r, d))
+    got = facility_marginals(cand, refs, jnp.zeros((r,)), interpret=True)
+    want = jnp.sum(jnp.maximum(cand @ refs.T, 0.0), axis=-1)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4)
+
+
+def test_oracle_kernel_path_consistency():
+    """FacilityLocation(use_kernel=True) equals the pure-jnp oracle path."""
+    from repro.core.functions import FacilityLocation
+
+    k1, k2 = jax.random.split(jax.random.PRNGKey(11))
+    refs = jax.random.normal(k1, (64, 24))
+    f_jnp = FacilityLocation(feat_dim=24, reference=refs, use_kernel=False)
+    f_krn = FacilityLocation(feat_dim=24, reference=refs, use_kernel=True)
+    cand = jax.random.normal(k2, (40, 24))
+    st0 = f_jnp.init_state()
+    aux = f_jnp.prep(st0, cand)
+    np.testing.assert_allclose(f_krn.marginals(st0, aux),
+                               f_jnp.marginals(st0, aux),
+                               rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# coverage_marginals kernel
+# ---------------------------------------------------------------------------
+
+from repro.kernels.coverage_marginals import coverage_marginals  # noqa: E402
+
+SHAPES_CM = [
+    (256, 512), (100, 96), (8, 128), (1, 1), (513, 257), (1024, 64),
+]
+
+
+@pytest.mark.parametrize("C,d", SHAPES_CM)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("weighted", [False, True])
+def test_coverage_marginals_matches_ref(C, d, dtype, weighted):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(C * 13 + d), 3)
+    x = jnp.abs(_rand(k1, (C, d), dtype))          # coverage needs x >= 0
+    state = jnp.abs(_rand(k2, (d,), jnp.float32))
+    w = jnp.abs(_rand(k3, (d,), jnp.float32)) if weighted else None
+    got = coverage_marginals(x, state, w, interpret=True)
+    want = ref.coverage_marginals(x, state, w)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 200), st.integers(1, 160), st.integers(0, 2 ** 31))
+def test_coverage_marginals_property(C, d, seed):
+    """Property: marginals are nonnegative (monotone f) and DECREASE as the
+    state grows (submodularity), and the kernel agrees with ref."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jnp.abs(jax.random.normal(k1, (C, d)))
+    st0 = jnp.abs(jax.random.normal(k2, (d,)))
+    st1 = st0 + jnp.abs(jax.random.normal(k3, (d,)))   # larger state
+    g0 = coverage_marginals(x, st0, interpret=True)
+    g1 = coverage_marginals(x, st1, interpret=True)
+    assert np.all(np.asarray(g0) >= -1e-6)
+    assert np.all(np.asarray(g1) <= np.asarray(g0) + 1e-5)  # submodular
+    np.testing.assert_allclose(np.asarray(g0),
+                               np.asarray(ref.coverage_marginals(x, st0)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_feature_coverage_oracle_kernel_route():
+    """FeatureCoverage(use_kernel=True) == plain oracle end-to-end."""
+    from repro.core import FeatureCoverage
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.random((64, 32)).astype(np.float32))
+    st0 = jnp.asarray(rng.random(32).astype(np.float32))
+    plain = FeatureCoverage(feat_dim=32)
+    fused = FeatureCoverage(feat_dim=32, use_kernel=True)
+    np.testing.assert_allclose(
+        np.asarray(plain.marginals(st0, X)),
+        np.asarray(fused.marginals(st0, X)), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,170 @@
+"""Correctness tests for the §Perf features: the optimized paths must be
+numerically equivalent to the plain ones (sharding/layout changes may not
+change math)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ShapeSpec, get_config
+from repro.core import FeatureCoverage
+from repro.core.functions import TPOracle
+from repro.launch.mesh import make_mesh_for
+from repro.launch.steps import train_step_bundle
+from repro.models.sharding import make_policy
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _bundle_outputs(cfg, shape, mesh, seed=0):
+    b = train_step_bundle(cfg, shape, mesh)
+    from repro.models.model import build_model
+    from repro.optim import adamw
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    opt = adamw.init(params)
+    key = jax.random.PRNGKey(seed + 1)
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+             "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    with mesh:
+        p2, o2, metrics = jax.jit(b.fn)(params, opt, batch)
+    return p2, metrics
+
+
+def test_microbatch_equivalence():
+    """mb=2 gradient accumulation == single-batch step (same total grad)."""
+    cfg1 = get_config("qwen3-1.7b").reduced()
+    cfg2 = dataclasses.replace(cfg1, microbatches=2)
+    shape = ShapeSpec("t", 64, 4, "train")
+    mesh = make_mesh_for(1, model_parallel=1)
+    p1, m1 = _bundle_outputs(cfg1, shape, mesh)
+    p2, m2 = _bundle_outputs(cfg2, shape, mesh)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=2e-2)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=5e-2, atol=5e-3)
+
+
+def test_q_block_equivalence():
+    """Double-blocked flash attention == single-blocked (same forward)."""
+    from repro.models import layers as L
+    rng = np.random.default_rng(0)
+    B, S, KV, G, hd = 2, 128, 2, 2, 16
+    q = jnp.asarray(rng.normal(size=(B, S, KV, G, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, hd)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S)).astype(jnp.int32)
+    base = L.blockwise_attention(q, k, v, pos, pos, causal=True, window=0,
+                                 chunk=0, kv_block=32, q_block=0)
+    blk = L.blockwise_attention(q, k, v, pos, pos, causal=True, window=0,
+                                chunk=0, kv_block=32, q_block=32)
+    np.testing.assert_allclose(np.asarray(base), np.asarray(blk),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ce_onehot_equivalence():
+    """One-hot CE == take_along_axis CE."""
+    cfg1 = get_config("granite-3-2b").reduced()
+    cfg2 = dataclasses.replace(cfg1, ce_onehot=True)
+    shape = ShapeSpec("t", 64, 2, "train")
+    mesh = make_mesh_for(1, model_parallel=1)
+    _, m1 = _bundle_outputs(cfg1, shape, mesh)
+    _, m2 = _bundle_outputs(cfg2, shape, mesh)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-4)
+
+
+def test_pure_fsdp_smoke_train_step():
+    """parallelism=fsdp lowers and runs on the smoke mesh (policy rules
+    degrade gracefully to 1 device)."""
+    cfg = dataclasses.replace(get_config("qwen3-1.7b").reduced(),
+                              parallelism="fsdp", head_fsdp=False)
+    shape = ShapeSpec("t", 64, 4, "train")
+    mesh = make_mesh_for(1, model_parallel=1)
+    _, m = _bundle_outputs(cfg, shape, mesh)
+    assert np.isfinite(float(m["loss"]))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 6), st.integers(1, 4))
+def test_tp_oracle_matches_full_oracle(dpow, seed):
+    """TPOracle over a sharded feature dim == full-width oracle.
+
+    On one device the psum over a missing axis... needs a mesh; instead we
+    check the algebra: marginals of the full oracle equal the sum of
+    per-shard marginals (the exact quantity TPOracle psums)."""
+    d = 2 ** dpow * 4
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.random((32, d)).astype(np.float32))
+    full = FeatureCoverage(feat_dim=d)
+    st_f = full.init_state()
+    m_full = full.marginals(st_f, full.prep(st_f, X))
+    parts = []
+    tp = 4
+    for i in range(tp):
+        sh = FeatureCoverage(feat_dim=d // tp)
+        Xs = X[:, i * (d // tp):(i + 1) * (d // tp)]
+        st_s = sh.init_state()
+        parts.append(sh.marginals(st_s, sh.prep(st_s, Xs)))
+    np.testing.assert_allclose(np.asarray(m_full),
+                               np.asarray(sum(parts)), rtol=1e-5)
+
+
+def test_seq_shard_policy_rules():
+    """Prefill under pure_fsdp spills S onto the idle model axis; train at
+    full batch keeps batch over all axes; decode never seq-shards."""
+    mesh = make_mesh_for(1, model_parallel=1)  # smoke: axes size 1
+    p = make_policy(mesh, 4, "prefill", pure_fsdp=True)
+    # model axis of size 1: batch consumes it trivially, no spill on smoke
+    assert p.seq_shard is None or p.mesh.shape.get("model", 1) == 1
+    # the rule itself (unit-level): fake a policy with an un-consumed axis
+    import repro.models.sharding as SH
+    from jax.sharding import PartitionSpec as P
+    pol = SH.ShardingPolicy(mesh=mesh, global_batch=4, kind="prefill",
+                            pure_fsdp=True, seq_shard="model")
+    spec = pol.batch_first((4, 64, 32))
+    assert isinstance(spec, P)
+
+
+def test_vocab_parallel_embed_smoke():
+    """_vocab_parallel_embed == plain embed on a 1-device mesh."""
+    from repro.models import transformer as T
+    from repro.models import layers as L
+    cfg = dataclasses.replace(get_config("qwen3-1.7b").reduced(),
+                              parallelism="fsdp", head_fsdp=False)
+    mesh = make_mesh_for(1, model_parallel=1)
+    policy = make_policy(mesh, 4, "train", head_fsdp=False, pure_fsdp=True)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
+                              cfg.vocab_size)
+    with mesh:
+        out = T._embed_tokens(params, toks, cfg, policy)
+        ref = L.embed(params["embed"], toks)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=1e-2)
+
+
+def test_moe_a2a_matches_replicated():
+    """ZeRO+EP a2a dispatch == the replicated-buffer dispatch (1 device:
+    both degenerate to local compute, same routing math)."""
+    from repro.models import moe as MOE
+    cfg = get_config("qwen2-moe-a2.7b").reduced()
+    mesh = make_mesh_for(1, model_parallel=1)
+    pol_tp = make_policy(mesh, 2, "train")
+    pol_fs = make_policy(mesh, 2, "train", pure_fsdp=True)
+    p = MOE.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model),
+                          jnp.float32)
+    with mesh:
+        y1, a1 = MOE.moe_ffn(p, x, cfg, pol_tp)
+        y2, a2 = MOE.moe_ffn(p, x, cfg, pol_fs)
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32),
+                               rtol=2e-2, atol=2e-3)

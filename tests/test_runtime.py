@@ -1,0 +1,149 @@
+"""Fault-tolerance & runtime tests: checkpoint/restart exactness, straggler
+detection, elastic re-mesh, preemption, and the selection pipeline in the
+training loop."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.base import ShapeSpec, get_config
+from repro.data.pipeline import DataConfig
+from repro.launch.mesh import make_mesh_for
+from repro.optim import adamw
+from repro.runtime.trainer import StepRecord, TrainConfig, Trainer, \
+    elastic_remesh
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = get_config("qwen3-1.7b").reduced()
+SHAPE = ShapeSpec("t", 64, 4, "train")
+
+
+def _mesh():
+    return make_mesh_for(len(jax.devices()), model_parallel=1)
+
+
+def _trainer(tmp, steps=4, **kw):
+    return Trainer(CFG, SHAPE, _mesh(),
+                   data=DataConfig(global_batch=4, seq_len=64),
+                   train=TrainConfig(steps=steps, ckpt_dir=tmp,
+                                     ckpt_every=2, log_every=100),
+                   opt=adamw.AdamWConfig(lr=1e-3, warmup_steps=2), **kw)
+
+
+def test_checkpoint_resume_exact():
+    """Train 4 steps straight vs 2 + checkpoint + resume 2: identical
+    params (the checkpoint carries params, opt state and data cursor)."""
+    with tempfile.TemporaryDirectory() as tmp1, \
+            tempfile.TemporaryDirectory() as tmp2:
+        t_full = _trainer(tmp1, steps=4)
+        p_full, _ = t_full.run()
+
+        t_a = _trainer(tmp2, steps=2)
+        t_a.run()
+        t_b = _trainer(tmp2, steps=4)
+        p_resumed, _ = t_b.run()
+        assert t_b.history[0].step == 2  # resumed, not restarted
+
+        for a, b in zip(jax.tree.leaves(p_full), jax.tree.leaves(p_resumed)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=2e-5, atol=2e-5)
+
+
+def test_checkpointer_atomic_and_rotating():
+    with tempfile.TemporaryDirectory() as tmp:
+        ck = Checkpointer(tmp, keep=2)
+        state = {"x": jnp.arange(4.0), "c": jnp.asarray(3, jnp.int32)}
+        for s in (1, 2, 3):
+            ck.save(s, state, blocking=True)
+        assert ck.all_steps() == [2, 3]
+        got, step = ck.restore({"x": jnp.zeros(4), "c": jnp.zeros((), jnp.int32)})
+        assert step == 3
+        np.testing.assert_array_equal(np.asarray(got["x"]), np.arange(4.0))
+        # tree mismatch is an error, not silent corruption
+        with pytest.raises(ValueError):
+            ck.restore({"y": jnp.zeros(4)})
+
+
+def test_async_checkpoint_completes():
+    with tempfile.TemporaryDirectory() as tmp:
+        ck = Checkpointer(tmp)
+        ck.save(7, {"x": jnp.ones(8)}, blocking=False)
+        ck.wait()
+        assert ck.latest_step() == 7
+
+
+def test_straggler_detection():
+    recs = []
+    with tempfile.TemporaryDirectory() as tmp:
+        t = _trainer(tmp, steps=3)
+        t.run(on_step=recs.append)
+    assert len(recs) == 3
+    assert all(isinstance(r, StepRecord) for r in recs)
+    # manual: feed the EWMA a slow step and check the flag logic
+    t._ewma = 0.01
+    slow = 10.0
+    assert slow > t.train_cfg.straggler_factor * t._ewma
+
+
+def test_preemption_stop_and_final_save():
+    with tempfile.TemporaryDirectory() as tmp:
+        t = _trainer(tmp, steps=100)
+        calls = {"n": 0}
+
+        def stop():
+            calls["n"] += 1
+            return calls["n"] > 3
+        t.run(should_stop=stop)
+        assert len(t.history) == 3
+        assert t.ckpt.latest_step() is not None  # final sync save happened
+
+
+def test_elastic_remesh_resumes():
+    """Lose/gain machines: rebuild on a new mesh, resume via checkpoint —
+    the paper's random partition needs no selector-state migration."""
+    with tempfile.TemporaryDirectory() as tmp:
+        t = _trainer(tmp, steps=2)
+        t.run()
+        t2 = elastic_remesh(t, _mesh())
+        params, _ = t2.run()  # restores step-2 ckpt, steps stay 2 -> no-op
+        assert t2.ckpt.latest_step() >= 2
+
+
+def test_selection_pipeline_in_training():
+    with tempfile.TemporaryDirectory() as tmp:
+        t = Trainer(CFG, SHAPE, _mesh(),
+                    data=DataConfig(global_batch=4, seq_len=64,
+                                    select_every=2),
+                    train=TrainConfig(steps=3, ckpt_dir=tmp, ckpt_every=10,
+                                      log_every=100),
+                    opt=adamw.AdamWConfig(lr=1e-3, warmup_steps=2),
+                    select=True)
+        t.run()
+        assert len(t.history) == 3
+        sel = t.pipeline._last_sel
+        assert sel is not None and int(sel.sol_size) > 0
+
+
+def test_gradient_compression_error_feedback():
+    """int8 EF compression: biased per step, but the error carries over so
+    the accumulated update tracks the true gradient sum."""
+    from repro.optim import compression as C
+
+    g = {"w": jnp.asarray(np.random.default_rng(0)
+                          .normal(size=(64,)).astype(np.float32))}
+    st = C.init(g)
+    cfg = C.CompressionConfig(kind="int8")
+    total_sent = jax.tree.map(jnp.zeros_like, g)
+    for _ in range(20):
+        sent, st, factor = C.compress(cfg, g, st)
+        assert factor == 0.25  # int8 payload = 1/4 of f32
+        total_sent = jax.tree.map(lambda a, b: a + b, total_sent, sent)
+    np.testing.assert_allclose(np.asarray(total_sent["w"]) / 20,
+                               np.asarray(g["w"]), atol=1e-2)
