@@ -28,6 +28,10 @@ def instance(seed=0, n=2048, d=16, m=16, kind="coverage"):
     from repro.core import FacilityLocation, FeatureCoverage
 
     rng = np.random.default_rng(seed)
+    if n % m:
+        raise ValueError(
+            f"instance(): n={n} must be divisible by m={m} machines — the "
+            f"(m, n/m, d) sim reshape would silently misalign otherwise")
     if kind == "coverage":
         X = jnp.asarray((rng.random((n, d)).astype(np.float32)) ** 2)
         oracle = FeatureCoverage(feat_dim=d)

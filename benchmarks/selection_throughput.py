@@ -1,13 +1,16 @@
 """Benchmark: selection-engine throughput + the Pallas kernel hot spot.
 
 Reports CPU wall-time (this container's substrate) for
-  * the 2-round unknown-OPT selection end-to-end (elements/second),
+  * the 2-round unknown-OPT selection end-to-end (elements/second), with
+    both ThresholdGreedy engines,
+  * dense vs lazy ThresholdGreedy head-to-head on the facility-location
+    workload (n=65536, k=64 full-size): wall-clock AND oracle marginal-row
+    evaluation counts — the lazy engine's stale-gain pruning should cut
+    oracle work by >= 3x while selecting the identical set,
   * the facility-location marginal evaluator: pure-jnp reference vs the
     Pallas kernel in interpret mode (correctness) — on TPU the same
     ``pl.pallas_call`` compiles natively, so the interesting TPU figure is
-    the roofline table, not this wall-clock,
-  * ThresholdGreedy oracle-call counts: the lazy batched evaluation does
-    O(k) batched scoring passes instead of n rank-1 evaluations.
+    the roofline table, not this wall-clock.
 """
 
 from __future__ import annotations
@@ -19,22 +22,71 @@ import jax.numpy as jnp
 
 from benchmarks.common import (greedy_value, instance, print_table, save,
                                timed)
-from repro.core import MRConfig, two_round_sim
+from repro.core import FacilityLocation, MRConfig, two_round_sim
+from repro.core.threshold import threshold_greedy
 from repro.kernels import ops, ref
+
+
+def _engine_head_to_head(rows, quick: bool) -> None:
+    """Dense vs lazy ThresholdGreedy on one big facility-location block."""
+    n, k, d, r = (8192, 16, 32, 128) if quick else (65536, 64, 64, 256)
+    chunk = 256
+    rng = np.random.default_rng(7)
+    X = jnp.asarray(rng.random((n, d)).astype(np.float32))
+    refset = jnp.asarray(rng.random((r, d)).astype(np.float32))
+    oracle = FacilityLocation(feat_dim=d, reference=refset)
+    st0 = oracle.init_state()
+    singles = oracle.marginals(st0, oracle.prep(st0, X[:4096]))
+    tau = float(jnp.max(singles)) / (2.0 * k)
+    ids = jnp.arange(n, dtype=jnp.int32)
+    valid = jnp.ones((n,), bool)
+    sol0 = jnp.full((k,), -1, jnp.int32)
+
+    outs = {}
+    for engine in ("dense", "lazy"):
+        fn = jax.jit(lambda feats, e=engine: threshold_greedy(
+            oracle, st0, sol0, jnp.zeros((), jnp.int32), feats, ids, valid,
+            tau, k, engine=e, chunk=chunk, with_stats=True))
+        (ost, sol, size, stats), secs = timed(fn, X, repeats=2)
+        outs[engine] = (sol, stats)
+        rows.append({"what": f"threshold_greedy[{engine}](facility)",
+                     "n": n, "k": k, "seconds": secs,
+                     "elems_per_s": n / secs,
+                     "value": float(oracle.value(ost)),
+                     "oracle_evals": int(stats.n_evals)})
+    d_evals = int(outs["dense"][1].n_evals)
+    l_evals = int(outs["lazy"][1].n_evals)
+    match = bool(np.array_equal(np.asarray(outs["dense"][0]),
+                                np.asarray(outs["lazy"][0])))
+    speedup = rows[-2]["seconds"] / rows[-1]["seconds"]
+    rows.append({"what": "lazy-vs-dense", "n": n, "k": k,
+                 "speedup_wallclock": speedup,
+                 "oracle_evals_dense": d_evals,
+                 "oracle_evals_lazy": l_evals,
+                 "ids_identical": match})
+    print(f"lazy engine: {d_evals}/{l_evals} = "
+          f"{d_evals / max(1, l_evals):.1f}x fewer oracle evals, "
+          f"wallclock speedup {speedup:.2f}x, "
+          f"selected ids identical: {match}")
 
 
 def run(quick: bool = False) -> list:
     rows = []
 
-    # --- end-to-end selection throughput -----------------------------------
+    # --- end-to-end selection throughput, both engines ---------------------
     n, m, k = (2048, 8, 16) if quick else (8192, 16, 32)
     oracle, X, fm, im, vm = instance(seed=0, n=n, m=m, kind="coverage")
-    cfg = MRConfig(k=k, n_total=n, n_machines=m)
-    fn = jax.jit(lambda key: two_round_sim(oracle, fm, im, vm, cfg, key)[0])
-    res, secs = timed(fn, jax.random.PRNGKey(0), repeats=2)
-    rows.append({"what": "two_round_sim(coverage)", "n": n, "k": k,
-                 "seconds": secs, "elems_per_s": n / secs,
-                 "value": float(res.value)})
+    for engine in ("dense", "lazy"):
+        cfg = MRConfig(k=k, n_total=n, n_machines=m, engine=engine)
+        fn = jax.jit(
+            lambda key, c=cfg: two_round_sim(oracle, fm, im, vm, c, key)[0])
+        res, secs = timed(fn, jax.random.PRNGKey(0), repeats=2)
+        rows.append({"what": f"two_round_sim(coverage,{engine})", "n": n,
+                     "k": k, "seconds": secs, "elems_per_s": n / secs,
+                     "value": float(res.value)})
+
+    # --- dense vs lazy ThresholdGreedy on the facility workload ------------
+    _engine_head_to_head(rows, quick)
 
     # --- kernel vs reference ------------------------------------------------
     rng = np.random.default_rng(1)

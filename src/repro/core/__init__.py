@@ -11,10 +11,11 @@ from repro.core.mapreduce import (MRConfig, SelectionResult,
                                   two_round_known_opt_mesh,
                                   two_round_known_opt_sim, two_round_sim)
 from repro.core.selector import DistributedSelector, SelectorSpec, make_oracle
-from repro.core.threshold import (pack_by_mask, threshold_filter,
-                                  threshold_greedy)
+from repro.core.threshold import (GreedyStats, pack_by_mask,
+                                  threshold_filter, threshold_greedy)
 
 __all__ = [
+    "GreedyStats",
     "AdversarialThreshold", "FacilityLocation", "FeatureCoverage",
     "SubmodularOracle", "WeightedCoverage", "make_adversarial_instance",
     "MRConfig", "SelectionResult", "dense_two_round_sim",

@@ -46,6 +46,9 @@ class SubmodularOracle:
     init_state(): state pytree for S = {}.
     prep(state, cand_feats):      per-candidate aux, computed once per block.
     marginals(state, aux):        (C,) marginal gains f_S(e) for the block.
+    chunk_marginals(state, cand_feats): (B,) gains straight from features —
+                                  the lazy engine's streaming path; never
+                                  materializes a full-block aux.
     add(state, aux_row):          state for S + {e}, from e's aux row.
     value(state):                 f(S).
     """
@@ -57,6 +60,9 @@ class SubmodularOracle:
 
     def prep(self, state, cand_feats):
         return cand_feats
+
+    def chunk_marginals(self, state, cand_feats):
+        return self.marginals(state, self.prep(state, cand_feats))
 
     def marginals(self, state, aux):  # pragma: no cover - interface
         raise NotImplementedError
@@ -135,6 +141,16 @@ class FacilityLocation(SubmodularOracle):
 
             return ops.rectified_residual_sum(aux, state)
         return jnp.sum(jnp.maximum(aux - state[None, :], 0.0), axis=-1)
+
+    def chunk_marginals(self, state, cand_feats):
+        # The lazy engine's hot path: a (B, d) tile against the cover vector.
+        # The fused kernel keeps the (B, r) similarity block in VMEM, so the
+        # full (C, r) aux of `prep` never exists in HBM.
+        if self.use_kernel:
+            from repro.kernels import ops
+
+            return ops.facility_marginals(cand_feats, self.reference, state)
+        return self.marginals(state, self.prep(state, cand_feats))
 
     def add(self, state, aux_row):
         return jnp.maximum(state, aux_row)
@@ -237,6 +253,10 @@ class TPOracle(SubmodularOracle):
 
     def marginals(self, state, aux):
         return jax.lax.psum(self.base.marginals(state, aux), self.axis)
+
+    def chunk_marginals(self, state, cand_feats):
+        return jax.lax.psum(self.base.chunk_marginals(state, cand_feats),
+                            self.axis)
 
     def add(self, state, aux_row):
         return self.base.add(state, aux_row)

@@ -30,8 +30,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.rounds import RoundLog, buffer_bytes
-from repro.core.threshold import (exclude_ids, pack_by_mask, threshold_filter,
-                                  threshold_greedy)
+from repro.core.threshold import (DEFAULT_CHUNK, exclude_ids, pack_by_mask,
+                                  threshold_filter, threshold_greedy)
 
 
 class SelectionResult(NamedTuple):
@@ -53,6 +53,8 @@ class MRConfig:
     top_cap: Optional[int] = None         # per machine, Algorithm 7
     n_grid: Optional[int] = None          # unknown-OPT threshold grid size
     accept: str = "first"                 # "first" = Algorithm-1-faithful
+    engine: str = "dense"                 # ThresholdGreedy: "dense" | "lazy"
+    chunk: int = DEFAULT_CHUNK            # lazy-engine rescore chunk
 
     @property
     def sample_p(self) -> float:
@@ -60,7 +62,20 @@ class MRConfig:
 
     @property
     def n_local(self) -> int:
-        return self.n_total // self.n_machines
+        # Ceil: when n_total isn't a multiple of n_machines the largest
+        # shard has ceil(n/m) elements, and the expected-sample/survivor
+        # caps must be sized from that, not the floored undercount.
+        return -(-self.n_total // self.n_machines)
+
+    def require_even_shards(self, where: str = "sim reshape") -> None:
+        """The sim drivers' (m, n/m, d) reshape and the mesh data sharding
+        both need exact divisibility — fail loudly, not with a shape error
+        (or worse, a silently truncated ground set)."""
+        if self.n_total % self.n_machines:
+            raise ValueError(
+                f"{where}: n_total={self.n_total} is not divisible by "
+                f"n_machines={self.n_machines}; pad the ground set with "
+                f"invalid (id=-1) rows to a multiple of n_machines")
 
     def caps(self) -> Tuple[int, int, int]:
         n_loc = self.n_local
@@ -83,10 +98,11 @@ def _empty_solution(oracle, k):
             jnp.zeros((), jnp.int32))
 
 
-def _greedy(oracle, st, sol, size, feats, ids, valid, tau, k, accept):
+def _greedy(oracle, st, sol, size, feats, ids, valid, tau, k, cfg: MRConfig):
     valid = exclude_ids(ids, valid & (ids >= 0), sol)
     return threshold_greedy(oracle, st, sol, size, feats, ids, valid, tau, k,
-                            accept=accept)
+                            accept=cfg.accept, engine=cfg.engine,
+                            chunk=cfg.chunk)
 
 
 # ---------------------------------------------------------------------------
@@ -160,7 +176,7 @@ def two_round_known_opt_sim(oracle, feats_mk, ids_mk, valid_mk, opt, cfg: MRConf
             buffer_bytes(m * s_cap, d), f"|S|cap={m*s_cap} p={cfg.sample_p:.4f}")
 
     st, sol, size = _empty_solution(oracle, k)
-    st, sol, size = _greedy(oracle, st, sol, size, *S, tau, k, cfg.accept)
+    st, sol, size = _greedy(oracle, st, sol, size, *S, tau, k, cfg)
 
     rf, ri, rv, rdrop = jax.vmap(
         lambda f, i, v: _local_filter(oracle, st, sol, f, i, v, tau, f_cap,
@@ -170,7 +186,7 @@ def two_round_known_opt_sim(oracle, feats_mk, ids_mk, valid_mk, opt, cfg: MRConf
     log.add("gather-survivors", buffer_bytes(f_cap, d),
             buffer_bytes(m * f_cap, d), f"|R|cap={m*f_cap} tau={float(tau):.4g}")
 
-    st, sol, size = _greedy(oracle, st, sol, size, *R, tau, k, cfg.accept)
+    st, sol, size = _greedy(oracle, st, sol, size, *R, tau, k, cfg)
     res = SelectionResult(sol, size, oracle.value(st),
                           jnp.sum(sdrop) + jnp.sum(rdrop))
     return res, log
@@ -198,7 +214,7 @@ def dense_two_round_sim(oracle, feats_mk, ids_mk, valid_mk, cfg: MRConfig,
 
     def per_tau_phase1(tau):
         st, sol, size = _empty_solution(oracle, k)
-        return _greedy(oracle, st, sol, size, *S, tau, k, cfg.accept)
+        return _greedy(oracle, st, sol, size, *S, tau, k, cfg)
 
     st_j, sol_j, size_j = jax.vmap(per_tau_phase1)(taus)
 
@@ -217,7 +233,7 @@ def dense_two_round_sim(oracle, feats_mk, ids_mk, valid_mk, cfg: MRConfig,
             J * buffer_bytes(m * f_cap, d), f"grid J={J}")
 
     def per_tau_phase2(st, sol, size, f, i, v, tau):
-        st, sol, size = _greedy(oracle, st, sol, size, f, i, v, tau, k, cfg.accept)
+        st, sol, size = _greedy(oracle, st, sol, size, f, i, v, tau, k, cfg)
         return st, sol, size, oracle.value(st)
 
     st_j, sol_j, size_j, val_j = jax.vmap(per_tau_phase2)(
@@ -249,7 +265,7 @@ def sparse_two_round_sim(oracle, feats_mk, ids_mk, valid_mk, cfg: MRConfig,
 
     def per_tau(tau):
         st, sol, size = _empty_solution(oracle, k)
-        st, sol, size = _greedy(oracle, st, sol, size, *L, tau, k, cfg.accept)
+        st, sol, size = _greedy(oracle, st, sol, size, *L, tau, k, cfg)
         return sol, size, oracle.value(st)
 
     sol_j, size_j, val_j = jax.vmap(per_tau)(taus)
@@ -313,7 +329,7 @@ def multi_threshold_sim(oracle, feats_mk, ids_mk, valid_mk, opt, t: int,
         S = (sf.reshape(m * s_cap, d), si.reshape(-1), sv.reshape(-1))
         log.add(f"gather-sample-l{ell}", buffer_bytes(s_cap, d),
                 buffer_bytes(m * s_cap, d), f"alpha={alpha:.4g}")
-        st, sol, size = _greedy(oracle, st, sol, size, *S, alpha, k, cfg.accept)
+        st, sol, size = _greedy(oracle, st, sol, size, *S, alpha, k, cfg)
 
         rf, ri, rv, rdrop = jax.vmap(
             lambda f, i, v: _local_filter(oracle, st, sol, f, i, v, alpha, f_cap,
@@ -322,7 +338,7 @@ def multi_threshold_sim(oracle, feats_mk, ids_mk, valid_mk, opt, t: int,
         R = (rf.reshape(m * f_cap, d), ri.reshape(-1), rv.reshape(-1))
         log.add(f"gather-survivors-l{ell}", buffer_bytes(f_cap, d),
                 buffer_bytes(m * f_cap, d))
-        st, sol, size = _greedy(oracle, st, sol, size, *R, alpha, k, cfg.accept)
+        st, sol, size = _greedy(oracle, st, sol, size, *R, alpha, k, cfg)
         drops = drops + jnp.sum(sdrop) + jnp.sum(rdrop)
 
     return SelectionResult(sol, size, oracle.value(st), drops), log
@@ -351,9 +367,14 @@ def two_round_known_opt_mesh(oracle, cfg: MRConfig, mesh: Mesh,
     data_spec = data_spec or P(axes if len(axes) > 1 else axes[0])
     ids_spec = P(data_spec[0])
 
+    # Message rows carry the oracle's feature width (for TPOracle that is
+    # the per-device shard width — exactly what each machine sends).
+    feat_dim = oracle.feat_dim
     log = RoundLog()
-    log.add("gather-sample", buffer_bytes(s_cap, 0), buffer_bytes(m * s_cap, 0))
-    log.add("gather-survivors", buffer_bytes(f_cap, 0), buffer_bytes(m * f_cap, 0))
+    log.add("gather-sample", buffer_bytes(s_cap, feat_dim),
+            buffer_bytes(m * s_cap, feat_dim))
+    log.add("gather-survivors", buffer_bytes(f_cap, feat_dim),
+            buffer_bytes(m * f_cap, feat_dim))
 
     def body(feats, ids, opt, key):
         d = feats.shape[-1]
@@ -369,7 +390,7 @@ def two_round_known_opt_mesh(oracle, cfg: MRConfig, mesh: Mesh,
              jax.lax.all_gather(sv, gather_axes, tiled=True))
 
         st, sol, size = _empty_solution(oracle, k)
-        st, sol, size = _greedy(oracle, st, sol, size, *S, tau, k, cfg.accept)
+        st, sol, size = _greedy(oracle, st, sol, size, *S, tau, k, cfg)
 
         rf, ri, rv, rdrop = _local_filter(oracle, st, sol, feats, ids, valid,
                                           tau, f_cap, size, k)
@@ -377,7 +398,7 @@ def two_round_known_opt_mesh(oracle, cfg: MRConfig, mesh: Mesh,
              jax.lax.all_gather(ri, gather_axes, tiled=True),
              jax.lax.all_gather(rv, gather_axes, tiled=True))
 
-        st, sol, size = _greedy(oracle, st, sol, size, *R, tau, k, cfg.accept)
+        st, sol, size = _greedy(oracle, st, sol, size, *R, tau, k, cfg)
         drops = jax.lax.psum(sdrop + rdrop, gather_axes)
         return SelectionResult(sol, size, oracle.value(st), drops)
 
@@ -413,11 +434,13 @@ def two_round_mesh(oracle, cfg: MRConfig, mesh: Mesh,
     data_spec = data_spec or P(axes if len(axes) > 1 else axes[0])
     ids_spec = P(data_spec[0])
 
+    feat_dim = oracle.feat_dim
     log = RoundLog()
-    log.add("gather-sample||top", buffer_bytes(s_cap + t_cap, 0),
-            buffer_bytes(m * (s_cap + t_cap), 0), "dense || sparse round 1")
-    log.add("gather-survivors[grid]", J * buffer_bytes(f_cap, 0),
-            J * buffer_bytes(m * f_cap, 0), f"grid J={J}")
+    log.add("gather-sample||top", buffer_bytes(s_cap + t_cap, feat_dim),
+            buffer_bytes(m * (s_cap + t_cap), feat_dim),
+            "dense || sparse round 1")
+    log.add("gather-survivors[grid]", J * buffer_bytes(f_cap, feat_dim),
+            J * buffer_bytes(m * f_cap, feat_dim), f"grid J={J}")
 
     def _gather_packed(x, leading=False):
         """all_gather a packed buffer; leading=True keeps a (J, ...) axis
@@ -448,7 +471,7 @@ def two_round_mesh(oracle, cfg: MRConfig, mesh: Mesh,
 
         def phase1(tau):
             st, sol, size = _empty_solution(oracle, k)
-            return _greedy(oracle, st, sol, size, *S, tau, k, cfg.accept)
+            return _greedy(oracle, st, sol, size, *S, tau, k, cfg)
 
         st_j, sol_j, size_j = jax.vmap(phase1)(taus)
 
@@ -462,8 +485,7 @@ def two_round_mesh(oracle, cfg: MRConfig, mesh: Mesh,
         Rv = _gather_packed(rv, leading=True)
 
         def phase2(st, sol, size, f, i, v, tau):
-            st, sol, size = _greedy(oracle, st, sol, size, f, i, v, tau, k,
-                                    cfg.accept)
+            st, sol, size = _greedy(oracle, st, sol, size, f, i, v, tau, k, cfg)
             return sol, size, oracle.value(st)
 
         dsol, dsize, dval = jax.vmap(phase2)(st_j, sol_j, size_j,
@@ -474,8 +496,7 @@ def two_round_mesh(oracle, cfg: MRConfig, mesh: Mesh,
 
         def sparse_tau(tau):
             st, sol, size = _empty_solution(oracle, k)
-            st, sol, size = _greedy(oracle, st, sol, size, *Ltop, tau, k,
-                                    cfg.accept)
+            st, sol, size = _greedy(oracle, st, sol, size, *Ltop, tau, k, cfg)
             return sol, size, oracle.value(st)
 
         ssol, ssize, sval = jax.vmap(sparse_tau)(taus_s)
@@ -510,12 +531,13 @@ def multi_threshold_mesh(oracle, cfg: MRConfig, t: int, mesh: Mesh,
     data_spec = data_spec or P(axes if len(axes) > 1 else axes[0])
     ids_spec = P(data_spec[0])
 
+    feat_dim = oracle.feat_dim
     log = RoundLog()
     for ell in range(1, t + 1):
-        log.add(f"gather-sample-l{ell}", buffer_bytes(s_cap, 0),
-                buffer_bytes(m * s_cap, 0))
-        log.add(f"gather-survivors-l{ell}", buffer_bytes(f_cap, 0),
-                buffer_bytes(m * f_cap, 0))
+        log.add(f"gather-sample-l{ell}", buffer_bytes(s_cap, feat_dim),
+                buffer_bytes(m * s_cap, feat_dim))
+        log.add(f"gather-survivors-l{ell}", buffer_bytes(f_cap, feat_dim),
+                buffer_bytes(m * f_cap, feat_dim))
 
     def body(feats, ids, opt, key):
         midx = jax.lax.axis_index(gather_axes)
@@ -530,14 +552,12 @@ def multi_threshold_mesh(oracle, cfg: MRConfig, t: int, mesh: Mesh,
                                               cfg.sample_p, s_cap)
             S = tuple(jax.lax.all_gather(x, gather_axes, tiled=True)
                       for x in (sf, si, sv))
-            st, sol, size = _greedy(oracle, st, sol, size, *S, alpha, k,
-                                    cfg.accept)
+            st, sol, size = _greedy(oracle, st, sol, size, *S, alpha, k, cfg)
             rf, ri, rv, rdrop = _local_filter(oracle, st, sol, feats, ids,
                                               valid, alpha, f_cap, size, k)
             R = tuple(jax.lax.all_gather(x, gather_axes, tiled=True)
                       for x in (rf, ri, rv))
-            st, sol, size = _greedy(oracle, st, sol, size, *R, alpha, k,
-                                    cfg.accept)
+            st, sol, size = _greedy(oracle, st, sol, size, *R, alpha, k, cfg)
             drops = drops + sdrop + rdrop
         drops = jax.lax.psum(drops, gather_axes)
         return SelectionResult(sol, size, oracle.value(st), drops)

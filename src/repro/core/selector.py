@@ -26,6 +26,8 @@ class SelectorSpec:
     t: int = 1                         # thresholds for multi_threshold
     eps: float = 0.15
     accept: str = "first"
+    engine: str = "dense"              # ThresholdGreedy: "dense" | "lazy"
+    chunk: int = 128                   # lazy-engine rescore chunk size
     reference_size: int = 256          # facility location client set
     use_kernel: bool = False
     oracle_tp: bool = False            # shard the feature dim over "model"
@@ -64,7 +66,9 @@ class DistributedSelector:
         for a in self.axes:
             m *= mesh.shape[a]
         self.cfg = mr.MRConfig(k=spec.k, n_total=n_total, n_machines=m,
-                               eps=spec.eps, accept=spec.accept)
+                               eps=spec.eps, accept=spec.accept,
+                               engine=spec.engine, chunk=spec.chunk)
+        self.cfg.require_even_shards(where="DistributedSelector data sharding")
         tp = mesh.shape.get("model", 1)
         self.tp = (spec.oracle_tp and tp > 1 and feat_dim % tp == 0 and
                    spec.oracle in ("feature_coverage", "weighted_coverage"))
@@ -112,11 +116,13 @@ class DistributedSelector:
     def opt_upper_bound(self, embeddings) -> jax.Array:
         """k * (max singleton value) >= OPT >= max singleton — the standard
         first-round estimate (paper §2.2: 'an extra initial round').
-        Runs outside shard_map, so always on a full-width oracle."""
-        oracle = self.oracle.base if isinstance(self.oracle, F.TPOracle) \
-            else self.oracle
+        Runs outside shard_map, so always on a full-width oracle: a TPOracle
+        would psum over a mesh axis that doesn't exist here, so rebuild the
+        unsharded base oracle at the embeddings' full feature width."""
         if isinstance(self.oracle, F.TPOracle):
             oracle = make_oracle(self.spec, embeddings.shape[-1], None)
+        else:
+            oracle = self.oracle
         st0 = oracle.init_state()
         singles = oracle.marginals(st0, oracle.prep(st0, embeddings))
         return jnp.max(singles) * self.spec.k

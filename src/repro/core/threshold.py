@@ -4,21 +4,37 @@ Paper-faithful semantics with TPU-shaped execution:
 
 * The paper streams elements one at a time and accepts any element whose
   marginal is >= tau.  Sequential rank-1 oracle calls are hostile to a
-  vector machine, so each iteration here scores the *whole* candidate block
-  with one batched ``marginals`` call and then accepts per ``accept``:
+  vector machine, so the engines here score candidates in batches and then
+  accept per ``accept``:
 
     - ``"first"`` (default, Algorithm-1-faithful): the earliest element in
-      the fixed stream order whose fresh marginal is >= tau.  Because all
-      marginals are recomputed against the current solution, the accepted
-      sequence is exactly what the paper's sequential loop would accept.
+      the fixed stream order whose fresh marginal is >= tau.  Because
+      marginals are recomputed against the current solution before an
+      accept, the accepted sequence is exactly what the paper's sequential
+      loop would accept.
     - ``"best"``: argmax above tau (beyond-paper; never worse — see
       EXPERIMENTS.md §Perf).
 
   Either rule preserves the two facts the proofs use: every accepted marginal
   is >= tau, and on exit (with |G| < k) no candidate has marginal >= tau.
 
+* Two interchangeable engines (DESIGN.md §3):
+
+    - ``engine="dense"``: every iteration rescores the *whole* candidate
+      block with one batched ``marginals`` call — O(|G| * C) oracle rows.
+    - ``engine="lazy"``: a stale-gains buffer upper-bounds every candidate's
+      marginal (submodularity: marginals only shrink as G grows), and each
+      iteration rescores only one fixed-size ``chunk`` of candidates whose
+      stale gain still clears tau.  Rows with stale gain < tau can never be
+      accepted and are never touched again.  For ``accept="first"`` the
+      accepted sequence is *identical* to the dense engine's; oracle work
+      drops to ~O(|G| * chunk).  The lazy engine never materializes the
+      full prep aux — candidates stream through ``oracle.chunk_marginals``
+      in (chunk, d) tiles (FacilityLocation routes them through the fused
+      Pallas kernel, so the (C, r) similarity block never exists in HBM).
+
 * Everything is fixed-shape: candidate blocks carry a validity mask, the
-  solution is a fixed (k,) id buffer with a size counter.  ThresholdGreedy is
+  solution is a fixed (k,) id buffer with a size counter.  Both engines are
   a ``lax.while_loop`` bounded by k accepts.
 
 All functions are pure and jit/shard_map friendly; determinism across
@@ -36,6 +52,18 @@ import jax.numpy as jnp
 
 NEG = -jnp.inf
 
+DEFAULT_CHUNK = 128
+
+
+class GreedyStats(NamedTuple):
+    """Oracle-work accounting for one threshold_greedy call (all int32).
+
+    n_evals counts candidate *rows* pushed through a marginals evaluation —
+    the paper's oracle-call measure, batched.  n_iters counts loop trips.
+    """
+    n_evals: jax.Array
+    n_iters: jax.Array
+
 
 class GreedyState(NamedTuple):
     oracle_state: object
@@ -43,17 +71,69 @@ class GreedyState(NamedTuple):
     sol_size: jax.Array     # () int32
     taken: jax.Array        # (C,) bool — candidates already taken this call
     done: jax.Array         # () bool
+    n_evals: jax.Array      # () int32 — marginal rows evaluated so far
+    n_iters: jax.Array      # () int32
+
+
+class LazyState(NamedTuple):
+    oracle_state: object
+    sol_ids: jax.Array      # (k,) int32, -1 padded
+    sol_size: jax.Array     # () int32
+    g_stale: jax.Array      # (C,) f32 — upper bounds on fresh marginals
+    taken: jax.Array        # (C,) bool
+    done: jax.Array         # () bool
+    n_evals: jax.Array      # () int32
+    n_iters: jax.Array      # () int32
+
+
+def _apply_accept(st, accept_now, new_state, cand_id, idx, k):
+    """Shared accept bookkeeping: conditionally swap in the post-add oracle
+    state, append cand_id to the solution buffer, and mark idx taken."""
+    oracle_state = jax.tree.map(
+        lambda new, old: jnp.where(accept_now, new, old),
+        new_state, st.oracle_state)
+    sol_ids = jnp.where(
+        accept_now,
+        st.sol_ids.at[jnp.minimum(st.sol_size, k - 1)].set(cand_id),
+        st.sol_ids)
+    sol_size = st.sol_size + jnp.where(accept_now, 1, 0)
+    taken = st.taken.at[idx].set(st.taken[idx] | accept_now)
+    return oracle_state, sol_ids, sol_size, taken
 
 
 def threshold_greedy(oracle, oracle_state, sol_ids, sol_size, cand_feats,
-                     cand_ids, cand_valid, tau, k: int, accept: str = "first"):
+                     cand_ids, cand_valid, tau, k: int, accept: str = "first",
+                     engine: str = "dense", chunk: int = DEFAULT_CHUNK,
+                     with_stats: bool = False):
     """Algorithm 1.  Extends (sol_ids, sol_size, oracle_state) greedily with
     candidates whose marginal w.r.t. the current solution is >= tau, until
     |G| = k or no candidate qualifies.
 
     cand_feats: (C, feat_dim); cand_ids: (C,) int32; cand_valid: (C,) bool.
-    Returns (oracle_state, sol_ids, sol_size).
+    engine: "dense" rescores all C candidates per iteration; "lazy" keeps
+    stale upper bounds and rescores `chunk`-sized slices on demand (same
+    accepted sequence for accept="first"; same invariants for both accepts).
+    Returns (oracle_state, sol_ids, sol_size), plus a GreedyStats when
+    ``with_stats``.
     """
+    if engine == "lazy":
+        fn = _threshold_greedy_lazy
+    elif engine == "dense":
+        fn = _threshold_greedy_dense
+    else:
+        raise ValueError(f"unknown engine {engine!r}")
+    out_state, out_sol, out_size, stats = fn(
+        oracle, oracle_state, sol_ids, sol_size, cand_feats, cand_ids,
+        cand_valid, tau, k, accept, chunk)
+    if with_stats:
+        return out_state, out_sol, out_size, stats
+    return out_state, out_sol, out_size
+
+
+def _threshold_greedy_dense(oracle, oracle_state, sol_ids, sol_size,
+                            cand_feats, cand_ids, cand_valid, tau, k, accept,
+                            chunk):
+    """Batched engine: one full-block marginals call per accept."""
     aux = oracle.prep(oracle_state, cand_feats)
     C = cand_feats.shape[0]
     order = jnp.arange(C, dtype=jnp.int32)
@@ -75,26 +155,119 @@ def threshold_greedy(oracle, oracle_state, sol_ids, sol_size, cand_feats,
         accept_now = any_ok & (st.sol_size < k)
         aux_row = jax.tree.map(lambda a: a[idx], aux)
         new_state = oracle.add(st.oracle_state, aux_row)
-        oracle_state = jax.tree.map(
-            lambda new, old: jnp.where(accept_now, new, old),
-            new_state, st.oracle_state)
-        sol_ids = jnp.where(
-            accept_now,
-            st.sol_ids.at[jnp.minimum(st.sol_size, k - 1)].set(cand_ids[idx]),
-            st.sol_ids)
-        sol_size = st.sol_size + jnp.where(accept_now, 1, 0)
-        taken = st.taken.at[idx].set(st.taken[idx] | accept_now)
+        oracle_state, sol_ids, sol_size, taken = _apply_accept(
+            st, accept_now, new_state, cand_ids[idx], idx, k)
         return GreedyState(oracle_state, sol_ids, sol_size, taken,
-                           done=~accept_now)
+                           done=~accept_now, n_evals=st.n_evals + C,
+                           n_iters=st.n_iters + 1)
 
     def cond(st: GreedyState):
         return (~st.done) & (st.sol_size < k)
 
     init = GreedyState(oracle_state, sol_ids, sol_size,
                        taken=jnp.zeros((C,), bool),
-                       done=jnp.asarray(False))
+                       done=jnp.asarray(False),
+                       n_evals=jnp.zeros((), jnp.int32),
+                       n_iters=jnp.zeros((), jnp.int32))
     out = jax.lax.while_loop(cond, body, init)
-    return out.oracle_state, out.sol_ids, out.sol_size
+    return (out.oracle_state, out.sol_ids, out.sol_size,
+            GreedyStats(out.n_evals, out.n_iters))
+
+
+def _threshold_greedy_lazy(oracle, oracle_state, sol_ids, sol_size,
+                           cand_feats, cand_ids, cand_valid, tau, k, accept,
+                           chunk):
+    """Lazy engine: stale-gain upper bounds + chunked on-demand rescoring.
+
+    Invariant: ``g_stale[i] >= fresh_marginal(i)`` at all times.  It starts
+    at +inf (trivially valid, maximally lazy) and each rescore tightens it
+    to the exact marginal under the then-current solution; submodularity
+    guarantees the bound stays valid as the solution grows.  Hence:
+
+      * a candidate with ``g_stale < tau`` can never be accepted (fresh <=
+        stale < tau) — it is excluded without an oracle call;
+      * exiting when no hot (stale >= tau) candidate remains certifies the
+        paper's exit condition: no candidate has fresh marginal >= tau.
+
+    accept="first": ThresholdGreedy with a fixed tau is a single forward
+    pass (the paper's own streaming loop): once a candidate's fresh gain is
+    seen below tau it can never qualify again, so the scan never moves
+    backwards.  Each iteration slices the contiguous chunk starting at the
+    first hot candidate, rescores it, and accepts the earliest whose fresh
+    gain clears tau.  Every candidate earlier in the stream either was cold
+    or was just rescored below tau, so the accepted element is exactly the
+    one the dense engine picks — at O(chunk) oracle rows + an O(C) vector
+    scan per iteration (no sort, no gather).
+
+    accept="best": each iteration gathers the `chunk` candidates with the
+    largest stale bounds and accepts the freshest-best only if it also
+    beats every stale bound outside the chunk (the classic lazy-greedy
+    certificate), so the accepted element is a true fresh argmax.
+    """
+    C = cand_feats.shape[0]
+    B = max(1, min(chunk, C))
+    order = jnp.arange(C, dtype=jnp.int32)
+
+    def body(st: LazyState) -> LazyState:
+        eligible = cand_valid & ~st.taken
+        hot = eligible & (st.g_stale >= tau)
+        if accept == "first":
+            # contiguous chunk at the scan frontier (first hot index);
+            # dynamic_slice clamps near the right edge, which only re-reads
+            # rows already proven cold (fresh <= stale < tau, can't match).
+            c = jnp.argmax(hot).astype(jnp.int32)
+            feats_chunk = jax.lax.dynamic_slice_in_dim(cand_feats, c, B)
+            g_chunk = oracle.chunk_marginals(st.oracle_state, feats_chunk)
+            base = jnp.minimum(c, C - B)
+            idxs = base + jnp.arange(B, dtype=jnp.int32)
+            # fresh gains are valid upper bounds for every row going forward
+            g_stale = jax.lax.dynamic_update_slice_in_dim(st.g_stale,
+                                                          g_chunk, c, axis=0)
+            ok = eligible[idxs] & (g_chunk >= tau)
+            j = jnp.argmax(ok)                    # earliest qualifying
+            found = jnp.any(ok)
+        else:
+            key = jnp.where(hot, st.g_stale, NEG)
+            _, idxs = jax.lax.top_k(key, B)       # B hottest stale bounds
+            chunk_ok = hot[idxs]
+            feats_chunk = cand_feats[idxs]
+            g_chunk = oracle.chunk_marginals(st.oracle_state, feats_chunk)
+            g_stale = st.g_stale.at[idxs].set(
+                jnp.where(chunk_ok, g_chunk, st.g_stale[idxs]))
+            jkey = jnp.where(chunk_ok, g_chunk, NEG)
+            j = jnp.argmax(jkey)
+            best_fresh = jkey[j]
+            # certificate: the best fresh gain in the chunk dominates every
+            # stale bound outside it, hence every fresh gain outside it
+            max_rest = jnp.max(key.at[idxs].set(NEG))
+            found = chunk_ok[j] & (best_fresh >= tau) & \
+                (best_fresh >= max_rest)
+        idx = idxs[j]
+        accept_now = found & (st.sol_size < k)
+
+        aux_row = jax.tree.map(
+            lambda a: a[0], oracle.prep(st.oracle_state, feats_chunk[j][None]))
+        new_state = oracle.add(st.oracle_state, aux_row)
+        oracle_state, sol_ids, sol_size, taken = _apply_accept(
+            st, accept_now, new_state, cand_ids[idx], idx, k)
+
+        hot_left = cand_valid & ~taken & (g_stale >= tau)
+        return LazyState(oracle_state, sol_ids, sol_size, g_stale, taken,
+                         done=~jnp.any(hot_left), n_evals=st.n_evals + B,
+                         n_iters=st.n_iters + 1)
+
+    def cond(st: LazyState):
+        return (~st.done) & (st.sol_size < k)
+
+    init = LazyState(oracle_state, sol_ids, sol_size,
+                     g_stale=jnp.full((C,), jnp.inf, jnp.float32),
+                     taken=jnp.zeros((C,), bool),
+                     done=~jnp.any(cand_valid),
+                     n_evals=jnp.zeros((), jnp.int32),
+                     n_iters=jnp.zeros((), jnp.int32))
+    out = jax.lax.while_loop(cond, body, init)
+    return (out.oracle_state, out.sol_ids, out.sol_size,
+            GreedyStats(out.n_evals, out.n_iters))
 
 
 def threshold_filter(oracle, oracle_state, cand_feats, cand_valid, tau):
@@ -127,8 +300,11 @@ def pack_by_mask(feats, ids, mask, cap: int, priority=None):
         key = jnp.where(mask, jnp.arange(n, dtype=jnp.float32), jnp.inf)
         take = jnp.argsort(key)[:cap]
     else:
-        key = jnp.where(mask, priority, -jnp.inf)
-        take = jnp.argsort(-key)[:cap]
+        # Masked rows must sort strictly after every valid row — keying them
+        # -inf alone lets a valid row whose priority is itself -inf tie with
+        # (and lose to, under the stable argsort) a masked row.  Primary key:
+        # validity; secondary: descending priority among the valid.
+        take = jnp.lexsort((jnp.where(mask, -priority, 0.0), ~mask))[:cap]
     valid_sorted = mask[take]
     count = jnp.sum(mask)
     n_dropped = jnp.maximum(count - cap, 0)
