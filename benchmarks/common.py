@@ -22,10 +22,17 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
                            "bench")
 
 
-def instance(seed=0, n=2048, d=16, m=16, kind="coverage"):
+#: every instance() kind — benchmark zoo sweeps iterate this
+INSTANCE_KINDS = ("coverage", "facility", "graph_cut", "log_det", "exemplar")
+
+
+def instance(seed=0, n=2048, d=16, m=16, kind="coverage", k=64,
+             use_kernel=False):
     """(oracle, X, feats_mk, ids_mk, valid_mk) — random ground set split
-    over m machines."""
-    from repro.core import FacilityLocation, FeatureCoverage
+    over m machines.  ``k`` sizes LogDetDiversity's fixed-capacity state
+    (must be >= the cardinality budget the driver runs with)."""
+    from repro.core import (ExemplarClustering, FacilityLocation,
+                            FeatureCoverage, GraphCut, LogDetDiversity)
 
     rng = np.random.default_rng(seed)
     if n % m:
@@ -34,11 +41,25 @@ def instance(seed=0, n=2048, d=16, m=16, kind="coverage"):
             f"(m, n/m, d) sim reshape would silently misalign otherwise")
     if kind == "coverage":
         X = jnp.asarray((rng.random((n, d)).astype(np.float32)) ** 2)
-        oracle = FeatureCoverage(feat_dim=d)
+        oracle = FeatureCoverage(feat_dim=d, use_kernel=use_kernel)
     elif kind == "facility":
         X = jnp.asarray(rng.random((n, d)).astype(np.float32))
         ref = X[:: max(1, n // 64)][:64]
-        oracle = FacilityLocation(feat_dim=d, reference=ref)
+        oracle = FacilityLocation(feat_dim=d, reference=ref,
+                                  use_kernel=use_kernel)
+    elif kind == "graph_cut":
+        X = jnp.asarray((rng.random((n, d)).astype(np.float32)) ** 2)
+        oracle = GraphCut(feat_dim=d, total=jnp.sum(X, axis=0), lam=0.5,
+                          use_kernel=use_kernel)
+    elif kind == "log_det":
+        X = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+        oracle = LogDetDiversity(feat_dim=d, k_max=k, alpha=1.0,
+                                 use_kernel=use_kernel)
+    elif kind == "exemplar":
+        X = jnp.asarray(rng.random((n, d)).astype(np.float32))
+        ref = X[:: max(1, n // 64)][:64]
+        oracle = ExemplarClustering(feat_dim=d, reference=ref,
+                                    use_kernel=use_kernel)
     else:
         raise ValueError(kind)
     feats_mk = X.reshape(m, n // m, d)

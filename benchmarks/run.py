@@ -9,6 +9,12 @@
   roofline_report         aggregates results/dryrun into §Roofline rows
 
 ``python -m benchmarks.run [--quick] [--only mod1,mod2]``
+
+Every invocation writes a per-module status/timing summary to
+``results/bench/run_summary.json`` — a module that crashes (or fails to
+import) still leaves a `failed` row there, so "which tables regenerated?"
+is answerable from files rather than scrollback.  Unknown ``--only`` names
+are rejected up front instead of surfacing as an ImportError mid-run.
 """
 
 from __future__ import annotations
@@ -27,20 +33,36 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default="")
     args = ap.parse_args()
-    mods = args.only.split(",") if args.only else MODULES
+    if args.only:
+        mods = [m for m in args.only.split(",") if m]
+        unknown = sorted(set(mods) - set(MODULES))
+        if unknown:
+            ap.error(f"unknown benchmark module(s) {unknown}; "
+                     f"choose from {', '.join(MODULES)}")
+    else:
+        mods = list(MODULES)
 
-    failures = []
+    from benchmarks.common import save
+
+    summary, failures = [], []
     for name in mods:
-        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
         t0 = time.time()
         try:
-            mod.run(quick=args.quick)
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            rows = mod.run(quick=args.quick)
+            status = "ok"
+            n_rows = len(rows) if isinstance(rows, list) else 0
             print(f"[bench] {name} done in {time.time() - t0:.1f}s",
                   flush=True)
         except Exception:
             failures.append(name)
+            status, n_rows = "failed", 0
             print(f"[bench] {name} FAILED\n{traceback.format_exc()}",
                   flush=True)
+        summary.append({"module": name, "status": status,
+                        "seconds": round(time.time() - t0, 3),
+                        "rows": n_rows, "quick": bool(args.quick)})
+    save("run_summary", summary)
     if failures:
         raise SystemExit(f"benchmark failures: {failures}")
     print("[bench] all benchmarks complete")

@@ -20,8 +20,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import (greedy_value, instance, print_table, save,
-                               timed)
+import dataclasses
+
+from benchmarks.common import (INSTANCE_KINDS, greedy_value, instance,
+                               print_table, save, timed)
 from repro.core import FacilityLocation, MRConfig, two_round_sim
 from repro.core.threshold import threshold_greedy
 from repro.kernels import ops, ref
@@ -70,6 +72,48 @@ def _engine_head_to_head(rows, quick: bool) -> None:
           f"selected ids identical: {match}")
 
 
+def _chunk_marginals_parity(oracle, X) -> float:
+    """Max |kernel - ref| of the oracle's streaming marginal path after a
+    couple of accepts (non-trivial state).  Returns nan when the oracle has
+    no kernel route."""
+    try:
+        plain = dataclasses.replace(oracle, use_kernel=False)
+        fused = dataclasses.replace(oracle, use_kernel=True)
+    except TypeError:                      # oracle has no use_kernel field
+        return float("nan")
+    st = plain.init_state()
+    aux = plain.prep(st, X[:2])
+    for i in range(2):
+        st = plain.add(st, jax.tree.map(lambda a: a[i], aux))
+    want = plain.marginals(st, plain.prep(st, X))
+    got = fused.chunk_marginals(st, X)
+    return float(jnp.max(jnp.abs(got - want)))
+
+
+def _zoo_throughput(quick: bool) -> list:
+    """Every registered oracle family through the 2-round unknown-OPT
+    pipeline, both engines, plus the kernel-vs-ref parity of its streaming
+    marginal path (the acceptance check that a new oracle's Pallas kernel
+    computes the same function its oracle does).  Returned as its own row
+    list so the parity column gets its own printed table (print_table
+    derives columns from the first row)."""
+    rows = []
+    n, m, k = (1024, 8, 8) if quick else (4096, 16, 16)
+    for kind in INSTANCE_KINDS:
+        oracle, X, fm, im, vm = instance(seed=2, n=n, m=m, kind=kind, k=k)
+        err = _chunk_marginals_parity(oracle, X[:512])
+        for engine in ("dense", "lazy"):
+            cfg = MRConfig(k=k, n_total=n, n_machines=m, engine=engine)
+            fn = jax.jit(lambda key, c=cfg, o=oracle: two_round_sim(
+                o, fm, im, vm, c, key)[0])
+            res, secs = timed(fn, jax.random.PRNGKey(0), repeats=2)
+            rows.append({"what": f"two_round_sim({kind},{engine})", "n": n,
+                         "k": k, "seconds": secs, "elems_per_s": n / secs,
+                         "value": float(res.value),
+                         "kernel_vs_ref_maxerr": err})
+    return rows
+
+
 def run(quick: bool = False) -> list:
     rows = []
 
@@ -84,6 +128,9 @@ def run(quick: bool = False) -> list:
         rows.append({"what": f"two_round_sim(coverage,{engine})", "n": n,
                      "k": k, "seconds": secs, "elems_per_s": n / secs,
                      "value": float(res.value)})
+
+    # --- the oracle zoo through the same pipeline --------------------------
+    zoo_rows = _zoo_throughput(quick)
 
     # --- dense vs lazy ThresholdGreedy on the facility workload ------------
     _engine_head_to_head(rows, quick)
@@ -107,6 +154,9 @@ def run(quick: bool = False) -> list:
                  "value": err})
 
     print_table("selection_throughput", rows)
+    print_table("selection_throughput (oracle zoo + kernel parity)",
+                zoo_rows)
+    rows = rows + zoo_rows
     save("selection_throughput", rows)
     return rows
 

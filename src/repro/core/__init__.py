@@ -1,26 +1,29 @@
 """The paper's contribution: cardinality-constrained monotone submodular
 maximization in the MapReduce model (Liu–Vondrák, SOSA 2019)."""
 
-from repro.core.functions import (AdversarialThreshold, FacilityLocation,
-                                  FeatureCoverage, SubmodularOracle,
-                                  WeightedCoverage,
+from repro.core.functions import (AdversarialThreshold, ExemplarClustering,
+                                  FacilityLocation, FeatureCoverage,
+                                  GraphCut, LogDetDiversity,
+                                  SubmodularOracle, WeightedCoverage,
                                   make_adversarial_instance)
 from repro.core.mapreduce import (MRConfig, SelectionResult,
                                   dense_two_round_sim, multi_threshold_mesh,
                                   multi_threshold_sim, sparse_two_round_sim,
                                   two_round_known_opt_mesh,
                                   two_round_known_opt_sim, two_round_sim)
-from repro.core.selector import DistributedSelector, SelectorSpec, make_oracle
+from repro.core.selector import (ORACLE_NAMES, DistributedSelector,
+                                 SelectorSpec, make_oracle)
 from repro.core.threshold import (GreedyStats, pack_by_mask,
                                   threshold_filter, threshold_greedy)
 
 __all__ = [
     "GreedyStats",
-    "AdversarialThreshold", "FacilityLocation", "FeatureCoverage",
+    "AdversarialThreshold", "ExemplarClustering", "FacilityLocation",
+    "FeatureCoverage", "GraphCut", "LogDetDiversity",
     "SubmodularOracle", "WeightedCoverage", "make_adversarial_instance",
     "MRConfig", "SelectionResult", "dense_two_round_sim",
     "multi_threshold_mesh", "multi_threshold_sim", "sparse_two_round_sim",
     "two_round_known_opt_mesh", "two_round_known_opt_sim", "two_round_sim",
-    "DistributedSelector", "SelectorSpec", "make_oracle",
+    "ORACLE_NAMES", "DistributedSelector", "SelectorSpec", "make_oracle",
     "pack_by_mask", "threshold_filter", "threshold_greedy",
 ]

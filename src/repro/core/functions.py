@@ -25,6 +25,17 @@ Oracles implemented:
                      (the Pallas kernel target; state is the cover vector)
   WeightedCoverage   classic weighted max-coverage (the paper's canonical
                      application, cf. Assadi–Khanna / McGregor–Vu)
+  GraphCut           f(S) = sum_{u in V, v in S} w(u,v) - lam sum_{u,v in S}
+                     w(u,v) with w(u,v) = <x_u, x_v>, x >= 0 — the cut
+                     objective of the GreeDi/core-set evaluations, in O(d)
+                     state: f(S) = <t, s> - lam ||s||^2 for s = sum_S x_v
+  LogDetDiversity    f(S) = log det(I + alpha K_S) (DPP-style diversity);
+                     state is the O(k*d) whitened basis U = L^{-1} X_S of
+                     an incremental Cholesky, so marginals are one matmul
+  ExemplarClustering k-medoid loss reduction over a reference set R:
+                     f(S) = L({e0}) - L(S + e0), L(S) = sum_{v in R}
+                     min_{e in S} ||v - x_e||^2 (phantom exemplar at 0);
+                     state is R's current min-distance vector
   AdversarialThreshold  the hard instance of Theorem 4, in closed form
 """
 
@@ -186,6 +197,165 @@ class WeightedCoverage(SubmodularOracle):
 
     def value(self, state):
         return jnp.sum(self._w()) - jnp.sum(state)
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphCut(SubmodularOracle):
+    """Monotone graph-cut objective over the similarity graph
+    w(u, v) = <x_u, x_v> with nonnegative features:
+
+        f(S) = sum_{u in V, v in S} w(u,v) - lam * sum_{u, v in S} w(u,v)
+             = <t, s> - lam * ||s||^2
+
+    for s = sum_{v in S} x_v and the dataset constant t = sum_{u in V} x_u.
+    The double sums collapse into inner products, so the state is the O(d)
+    accumulator ``s`` — the MapReduce "ship G to everyone" stays a d-float
+    message, and no machine ever needs the n x n similarity matrix.
+
+    lam in [0, 1/2] keeps f monotone on subsets of V (marginal of e given
+    S subseteq V \\ {e} is >= (1 - 2 lam) <t, x_e> + lam ||x_e||^2 >= 0);
+    any lam >= 0 keeps it submodular (marginals shrink as s grows).
+    ``total`` must be the feature sum of the *same* ground set the driver
+    selects from.
+    """
+
+    feat_dim: int
+    total: Any = None   # (d,) = sum of all element features
+    lam: float = 0.5
+    use_kernel: bool = False
+
+    def init_state(self):
+        return jnp.zeros((self.feat_dim,), jnp.float32)
+
+    def marginals(self, state, aux):
+        if self.use_kernel:
+            from repro.kernels import ops
+
+            return ops.graph_cut_marginals(aux, self.total, state, self.lam)
+        lin = aux @ (self.total - 2.0 * self.lam * state)
+        return lin - self.lam * jnp.sum(aux * aux, axis=-1)
+
+    def add(self, state, aux_row):
+        return state + aux_row
+
+    def value(self, state):
+        return state @ self.total - self.lam * jnp.sum(state * state)
+
+
+LOGDET_EPS = 1e-12  # Schur-complement clamp (exact math keeps it >= 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class LogDetDiversity(SubmodularOracle):
+    """DPP-style diversity:  f(S) = log det(I + alpha * X_S X_S^T).
+
+    Monotone submodular for any features (the marginal is
+    log(1 + alpha x^T (I + alpha X_S^T X_S)^{-1} x) >= 0 and shrinking).
+
+    State is an O(k*d) *incremental Cholesky in whitened form*: with
+    B = I + alpha X_S X_S^T = L L^T, keep U = L^{-1} X_S (plus the scalar
+    log det and |S|).  Then for a candidate e:
+
+        v   = alpha * U x_e               (the Cholesky border L^{-1} b_e)
+        d^2 = 1 + alpha ||x_e||^2 - ||v||^2   (Schur complement, >= 1)
+        f(S+e) - f(S) = log d^2
+
+    so ``marginals`` is one (C, d) x (d, k) matmul + row norms (the Pallas
+    kernel target), and ``add`` is a rank-1 Gram–Schmidt append:
+    U <- [U; (x_e - v^T U) / d],  log det += log d^2.  No k x k solve ever
+    runs in the hot loop, and the state stays a fixed-shape pytree.
+
+    ``k_max`` must be >= the cardinality budget the engines run with
+    (``make_oracle`` sets it to SelectorSpec.k); a speculative ``add`` at
+    |S| = k_max is an out-of-bounds scatter, which JAX drops — harmless,
+    because the engines never accept past k.
+    """
+
+    feat_dim: int
+    k_max: int = 1
+    alpha: float = 1.0
+    use_kernel: bool = False
+
+    def init_state(self):
+        return (jnp.zeros((self.k_max, self.feat_dim), jnp.float32),  # U
+                jnp.zeros((), jnp.float32),                           # logdet
+                jnp.zeros((), jnp.int32))                             # |S|
+
+    def marginals(self, state, aux):
+        U, _, _ = state
+        if self.use_kernel:
+            from repro.kernels import ops
+
+            return ops.logdet_marginals(aux, U, self.alpha)
+        proj = aux @ U.T
+        resid = 1.0 + self.alpha * jnp.sum(aux * aux, axis=-1) \
+            - (self.alpha ** 2) * jnp.sum(proj * proj, axis=-1)
+        return jnp.log(jnp.maximum(resid, LOGDET_EPS))
+
+    def add(self, state, aux_row):
+        U, logdet, size = state
+        v = self.alpha * (U @ aux_row)
+        d2 = jnp.maximum(
+            1.0 + self.alpha * jnp.sum(aux_row * aux_row) - jnp.sum(v * v),
+            LOGDET_EPS)
+        u_new = (aux_row - v @ U) / jnp.sqrt(d2)
+        return (U.at[size].set(u_new), logdet + jnp.log(d2), size + 1)
+
+    def value(self, state):
+        return state[1]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExemplarClustering(SubmodularOracle):
+    """k-medoid loss reduction over a replicated reference set R (r, d):
+
+        f(S) = L({e0}) - L(S + {e0}),
+        L(S) = sum_{v in R} min_{e in S} ||v - x_e||^2
+
+    with the phantom exemplar e0 at the origin (standard in the
+    distributed exemplar-clustering evaluations).  The state is R's
+    current min squared-distance vector m (r,), initialized to
+    m0 = ||v||^2; marginals are sum_j max(m_j - d2(e, j), 0) — the same
+    shape as facility location with distances instead of similarities, so
+    the same fused-kernel treatment applies (``use_kernel=True`` streams
+    (chunk, d) tiles through repro.kernels.exemplar_marginals and never
+    materializes the (C, r) distance block).
+    """
+
+    feat_dim: int
+    reference: Any = None   # (r, d)
+    use_kernel: bool = False
+
+    def _m0(self):
+        ref = self.reference.astype(jnp.float32)
+        return jnp.sum(ref * ref, axis=-1)
+
+    def init_state(self):
+        return self._m0()
+
+    def prep(self, state, cand_feats):
+        # (C, r) squared distances, clamped at 0 against float cancellation
+        d2 = self._m0()[None, :] - 2.0 * (cand_feats @ self.reference.T) \
+            + jnp.sum(cand_feats * cand_feats, axis=-1, keepdims=True)
+        return jnp.maximum(d2, 0.0)
+
+    def marginals(self, state, aux):
+        return jnp.sum(jnp.maximum(state[None, :] - aux, 0.0), axis=-1)
+
+    def chunk_marginals(self, state, cand_feats):
+        # The lazy engine's hot path: a (B, d) tile against the min-distance
+        # vector, fused so the (C, r) distance block never exists in HBM.
+        if self.use_kernel:
+            from repro.kernels import ops
+
+            return ops.exemplar_marginals(cand_feats, self.reference, state)
+        return self.marginals(state, self.prep(state, cand_feats))
+
+    def add(self, state, aux_row):
+        return jnp.minimum(state, aux_row)
+
+    def value(self, state):
+        return jnp.sum(self._m0() - state)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -21,21 +21,34 @@ from repro.core import mapreduce as mr
 @dataclasses.dataclass(frozen=True)
 class SelectorSpec:
     k: int
-    oracle: str = "feature_coverage"   # | facility_location | weighted_coverage
+    oracle: str = "feature_coverage"   # see ORACLE_NAMES for the full zoo
     algorithm: str = "two_round"       # | multi_threshold | two_round_known_opt
     t: int = 1                         # thresholds for multi_threshold
     eps: float = 0.15
     accept: str = "first"
     engine: str = "dense"              # ThresholdGreedy: "dense" | "lazy"
     chunk: int = 128                   # lazy-engine rescore chunk size
-    reference_size: int = 256          # facility location client set
+    reference_size: int = 256          # facility location / exemplar clients
     use_kernel: bool = False
+    graph_cut_lam: float = 0.5         # GraphCut redundancy penalty, <= 1/2
+    logdet_alpha: float = 1.0          # LogDetDiversity kernel scale
     oracle_tp: bool = False            # shard the feature dim over "model"
     #                                    (TPOracle — the central phase's
     #                                    elementwise work / tp per device)
 
 
-def make_oracle(spec: SelectorSpec, feat_dim: int, reference=None):
+#: every oracle make_oracle can build — benchmarks and the conformance
+#: harness sweep this list, so registering an oracle here opts it into the
+#: ratio / throughput / property-test coverage.
+ORACLE_NAMES = ("feature_coverage", "facility_location", "weighted_coverage",
+                "graph_cut", "log_det", "exemplar")
+
+
+def make_oracle(spec: SelectorSpec, feat_dim: int, reference=None,
+                total=None):
+    """Build the spec's oracle.  ``reference`` is the replicated client set
+    for facility_location / exemplar; ``total`` is the ground-set feature
+    sum for graph_cut (a dataset statistic, computed once up front)."""
     if spec.oracle == "feature_coverage":
         return F.FeatureCoverage(feat_dim=feat_dim,
                                  use_kernel=spec.use_kernel)
@@ -45,7 +58,21 @@ def make_oracle(spec: SelectorSpec, feat_dim: int, reference=None):
                                   use_kernel=spec.use_kernel)
     if spec.oracle == "weighted_coverage":
         return F.WeightedCoverage(feat_dim=feat_dim)
-    raise ValueError(f"unknown oracle {spec.oracle!r}")
+    if spec.oracle == "graph_cut":
+        assert total is not None, \
+            "graph_cut needs the ground-set feature sum (total)"
+        return F.GraphCut(feat_dim=feat_dim, total=total,
+                          lam=spec.graph_cut_lam, use_kernel=spec.use_kernel)
+    if spec.oracle == "log_det":
+        return F.LogDetDiversity(feat_dim=feat_dim, k_max=spec.k,
+                                 alpha=spec.logdet_alpha,
+                                 use_kernel=spec.use_kernel)
+    if spec.oracle == "exemplar":
+        assert reference is not None, "exemplar needs a reference set"
+        return F.ExemplarClustering(feat_dim=feat_dim, reference=reference,
+                                    use_kernel=spec.use_kernel)
+    raise ValueError(f"unknown oracle {spec.oracle!r}; "
+                     f"registered: {ORACLE_NAMES}")
 
 
 class DistributedSelector:
@@ -58,7 +85,7 @@ class DistributedSelector:
     """
 
     def __init__(self, spec: SelectorSpec, mesh: Mesh, n_total: int,
-                 feat_dim: int, axes=("data",), reference=None):
+                 feat_dim: int, axes=("data",), reference=None, total=None):
         self.spec = spec
         self.mesh = mesh
         self.axes = tuple(a for a in axes if a in mesh.shape)
@@ -78,7 +105,7 @@ class DistributedSelector:
             ax0 = self.axes if len(self.axes) > 1 else self.axes[0]
             self._data_spec = P(ax0, "model")
         else:
-            self.oracle = make_oracle(spec, feat_dim, reference)
+            self.oracle = make_oracle(spec, feat_dim, reference, total)
             self._data_spec = P(self.axes if len(self.axes) > 1
                                 else self.axes[0])
         if spec.algorithm == "multi_threshold":

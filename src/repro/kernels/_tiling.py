@@ -1,0 +1,25 @@
+"""Shared tiling helpers for the Pallas kernels in this package.
+
+Every kernel pads its operands up to block multiples before `pallas_call`
+and slices the padding back off the output; the pad *value* is chosen per
+operand so padded rows/columns contribute exactly zero to the reduction
+(e.g. +inf state columns under a rectified residual, -inf state columns
+under a distance residual, zero feature columns under a linear term).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def pad_axis(x, axis: int, target: int, value=0.0):
+    pad = target - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)

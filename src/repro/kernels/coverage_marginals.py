@@ -22,6 +22,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels._tiling import ceil_to as _ceil_to
+from repro.kernels._tiling import pad_axis as _pad_axis
+
 DEFAULT_BC = 256
 DEFAULT_BF = 512
 
@@ -69,16 +72,3 @@ def coverage_marginals(x, state, weights=None, *, block_c: int = DEFAULT_BC,
         interpret=interpret,
     )(x_p, state_p, w_p)
     return out[:C]
-
-
-def _ceil_to(x: int, m: int) -> int:
-    return ((x + m - 1) // m) * m
-
-
-def _pad_axis(x, axis: int, target: int, value=0.0):
-    pad = target - x.shape[axis]
-    if pad <= 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths, constant_values=value)

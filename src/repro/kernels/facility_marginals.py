@@ -30,6 +30,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels._tiling import ceil_to as _ceil_to
+from repro.kernels._tiling import pad_axis as _pad_axis
 
 DEFAULT_BC = 256   # candidate rows per tile
 DEFAULT_BR = 512   # reference cols per tile
@@ -131,18 +133,3 @@ def rectified_residual_sum(aux, state, *, block_c: int = DEFAULT_BC,
         interpret=interpret,
     )(aux_p, state_p)
     return out[:C]
-
-
-# ---------------------------------------------------------------------------
-
-def _ceil_to(x: int, m: int) -> int:
-    return ((x + m - 1) // m) * m
-
-
-def _pad_axis(x, axis: int, target: int, value=0.0):
-    pad = target - x.shape[axis]
-    if pad <= 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths, constant_values=value)

@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: fused log-det diversity marginal gains.
+
+    gains[i] = log( 1 + alpha*||x_i||^2 - alpha^2*||U @ x_i||^2 )
+
+where U = L^{-1} X_S is LogDetDiversity's whitened selected-feature basis
+(see repro.core.functions.LogDetDiversity): the bracket is the Schur
+complement of the bordered Gram matrix, i.e. exactly f(S+e) - f(S) for
+f(S) = log det(I + alpha * X_S X_S^T).
+
+The hot part is the (C, d) x (d, k) projection — an MXU matmul — followed
+by two row-norm reductions and a transcendental, all fused so the (C, k)
+projection block never leaves VMEM (the XLA path materializes it in HBM
+plus a separate (C,) norm pass).  k <= the cardinality budget (tiny), so U
+is kept fully resident; the grid tiles candidates only.
+
+Grid: (C/bc,).  Padding: candidate rows pad with 0 (their gains are sliced
+off); U rows beyond |S| are zero by construction and padded k columns are
+zero too, contributing exactly 0 to the projection norm.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels._tiling import ceil_to as _ceil_to
+from repro.kernels._tiling import pad_axis as _pad_axis
+
+DEFAULT_BC = 256
+RESID_EPS = 1e-12   # clamp for the Schur complement (exact math keeps it >= 1)
+
+
+def _ld_kernel(x_ref, ut_ref, out_ref, *, alpha, eps):
+    x = x_ref[...].astype(jnp.float32)                   # (bc, d)
+    # MXU: (bc, d) @ (d, kp) projection onto the whitened selected basis
+    proj = jnp.dot(x, ut_ref[...], preferred_element_type=jnp.float32)
+    sq = jnp.sum(x * x, axis=-1)
+    resid = 1.0 + alpha * sq - (alpha * alpha) * jnp.sum(proj * proj, axis=-1)
+    out_ref[...] = jnp.log(jnp.maximum(resid, eps))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("alpha", "eps", "block_c", "interpret"))
+def logdet_marginals(x, U, alpha: float = 1.0, eps: float = RESID_EPS, *,
+                     block_c: int = DEFAULT_BC, interpret: bool = False):
+    """(C, d), (k, d) -> (C,) f32 log-det diversity marginal gains."""
+    C, d = x.shape
+    k = U.shape[0]
+    bc = min(block_c, _ceil_to(C, 8))
+    Cp = _ceil_to(C, bc)
+    kp = _ceil_to(max(k, 1), 8)
+
+    x_p = _pad_axis(x, 0, Cp)
+    ut_p = _pad_axis(U.astype(jnp.float32).T, 1, kp)     # (d, kp)
+
+    grid = (Cp // bc,)
+    out = pl.pallas_call(
+        functools.partial(_ld_kernel, alpha=alpha, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bc, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, kp), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bc,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Cp,), jnp.float32),
+        interpret=interpret,
+    )(x_p, ut_p)
+    return out[:C]

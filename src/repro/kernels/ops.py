@@ -11,7 +11,10 @@ from __future__ import annotations
 import jax
 
 from repro.kernels import coverage_marginals as _cm
+from repro.kernels import exemplar_marginals as _em
 from repro.kernels import facility_marginals as _fm
+from repro.kernels import graph_cut_marginals as _gc
+from repro.kernels import logdet_marginals as _ld
 
 
 def _interpret() -> bool:
@@ -48,4 +51,35 @@ def coverage_marginals(x, state, weights=None, *, block_c=None, block_f=None):
     if block_f:
         kw["block_f"] = block_f
     return _cm.coverage_marginals(x, state, weights,
+                                  interpret=_interpret(), **kw)
+
+
+def graph_cut_marginals(x, total, state, lam=0.5, *, block_c=None,
+                        block_f=None):
+    """Fused (C,d),(d,),(d,)->(C,) GraphCut marginals."""
+    kw = {}
+    if block_c:
+        kw["block_c"] = block_c
+    if block_f:
+        kw["block_f"] = block_f
+    return _gc.graph_cut_marginals(x, total, state, lam,
+                                   interpret=_interpret(), **kw)
+
+
+def logdet_marginals(x, U, alpha=1.0, *, block_c=None):
+    """Fused (C,d),(k,d)->(C,) log-det diversity marginals."""
+    kw = {}
+    if block_c:
+        kw["block_c"] = block_c
+    return _ld.logdet_marginals(x, U, alpha, interpret=_interpret(), **kw)
+
+
+def exemplar_marginals(cand, ref, state, *, block_c=None, block_r=None):
+    """Fused (C,d)x(r,d)->(C,) exemplar-clustering marginals."""
+    kw = {}
+    if block_c:
+        kw["block_c"] = block_c
+    if block_r:
+        kw["block_r"] = block_r
+    return _em.exemplar_marginals(cand, ref, state,
                                   interpret=_interpret(), **kw)

@@ -51,3 +51,54 @@ def coverage_marginals(x, state, weights=None):
     if weights is not None:
         g = g * weights[None, :]
     return jnp.sum(g, axis=-1).astype(jnp.float32)
+
+
+def graph_cut_marginals(x, total, state, lam=0.5):
+    """(C, d), (d,), (d,) -> (C,): GraphCut marginal gains.
+
+    gains[i] = <x_i, total> - lam * (2 <x_i, state> + ||x_i||^2)
+             = <x_i, total - 2*lam*state> - lam * ||x_i||^2
+
+    with total = sum of all element features and state = sum of the
+    selected features (so <total, state-ish> inner products realize the
+    cut/coupling sums of f(S) = <t, s> - lam ||s||^2 in O(d)).
+    """
+    x = x.astype(jnp.float32)
+    lin = x @ (total.astype(jnp.float32) - 2.0 * lam * state.astype(jnp.float32))
+    return (lin - lam * jnp.sum(x * x, axis=-1)).astype(jnp.float32)
+
+
+def logdet_marginals(x, U, alpha=1.0, eps=1e-12):
+    """(C, d), (k, d) -> (C,): log-det diversity marginal gains.
+
+    gains[i] = log(1 + alpha*||x_i||^2 - alpha^2*||U x_i||^2)
+
+    U = L^{-1} X_S is the whitened selected-feature basis (rows beyond |S|
+    are zero); the bracket is the Schur complement of the bordered Gram
+    matrix I + alpha * X_{S+e} X_{S+e}^T, which is >= 1 in exact
+    arithmetic — ``eps`` only guards float cancellation near-duplicates.
+    """
+    x = x.astype(jnp.float32)
+    proj = x @ U.astype(jnp.float32).T
+    resid = 1.0 + alpha * jnp.sum(x * x, axis=-1) \
+        - (alpha * alpha) * jnp.sum(proj * proj, axis=-1)
+    return jnp.log(jnp.maximum(resid, eps)).astype(jnp.float32)
+
+
+def exemplar_marginals(cand, ref, state):
+    """(C, d), (r, d), (r,) -> (C,): exemplar-clustering marginal gains.
+
+    gains[i] = sum_j max(state[j] - d2(i, j), 0)
+    d2(i, j) = max(||ref_j||^2 - 2 <cand_i, ref_j> + ||cand_i||^2, 0)
+
+    `state` is the current per-reference min squared distance; the gain is
+    the k-medoid loss reduction candidate i buys over the reference set.
+    """
+    cand = cand.astype(jnp.float32)
+    ref = ref.astype(jnp.float32)
+    refsq = jnp.sum(ref * ref, axis=-1)
+    d2 = refsq[None, :] - 2.0 * (cand @ ref.T) \
+        + jnp.sum(cand * cand, axis=-1, keepdims=True)
+    d2 = jnp.maximum(d2, 0.0)
+    return jnp.sum(jnp.maximum(state[None, :] - d2, 0.0),
+                   axis=-1).astype(jnp.float32)

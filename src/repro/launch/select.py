@@ -27,7 +27,8 @@ def main() -> None:
     ap.add_argument("--d", type=int, default=64)
     ap.add_argument("--oracle", default="feature_coverage",
                     choices=["feature_coverage", "facility_location",
-                             "weighted_coverage"])
+                             "weighted_coverage", "graph_cut", "log_det",
+                             "exemplar"])
     ap.add_argument("--algorithm", default="two_round",
                     choices=["two_round", "multi_threshold"])
     ap.add_argument("--t", type=int, default=3)
@@ -40,13 +41,14 @@ def main() -> None:
     emb = jax.random.uniform(kd, (args.n, args.d)) ** 2
 
     reference = None
-    if args.oracle == "facility_location":
+    if args.oracle in ("facility_location", "exemplar"):
         reference = jax.random.uniform(kr, (256, args.d))
+    total = jnp.sum(emb, axis=0) if args.oracle == "graph_cut" else None
 
     spec = SelectorSpec(k=args.k, oracle=args.oracle,
                         algorithm=args.algorithm, t=args.t)
     sel = DistributedSelector(spec, mesh, n_total=args.n, feat_dim=args.d,
-                              reference=reference)
+                              reference=reference, total=total)
     with mesh:
         emb = jax.device_put(emb, sel.data_sharding())
         t0 = time.time()

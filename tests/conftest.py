@@ -1,0 +1,29 @@
+"""Test-session config: deterministic hypothesis profiles.
+
+Property tests must be reproducible on CI's CPU runners — a flaky random
+draw that only fails on one runner is worse than no property test.  Two
+profiles:
+
+  * ``ci``  — fixed derandomized draws, bounded example counts, no
+    deadline (CPU runners are slow and jit compiles blow any per-example
+    deadline).  Selected by CI via HYPOTHESIS_PROFILE=ci.
+  * ``dev`` — the same bounds but randomized draws, for local fuzzing.
+
+`hypothesis` itself is a soft dependency (tests/_hypothesis_compat.py);
+without it this conftest is a no-op and the property tests skip.
+"""
+
+import os
+
+try:
+    from hypothesis import HealthCheck, settings
+
+    settings.register_profile(
+        "ci", derandomize=True, max_examples=25, deadline=None,
+        suppress_health_check=[HealthCheck.too_slow])
+    settings.register_profile(
+        "dev", max_examples=25, deadline=None,
+        suppress_health_check=[HealthCheck.too_slow])
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))
+except ModuleNotFoundError:  # property tests skip via _hypothesis_compat
+    pass

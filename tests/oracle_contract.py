@@ -1,0 +1,108 @@
+"""Shared submodularity conformance harness.
+
+One registry of oracle builders + direct set-function evaluators, consumed
+by tests/test_oracle_contract.py as a single parametrized suite: every
+oracle registered here is automatically checked for monotonicity,
+diminishing returns, marginals/chunk_marginals parity, and add-consistency
+(f(S+e) - f(S) == the reported marginal).  Registering a new oracle means
+adding ONE builder — no per-oracle test copies.
+
+Builders return ``(oracle, feats)`` with features drawn from the oracle's
+natural domain (nonneg rows for coverage/cut objectives, incidence rows
+for weighted coverage, unconstrained rows for log-det).  ``k_cap`` bounds
+the subset sizes the property tests draw, so fixed-capacity states
+(LogDetDiversity) are always built large enough.
+
+AdversarialThreshold is deliberately NOT registered: it is the Theorem-4
+hard instance, monotone submodular only over its structured decoy/optimal
+ground set, and has its own closed-form test in test_core_functions.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (ExemplarClustering, FacilityLocation,
+                        FeatureCoverage, GraphCut, LogDetDiversity,
+                        WeightedCoverage)
+
+K_CAP = 8   # max subset size the property tests draw (>= |B| + 1 below)
+
+
+def _nonneg(rng, n, d):
+    return jnp.asarray((rng.random((n, d)).astype(np.float32)) ** 2)
+
+
+def build_feature_coverage(rng, n, d):
+    return FeatureCoverage(feat_dim=d), _nonneg(rng, n, d)
+
+
+def build_weighted_coverage(rng, n, d):
+    inc = jnp.asarray((rng.random((n, d)) < 0.3).astype(np.float32))
+    w = jnp.asarray(rng.random(d).astype(np.float32))
+    return WeightedCoverage(feat_dim=d, weights=w), inc
+
+
+def build_facility_location(rng, n, d):
+    ref = jnp.asarray(rng.random((max(4, n // 2), d)).astype(np.float32))
+    return (FacilityLocation(feat_dim=d, reference=ref),
+            jnp.asarray(rng.random((n, d)).astype(np.float32)))
+
+
+def build_graph_cut(rng, n, d):
+    feats = _nonneg(rng, n, d)
+    # lam = 1/2 is the monotonicity boundary — exercise it, not a safe lam
+    return GraphCut(feat_dim=d, total=jnp.sum(feats, axis=0), lam=0.5), feats
+
+
+def build_log_det(rng, n, d):
+    feats = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+    return LogDetDiversity(feat_dim=d, k_max=K_CAP, alpha=1.0), feats
+
+
+def build_exemplar(rng, n, d):
+    ref = jnp.asarray(rng.random((max(4, n // 2), d)).astype(np.float32))
+    return (ExemplarClustering(feat_dim=d, reference=ref),
+            jnp.asarray(rng.random((n, d)).astype(np.float32)))
+
+
+REGISTRY = {
+    "feature_coverage": build_feature_coverage,
+    "weighted_coverage": build_weighted_coverage,
+    "facility_location": build_facility_location,
+    "graph_cut": build_graph_cut,
+    "log_det": build_log_det,
+    "exemplar": build_exemplar,
+}
+
+#: oracles whose hot paths route through a Pallas kernel when
+#: ``use_kernel=True`` (swept by the kernel differential tests)
+KERNELED = ("feature_coverage", "facility_location", "graph_cut", "log_det",
+            "exemplar")
+
+
+def state_of(oracle, feats, subset):
+    """Oracle state for S = subset, built by chained adds (the only state
+    constructor the contract exposes)."""
+    st = oracle.init_state()
+    if len(subset):
+        aux = oracle.prep(st, feats[np.asarray(subset)])
+        for i in range(len(subset)):
+            st = oracle.add(st, jax.tree.map(lambda a: a[i], aux))
+    return st
+
+
+def f_of(oracle, feats, subset):
+    """Direct evaluation f(S) through the state chain."""
+    return float(oracle.value(state_of(oracle, feats, subset)))
+
+
+def distinct_subsets(rng, n, size_a, extra, with_e=True):
+    """A nested pair A ⊂ B plus an element e outside B."""
+    perm = rng.permutation(n).tolist()
+    A = sorted(perm[:size_a])
+    B = sorted(perm[:size_a + extra])
+    e = perm[size_a + extra] if with_e else None
+    return A, B, e

@@ -186,3 +186,129 @@ def test_feature_coverage_oracle_kernel_route():
     np.testing.assert_allclose(
         np.asarray(plain.marginals(st0, X)),
         np.asarray(fused.marginals(st0, X)), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# oracle-zoo kernels: graph_cut / logdet / exemplar vs ref.py
+# ---------------------------------------------------------------------------
+
+from repro.kernels.exemplar_marginals import exemplar_marginals  # noqa: E402
+from repro.kernels.graph_cut_marginals import graph_cut_marginals  # noqa: E402
+from repro.kernels.logdet_marginals import logdet_marginals  # noqa: E402
+
+
+@pytest.mark.parametrize("C,d", SHAPES_CM)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("lam", [0.0, 0.5])
+def test_graph_cut_marginals_matches_ref(C, d, dtype, lam):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(C * 3 + d), 3)
+    x = jnp.abs(_rand(k1, (C, d), dtype))            # cut weights need x >= 0
+    total = jnp.abs(_rand(k2, (d,), jnp.float32)) * C
+    state = jnp.abs(_rand(k3, (d,), jnp.float32))
+    got = graph_cut_marginals(x, total, state, lam, interpret=True)
+    want = ref.graph_cut_marginals(x.astype(jnp.float32), total, state, lam)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol * C)
+
+
+@pytest.mark.parametrize("C,k,d", [(256, 8, 64), (100, 3, 96), (8, 1, 16),
+                                   (1, 1, 1), (513, 33, 40), (64, 0, 12)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_logdet_marginals_matches_ref(C, k, d, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(C * 5 + d))
+    x = _rand(k1, (C, d), dtype)
+    # a realistic U: orthonormal-ish rows with zero tail (|S| < k_max)
+    U = _rand(k2, (k, d), jnp.float32) * 0.3
+    if k > 1:
+        U = U.at[-1].set(0.0)
+    got = logdet_marginals(x, U, alpha=0.7, interpret=True)
+    want = ref.logdet_marginals(x.astype(jnp.float32), U, alpha=0.7)
+    # log() amplifies the matmul's reduction-order noise near cancellation
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("C,r,d", SHAPES_FM)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_exemplar_marginals_matches_ref(C, r, d, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(C * 11 + r), 3)
+    cand = _rand(k1, (C, d), dtype)
+    refs = _rand(k2, (r, d), dtype)
+    state = jnp.abs(_rand(k3, (r,), jnp.float32)) * d
+    got = exemplar_marginals(cand, refs, state, interpret=True)
+    want = ref.exemplar_marginals(cand, refs, state)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol * max(d, r))
+
+
+@pytest.mark.parametrize("block_c,block_r", [(8, 128), (64, 128), (16, 256)])
+def test_zoo_kernels_block_shape_invariance(block_c, block_r):
+    """Tiling must not change any zoo kernel's output."""
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(1), 4)
+    cand = _rand(k1, (200, 48), jnp.float32)
+    refs = _rand(k2, (333, 48), jnp.float32)
+    state_r = jnp.abs(_rand(k3, (333,), jnp.float32)) * 48
+    np.testing.assert_allclose(
+        exemplar_marginals(cand, refs, state_r, block_c=block_c,
+                           block_r=block_r, interpret=True),
+        ref.exemplar_marginals(cand, refs, state_r), rtol=1e-5, atol=1e-3)
+    x = jnp.abs(cand)
+    total = jnp.abs(_rand(k4, (48,), jnp.float32)) * 200
+    state_d = jnp.abs(_rand(k3, (48,), jnp.float32))
+    np.testing.assert_allclose(
+        graph_cut_marginals(x, total, state_d, 0.5, block_c=block_c,
+                            block_f=block_r, interpret=True),
+        ref.graph_cut_marginals(x, total, state_d, 0.5),
+        rtol=1e-5, atol=1e-3)
+    U = _rand(k4, (16, 48), jnp.float32) * 0.3
+    np.testing.assert_allclose(
+        logdet_marginals(cand, U, block_c=block_c, interpret=True),
+        ref.logdet_marginals(cand, U), rtol=1e-5, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 40), st.integers(1, 12), st.integers(0, 2 ** 31 - 1))
+def test_zoo_kernel_submodular_invariants(C, d, seed):
+    """Kernel outputs obey diminishing returns: a pointwise-larger state
+    (bigger cut accumulator / smaller residual basis span is excluded here;
+    graph_cut and exemplar shrink pointwise as their states grow)."""
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = jnp.abs(jax.random.normal(k1, (C, d)))
+    total = jnp.sum(x, axis=0)
+    s0 = jnp.abs(jax.random.normal(k2, (d,)))
+    bump = jnp.abs(jax.random.normal(k3, (d,)))
+    g0 = graph_cut_marginals(x, total, s0, 0.5, interpret=True)
+    g1 = graph_cut_marginals(x, total, s0 + bump, 0.5, interpret=True)
+    assert bool(jnp.all(g1 <= g0 + 1e-5))
+    refs = jnp.abs(jax.random.normal(k4, (max(2, C // 2), d)))
+    m0 = jnp.sum(refs * refs, axis=-1)
+    e0 = exemplar_marginals(x, refs, m0, interpret=True)
+    e1 = exemplar_marginals(x, refs, m0 * 0.5, interpret=True)  # cover shrank
+    assert bool(jnp.all(e0 >= -1e-6)) and bool(jnp.all(e1 <= e0 + 1e-5))
+
+
+from oracle_contract import KERNELED, REGISTRY  # noqa: E402
+
+
+@pytest.mark.parametrize("name", KERNELED)
+def test_oracle_kernel_routes_match_plain(name):
+    """Every kernel-capable registered oracle: use_kernel=True equals the
+    pure-jnp path on a non-trivial state.  Parametrized over the shared
+    registry's KERNELED list, so a new kerneled oracle is swept by adding
+    it there — no per-oracle copy."""
+    import dataclasses
+
+    rng = np.random.default_rng(23)
+    plain, X = REGISTRY[name](rng, 40, 24)
+    fused = dataclasses.replace(plain, use_kernel=True)
+    st_ = plain.init_state()
+    aux = plain.prep(st_, X)
+    for i in (3, 11):   # route through a non-trivial state too
+        st_ = plain.add(st_, jax.tree.map(lambda a: a[i], aux))
+    np.testing.assert_allclose(
+        np.asarray(fused.chunk_marginals(st_, X)),
+        np.asarray(plain.marginals(st_, plain.prep(st_, X))),
+        rtol=1e-5, atol=1e-4, err_msg=name)

@@ -1,0 +1,135 @@
+"""Submodularity conformance suite: every oracle in the shared registry
+(tests/oracle_contract.py) — old and new — passes the same four contract
+checks.  Adding an oracle to the registry opts it in automatically; there
+are no per-oracle copies of these tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+from oracle_contract import K_CAP, REGISTRY, distinct_subsets, f_of, state_of
+
+jax.config.update("jax_platform_name", "cpu")
+
+NAMES = sorted(REGISTRY)
+N, D = 14, 6
+
+
+def _build(name, seed):
+    rng = np.random.default_rng(seed)
+    oracle, feats = REGISTRY[name](rng, N, D)
+    return rng, oracle, feats
+
+
+def _tol(*values):
+    return 2e-4 * max(1.0, *(abs(v) for v in values))
+
+
+@pytest.mark.parametrize("name", NAMES)
+@given(seed=st.integers(0, 2 ** 16))
+@settings(max_examples=12, deadline=None)
+def test_monotonicity(name, seed):
+    """f(S + e) >= f(S) on nested random subsets."""
+    rng, oracle, feats = _build(name, seed)
+    A, B, e = distinct_subsets(rng, N, 2, K_CAP - 3)
+    fA, fB = f_of(oracle, feats, A), f_of(oracle, feats, B)
+    fAe, fBe = f_of(oracle, feats, A + [e]), f_of(oracle, feats, B + [e])
+    tol = _tol(fB, fBe)
+    assert fAe - fA >= -tol, f"{name}: monotonicity broken at |S|={len(A)}"
+    assert fBe - fB >= -tol, f"{name}: monotonicity broken at |S|={len(B)}"
+
+
+@pytest.mark.parametrize("name", NAMES)
+@given(seed=st.integers(0, 2 ** 16))
+@settings(max_examples=12, deadline=None)
+def test_diminishing_returns(name, seed):
+    """A ⊆ B ⟹ f(A+e) - f(A) >= f(B+e) - f(B)."""
+    rng, oracle, feats = _build(name, seed)
+    A, B, e = distinct_subsets(rng, N, 2, K_CAP - 3)
+    dA = f_of(oracle, feats, A + [e]) - f_of(oracle, feats, A)
+    dB = f_of(oracle, feats, B + [e]) - f_of(oracle, feats, B)
+    assert dA - dB >= -_tol(dA, dB), \
+        f"{name}: marginal grew from {dA} to {dB} as S grew"
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_add_consistency(name):
+    """The state-based marginal equals direct f(S+e) - f(S) for every e,
+    and `add` lands on the state whose value is f(S) + marginal."""
+    rng, oracle, feats = _build(name, seed=0)
+    S = [1, 4, 9]
+    st_ = state_of(oracle, feats, S)
+    aux = oracle.prep(st_, feats)
+    gains = np.asarray(oracle.marginals(st_, aux))
+    fS = f_of(oracle, feats, S)
+    for e in range(N):
+        if e in S:
+            continue
+        direct = f_of(oracle, feats, S + [e]) - fS
+        np.testing.assert_allclose(gains[e], direct, rtol=3e-4, atol=3e-4,
+                                   err_msg=f"{name}: marginal({e}) != direct")
+        st_e = oracle.add(st_, jax.tree.map(lambda a: a[e], aux))
+        np.testing.assert_allclose(float(oracle.value(st_e)), fS + gains[e],
+                                   rtol=3e-4, atol=3e-4,
+                                   err_msg=f"{name}: add({e}) inconsistent")
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_monotone_submodular_fixed_seeds(name):
+    """Hypothesis-free fallback for the two property laws above: the same
+    checks over a fixed seed sweep, so the contract stays enforced in
+    minimal containers where `hypothesis` isn't installed."""
+    for seed in range(6):
+        rng, oracle, feats = _build(name, seed)
+        A, B, e = distinct_subsets(rng, N, 2, K_CAP - 3)
+        fA, fB = f_of(oracle, feats, A), f_of(oracle, feats, B)
+        fAe, fBe = f_of(oracle, feats, A + [e]), f_of(oracle, feats, B + [e])
+        tol = _tol(fB, fBe)
+        assert fAe - fA >= -tol and fBe - fB >= -tol, \
+            f"{name}: monotonicity broken (seed={seed})"
+        assert (fAe - fA) - (fBe - fB) >= -tol, \
+            f"{name}: diminishing returns broken (seed={seed})"
+
+
+@pytest.mark.parametrize("name", NAMES)
+@pytest.mark.parametrize("chunk", [1, 5, N])
+def test_marginals_chunk_parity(name, chunk, seed=3):
+    """chunk_marginals (the lazy engine's streaming path) agrees with the
+    prep+marginals dense path — full-block and on every chunk slice."""
+    rng, oracle, feats = _build(name, seed)
+    st_ = state_of(oracle, feats, [0, 3])
+    dense = np.asarray(oracle.marginals(st_, oracle.prep(st_, feats)))
+    full = np.asarray(oracle.chunk_marginals(st_, feats))
+    np.testing.assert_allclose(full, dense, rtol=1e-5, atol=1e-5)
+    sliced = np.concatenate([
+        np.asarray(oracle.chunk_marginals(st_, feats[i:i + chunk]))
+        for i in range(0, N, chunk)])
+    np.testing.assert_allclose(sliced, dense, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_marginals_nonnegative(name):
+    """Monotone f ⟹ nonnegative marginals, from any reachable state."""
+    rng, oracle, feats = _build(name, seed=5)
+    for S in ([], [2], [0, 5, 7, 10]):
+        st_ = state_of(oracle, feats, S)
+        gains = np.asarray(oracle.marginals(st_, oracle.prep(st_, feats)))
+        keep = np.setdiff1d(np.arange(N), S)
+        assert gains[keep].min() >= -1e-5, \
+            f"{name}: negative marginal from |S|={len(S)}"
+
+
+@pytest.mark.parametrize("name", NAMES)
+def test_state_is_fixed_shape_pytree(name):
+    """The engines lax.while_loop over (state, ...) and jnp.where-combine
+    accepted/rejected states, so every add must preserve the state's tree
+    structure, shapes and dtypes."""
+    rng, oracle, feats = _build(name, seed=7)
+    st0 = oracle.init_state()
+    aux = oracle.prep(st0, feats)
+    st1 = oracle.add(st0, jax.tree.map(lambda a: a[0], aux))
+    l0, l1 = jax.tree.leaves(st0), jax.tree.leaves(st1)
+    assert jax.tree.structure(st0) == jax.tree.structure(st1)
+    for a, b in zip(l0, l1):
+        assert a.shape == b.shape and a.dtype == b.dtype

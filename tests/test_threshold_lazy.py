@@ -13,7 +13,8 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core import (FacilityLocation, FeatureCoverage, MRConfig,
+from repro.core import (ExemplarClustering, FacilityLocation,
+                        FeatureCoverage, GraphCut, LogDetDiversity, MRConfig,
                         WeightedCoverage, two_round_known_opt_sim,
                         two_round_sim)
 from repro.core import mapreduce as mr
@@ -34,6 +35,16 @@ def _setup(name, seed=0, n=256, d=10, k=10):
         feats = jnp.asarray(rng.random((n, d)).astype(np.float32))
         ref = jnp.asarray(rng.random((24, d)).astype(np.float32))
         oracle = FacilityLocation(feat_dim=d, reference=ref)
+    elif name == "graph_cut":
+        feats = jnp.asarray((rng.random((n, d)).astype(np.float32)) ** 2)
+        oracle = GraphCut(feat_dim=d, total=jnp.sum(feats, axis=0), lam=0.5)
+    elif name == "log_det":
+        feats = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+        oracle = LogDetDiversity(feat_dim=d, k_max=32, alpha=1.0)
+    elif name == "exemplar":
+        feats = jnp.asarray(rng.random((n, d)).astype(np.float32))
+        ref = jnp.asarray(rng.random((24, d)).astype(np.float32))
+        oracle = ExemplarClustering(feat_dim=d, reference=ref)
     else:
         feats = jnp.asarray((rng.random((n, d)).astype(np.float32)) ** 2)
         oracle = FeatureCoverage(feat_dim=d)
@@ -52,7 +63,8 @@ def _run(oracle, feats, ids, valid, tau, k, **kw):
         with_stats=True, **kw)
 
 
-ORACLES = ["feature_coverage", "facility_location", "weighted_coverage"]
+ORACLES = ["feature_coverage", "facility_location", "weighted_coverage",
+           "graph_cut", "log_det", "exemplar"]
 
 
 @pytest.mark.parametrize("name", ORACLES)
@@ -112,12 +124,16 @@ def test_lazy_engine_saves_oracle_work():
     assert int(lstats.n_evals) * 3 <= int(dstats.n_evals)
 
 
-def test_facility_chunked_kernel_path_matches_plain():
-    """FacilityLocation(use_kernel=True): the lazy engine streams (chunk, r)
-    tiles through the fused Pallas kernel (interpret on CPU) and must select
+from oracle_contract import KERNELED
+
+
+@pytest.mark.parametrize("name", KERNELED)
+def test_chunked_kernel_path_matches_plain(name):
+    """use_kernel=True: the lazy engine streams (chunk, d) tiles through the
+    oracle's fused Pallas kernel (interpret on CPU) and must select
     identically to the plain-jnp dense path."""
     k = 8
-    oracle, feats, ids, valid, tau = _setup("facility_location", seed=5)
+    oracle, feats, ids, valid, tau = _setup(name, seed=5)
     krn = dataclasses.replace(oracle, use_kernel=True)
     _, dsol, dsize, _ = _run(oracle, feats, ids, valid, tau, k,
                              engine="dense")
