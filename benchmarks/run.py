@@ -5,6 +5,7 @@
   memory_rounds           Lemma 2 / Lemma 6 memory + round counts
   distributed_baselines   vs RandGreeDi [2] and MZ core-sets [7]
   selection_throughput    engine throughput + Pallas kernel check
+  selection_qps           batched multi-query vs sequential queries/sec
   selection_roofline      §Perf pair-3 report (paper technique on the pod)
   roofline_report         aggregates results/dryrun into §Roofline rows
 
@@ -24,7 +25,7 @@ import time
 import traceback
 
 MODULES = ("approx_ratio", "adversarial", "memory_rounds",
-           "distributed_baselines", "selection_throughput",
+           "distributed_baselines", "selection_throughput", "selection_qps",
            "selection_roofline", "roofline_report")
 
 

@@ -5,25 +5,31 @@ from repro.core.functions import (AdversarialThreshold, ExemplarClustering,
                                   FacilityLocation, FeatureCoverage,
                                   GraphCut, LogDetDiversity,
                                   SubmodularOracle, WeightedCoverage,
-                                  make_adversarial_instance)
-from repro.core.mapreduce import (MRConfig, SelectionResult,
-                                  dense_two_round_sim, multi_threshold_mesh,
+                                  bind_query, make_adversarial_instance)
+from repro.core.mapreduce import (MRConfig, QueryBatch, SelectionResult,
+                                  dense_two_round_sim, make_query_batch,
+                                  multi_threshold_mesh,
                                   multi_threshold_sim, sparse_two_round_sim,
+                                  two_round_batch_mesh, two_round_batch_sim,
                                   two_round_known_opt_mesh,
                                   two_round_known_opt_sim, two_round_sim)
 from repro.core.selector import (ORACLE_NAMES, DistributedSelector,
                                  SelectorSpec, make_oracle)
 from repro.core.threshold import (GreedyStats, pack_by_mask,
-                                  threshold_filter, threshold_greedy)
+                                  threshold_filter, threshold_greedy,
+                                  threshold_greedy_batch)
 
 __all__ = [
     "GreedyStats",
     "AdversarialThreshold", "ExemplarClustering", "FacilityLocation",
     "FeatureCoverage", "GraphCut", "LogDetDiversity",
-    "SubmodularOracle", "WeightedCoverage", "make_adversarial_instance",
-    "MRConfig", "SelectionResult", "dense_two_round_sim",
-    "multi_threshold_mesh", "multi_threshold_sim", "sparse_two_round_sim",
+    "SubmodularOracle", "WeightedCoverage", "bind_query",
+    "make_adversarial_instance",
+    "MRConfig", "QueryBatch", "SelectionResult", "dense_two_round_sim",
+    "make_query_batch", "multi_threshold_mesh", "multi_threshold_sim",
+    "sparse_two_round_sim", "two_round_batch_mesh", "two_round_batch_sim",
     "two_round_known_opt_mesh", "two_round_known_opt_sim", "two_round_sim",
     "ORACLE_NAMES", "DistributedSelector", "SelectorSpec", "make_oracle",
     "pack_by_mask", "threshold_filter", "threshold_greedy",
+    "threshold_greedy_batch",
 ]

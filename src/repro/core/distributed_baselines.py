@@ -55,12 +55,18 @@ def rand_greedi(oracle, feats_mk, ids_mk, valid_mk, k: int
     sol_ids, size, central_val = _central_greedy(oracle, *U, k)
     log.add("broadcast-result", buffer_bytes(k, 0), buffer_bytes(k, 0))
 
+    # ids/size/value must come from the SAME branch: returning the best
+    # local machine's ids with the central solution's size makes the
+    # SelectionResult internally inconsistent (|ids >= 0| != sol_size).
     best_local = jnp.argmax(local_vals)
+    local_ids = ci.reshape(m, k)[best_local]
+    local_size = jnp.sum(local_ids >= 0)
     use_central = central_val >= local_vals[best_local]
     res = SelectionResult(
-        jnp.where(use_central, sol_ids, ci.reshape(m, k)[best_local]),
-        size, jnp.maximum(central_val, local_vals[best_local]),
-        jnp.zeros((), jnp.int32))
+        jnp.where(use_central, sol_ids, local_ids),
+        jnp.where(use_central, size, local_size),
+        jnp.where(use_central, central_val, local_vals[best_local]),
+        jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
     return res, log
 
 

@@ -175,11 +175,14 @@ class WeightedCoverage(SubmodularOracle):
     """Weighted max-coverage: element e covers universe items u with inc[e,u]=1.
 
     feature row = incidence row over the universe.  state = remaining
-    (uncovered) weight per universe item.
+    (uncovered) weight per universe item.  The marginal is the remaining
+    weight the row picks up — a single (C, U) x (U,) contraction, fused by
+    repro.kernels.weighted_coverage_marginals when ``use_kernel``.
     """
 
     feat_dim: int  # universe size
     weights: Any = None  # (U,) item weights; default all-ones
+    use_kernel: bool = False
 
     def _w(self):
         if self.weights is None:
@@ -190,6 +193,10 @@ class WeightedCoverage(SubmodularOracle):
         return self._w()  # remaining weight
 
     def marginals(self, state, aux):
+        if self.use_kernel:
+            from repro.kernels import ops
+
+            return ops.weighted_coverage_marginals(aux, state)
         return jnp.sum(state[None, :] * aux, axis=-1)
 
     def add(self, state, aux_row):
@@ -217,18 +224,22 @@ class GraphCut(SubmodularOracle):
     any lam >= 0 keeps it submodular (marginals shrink as s grows).
     ``total`` must be the feature sum of the *same* ground set the driver
     selects from.
+
+    ``lam`` may be a traced () scalar (the batched multi-query path carries
+    per-query lam as state); the Pallas kernel bakes lam in at compile time,
+    so a non-static lam routes through the jnp path.
     """
 
     feat_dim: int
     total: Any = None   # (d,) = sum of all element features
-    lam: float = 0.5
+    lam: Any = 0.5
     use_kernel: bool = False
 
     def init_state(self):
         return jnp.zeros((self.feat_dim,), jnp.float32)
 
     def marginals(self, state, aux):
-        if self.use_kernel:
+        if self.use_kernel and isinstance(self.lam, (int, float)):
             from repro.kernels import ops
 
             return ops.graph_cut_marginals(aux, self.total, state, self.lam)
@@ -269,11 +280,15 @@ class LogDetDiversity(SubmodularOracle):
     (``make_oracle`` sets it to SelectorSpec.k); a speculative ``add`` at
     |S| = k_max is an out-of-bounds scatter, which JAX drops — harmless,
     because the engines never accept past k.
+
+    ``alpha`` may be a traced () scalar (per-query alpha in the batched
+    multi-query path); the Pallas kernel bakes alpha in at compile time, so
+    a non-static alpha routes through the jnp path.
     """
 
     feat_dim: int
     k_max: int = 1
-    alpha: float = 1.0
+    alpha: Any = 1.0
     use_kernel: bool = False
 
     def init_state(self):
@@ -283,7 +298,7 @@ class LogDetDiversity(SubmodularOracle):
 
     def marginals(self, state, aux):
         U, _, _ = state
-        if self.use_kernel:
+        if self.use_kernel and isinstance(self.alpha, (int, float)):
             from repro.kernels import ops
 
             return ops.logdet_marginals(aux, U, self.alpha)
@@ -433,6 +448,34 @@ class TPOracle(SubmodularOracle):
 
     def value(self, state):
         return jax.lax.psum(self.base.value(state), self.axis)
+
+
+def consumes_query_params(oracle) -> bool:
+    """True when bind_query can actually rebind something on this oracle —
+    i.e. per-query hyper-parameters change its marginals.  The batched
+    drivers use the negation to share query-invariant work (singleton
+    evaluations, top-singleton messages) across the whole batch."""
+    if isinstance(oracle, TPOracle):
+        return consumes_query_params(oracle.base)
+    return isinstance(oracle, (GraphCut, LogDetDiversity))
+
+
+def bind_query(oracle, graph_cut_lam=None, logdet_alpha=None):
+    """Rebind per-query oracle hyper-parameters for the batched multi-query
+    path: the paper's algorithms only consume oracle state + a threshold, so
+    a query is fully described by (k, tau, hyper-params) and Q queries can
+    share one corpus partition.  ``graph_cut_lam`` / ``logdet_alpha`` are ()
+    scalars (typically traced, one lane of a vmapped (Q,) axis); oracles
+    without that knob pass through unchanged.  TPOracle rebinds its base so
+    the model-axis sharding wraps the query-specific oracle."""
+    if isinstance(oracle, TPOracle):
+        return dataclasses.replace(
+            oracle, base=bind_query(oracle.base, graph_cut_lam, logdet_alpha))
+    if isinstance(oracle, GraphCut) and graph_cut_lam is not None:
+        return dataclasses.replace(oracle, lam=graph_cut_lam)
+    if isinstance(oracle, LogDetDiversity) and logdet_alpha is not None:
+        return dataclasses.replace(oracle, alpha=logdet_alpha)
+    return oracle
 
 
 def make_adversarial_instance(k: int, thresholds, vstar: float = 1.0,

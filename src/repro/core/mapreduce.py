@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core.functions import bind_query, consumes_query_params
 from repro.core.rounds import RoundLog, buffer_bytes
 from repro.core.threshold import (DEFAULT_CHUNK, exclude_ids, pack_by_mask,
                                   threshold_filter, threshold_greedy)
@@ -39,6 +40,44 @@ class SelectionResult(NamedTuple):
     sol_size: jax.Array       # () int32
     value: jax.Array          # () f(S)
     n_dropped: jax.Array      # () int32 — total buffer overflow (0 whp)
+    tau_fallback: jax.Array = 0   # () int32 — # of threshold grids that hit
+    #                               the degenerate-sample (+inf) guard; > 0
+    #                               means the unknown-OPT estimate had no
+    #                               signal and the affected path selected
+    #                               nothing instead of everything
+
+
+class QueryBatch(NamedTuple):
+    """Q selection queries against one shared corpus (the query axis).
+
+    The paper's algorithms consume only oracle state + a threshold, so a
+    query is (budget, oracle hyper-parameters); Q of them share one corpus
+    partition, one sample round and one gather round.  All leaves carry a
+    leading (Q,) axis; hyper-parameters that don't apply to the active
+    oracle are ignored (see functions.bind_query)."""
+    k: jax.Array               # (Q,) int32 per-query budget, <= MRConfig.k
+    graph_cut_lam: jax.Array   # (Q,) f32 GraphCut redundancy penalty
+    logdet_alpha: jax.Array    # (Q,) f32 LogDetDiversity kernel scale
+
+    @property
+    def n_queries(self) -> int:
+        return self.k.shape[0]
+
+
+def make_query_batch(ks, graph_cut_lam=None, logdet_alpha=None,
+                     default_lam: float = 0.5,
+                     default_alpha: float = 1.0) -> QueryBatch:
+    """Build a QueryBatch from per-query budgets, filling hyper-parameter
+    lanes with the given defaults when not supplied."""
+    ks = jnp.asarray(ks, jnp.int32)
+    Q = ks.shape[0]
+    lam = (jnp.full((Q,), default_lam, jnp.float32)
+           if graph_cut_lam is None
+           else jnp.asarray(graph_cut_lam, jnp.float32))
+    alpha = (jnp.full((Q,), default_alpha, jnp.float32)
+             if logdet_alpha is None
+             else jnp.asarray(logdet_alpha, jnp.float32))
+    return QueryBatch(ks, lam, alpha)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,11 +137,12 @@ def _empty_solution(oracle, k):
             jnp.zeros((), jnp.int32))
 
 
-def _greedy(oracle, st, sol, size, feats, ids, valid, tau, k, cfg: MRConfig):
+def _greedy(oracle, st, sol, size, feats, ids, valid, tau, k, cfg: MRConfig,
+            k_dyn=None):
     valid = exclude_ids(ids, valid & (ids >= 0), sol)
     return threshold_greedy(oracle, st, sol, size, feats, ids, valid, tau, k,
                             accept=cfg.accept, engine=cfg.engine,
-                            chunk=cfg.chunk)
+                            chunk=cfg.chunk, k_dyn=k_dyn)
 
 
 # ---------------------------------------------------------------------------
@@ -145,14 +185,42 @@ def _local_top(oracle, feats, ids, valid, cap):
     return f, i, v, jnp.zeros((), jnp.int32)
 
 
-def _tau_grid(oracle, cfg, s_feats, s_ids, s_valid):
+def _tau_grid(oracle, cfg, s_feats, s_ids, s_valid, k=None):
     """Threshold guesses tau_j = (v/2k)(1+eps)^j from the sampled max
-    singleton v (the 'dense' estimate; v in [OPT/2k, OPT] whp)."""
+    singleton v (the 'dense' estimate; v in [OPT/2k, OPT] whp).
+
+    Degenerate-sample guard: an empty / all-masked / all-zero sample gives
+    v = 0 and an all-zero grid, under which EVERY candidate passes every
+    tau (marginal >= 0 always) — the algorithm would silently select k
+    arbitrary elements with no signal.  Instead the grid falls back to
+    +inf (nothing qualifies, the path selects nothing) and the event is
+    *reported*: the returned () int32 flag is 1, and the drivers surface
+    it as SelectionResult.tau_fallback.
+
+    ``k`` optionally overrides cfg.k (a traced per-query budget in the
+    batched multi-query path).
+    Returns (taus (J,), degenerate () int32)."""
+    v = _max_singleton(oracle, s_feats, s_valid)
+    return _tau_grid_from_v(cfg, v, cfg.k if k is None else k)
+
+
+def _max_singleton(oracle, s_feats, s_valid):
+    """Max singleton value v over a packed sample — the dense OPT estimate.
+    Query-invariant unless the oracle consumes per-query hyper-parameters,
+    so the batched drivers hoist it out of the per-query vmap."""
     st0 = oracle.init_state()
     singles = oracle.marginals(st0, oracle.prep(st0, s_feats))
-    v = jnp.max(jnp.where(s_valid, singles, 0.0))
+    return jnp.max(jnp.where(s_valid, singles, 0.0), initial=0.0)
+
+
+def _tau_grid_from_v(cfg, v, k):
+    """Scale the sampled max singleton v into the (J,) threshold grid for
+    budget ``k`` (traced-friendly), applying the degenerate guard."""
+    degenerate = v <= 0.0
     j = jnp.arange(cfg.grid_size(), dtype=jnp.float32)
-    return (v / (2.0 * cfg.k)) * (1.0 + cfg.eps) ** j
+    taus = (v / (2.0 * k)) * (1.0 + cfg.eps) ** j
+    taus = jnp.where(degenerate, jnp.inf, taus)
+    return taus, degenerate.astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------
@@ -188,7 +256,8 @@ def two_round_known_opt_sim(oracle, feats_mk, ids_mk, valid_mk, opt, cfg: MRConf
 
     st, sol, size = _greedy(oracle, st, sol, size, *R, tau, k, cfg)
     res = SelectionResult(sol, size, oracle.value(st),
-                          jnp.sum(sdrop) + jnp.sum(rdrop))
+                          jnp.sum(sdrop) + jnp.sum(rdrop),
+                          jnp.zeros((), jnp.int32))
     return res, log
 
 
@@ -210,7 +279,7 @@ def dense_two_round_sim(oracle, feats_mk, ids_mk, valid_mk, cfg: MRConfig,
     S = (sf.reshape(m * s_cap, d), si.reshape(-1), sv.reshape(-1))
     log.add("gather-sample", buffer_bytes(s_cap, d), buffer_bytes(m * s_cap, d))
 
-    taus = _tau_grid(oracle, cfg, *S)
+    taus, tau_fb = _tau_grid(oracle, cfg, *S)
 
     def per_tau_phase1(tau):
         st, sol, size = _empty_solution(oracle, k)
@@ -240,7 +309,7 @@ def dense_two_round_sim(oracle, feats_mk, ids_mk, valid_mk, cfg: MRConfig,
         st_j, sol_j, size_j, rf, ri, rv, taus)
     best = jnp.argmax(val_j)
     res = SelectionResult(sol_j[best], size_j[best], val_j[best],
-                          jnp.sum(sdrop) + jnp.sum(rdrop))
+                          jnp.sum(sdrop) + jnp.sum(rdrop), tau_fb)
     return res, log
 
 
@@ -261,7 +330,7 @@ def sparse_two_round_sim(oracle, feats_mk, ids_mk, valid_mk, cfg: MRConfig,
     log.add("gather-top-singletons", buffer_bytes(t_cap, d),
             buffer_bytes(m * t_cap, d), f"top {t_cap}/machine")
 
-    taus = _tau_grid(oracle, cfg, *L)
+    taus, tau_fb = _tau_grid(oracle, cfg, *L)
 
     def per_tau(tau):
         st, sol, size = _empty_solution(oracle, k)
@@ -272,7 +341,8 @@ def sparse_two_round_sim(oracle, feats_mk, ids_mk, valid_mk, cfg: MRConfig,
     log.add("broadcast-result", buffer_bytes(k, 0), buffer_bytes(k, 0),
             "central solution out")
     best = jnp.argmax(val_j)
-    res = SelectionResult(sol_j[best], size_j[best], val_j[best], jnp.sum(tdrop))
+    res = SelectionResult(sol_j[best], size_j[best], val_j[best],
+                          jnp.sum(tdrop), tau_fb)
     return res, log
 
 
@@ -289,12 +359,141 @@ def two_round_sim(oracle, feats_mk, ids_mk, valid_mk, cfg: MRConfig,
         jnp.where(pick_dense, dense.sol_ids, sparse.sol_ids),
         jnp.where(pick_dense, dense.sol_size, sparse.sol_size),
         jnp.maximum(dense.value, sparse.value),
-        dense.n_dropped + sparse.n_dropped)
+        dense.n_dropped + sparse.n_dropped,
+        dense.tau_fallback + sparse.tau_fallback)
     log = RoundLog()
     for a, b in zip(log_d.records, log_s.records):
         log.add(f"{a.name}||{b.name}",
                 a.bytes_per_machine + b.bytes_per_machine,
                 a.bytes_total + b.bytes_total, "dense || sparse")
+    return res, log
+
+
+def two_round_batch_sim(oracle, feats_mk, ids_mk, valid_mk, qb: QueryBatch,
+                        cfg: MRConfig, key
+                        ) -> Tuple[SelectionResult, RoundLog]:
+    """Theorem 8 for Q queries over ONE corpus partition (the query axis).
+
+    PartitionAndSample is oblivious to which query it serves, so the
+    Bernoulli sample round is drawn ONCE (same key derivation as
+    two_round_sim: a Q=1 batch with k=cfg.k and default hyper-parameters
+    reproduces two_round_sim's selection exactly) and shared by every
+    query; everything downstream — threshold grid, central greedy,
+    survivor filter, sparse top-singleton path — is vmapped over the
+    (Q,) query axis with per-query budget ``qb.k`` (carried as a dynamic
+    bound through the fixed cfg.k-shaped buffers) and per-query oracle
+    hyper-parameters (functions.bind_query).
+
+    Returns a SelectionResult whose every field carries a leading (Q,)
+    axis, and a RoundLog with shared-vs-per-query bytes broken out.
+    """
+    m, n_loc, d = feats_mk.shape
+    K = cfg.k
+    s_cap, f_cap, t_cap = cfg.caps()
+    J = cfg.grid_size()
+    Q = qb.n_queries
+    n_tops = 1 if not consumes_query_params(oracle) else Q
+    log = RoundLog()
+
+    # shared round 1a: one Bernoulli sample serves all Q queries
+    kd, _ks = jax.random.split(key)
+    keys = jax.random.split(kd, m)
+    sf, si, sv, sdrop = jax.vmap(
+        lambda ky, f, i, v: _local_sample(oracle, ky, f, i, v, cfg.sample_p,
+                                          s_cap)
+    )(keys, feats_mk, ids_mk, valid_mk)
+    S = (sf.reshape(m * s_cap, d), si.reshape(-1), sv.reshape(-1))
+    log.add("gather-sample||top[Q]",
+            buffer_bytes(s_cap, d) + n_tops * buffer_bytes(t_cap, d),
+            buffer_bytes(m * s_cap, d) + n_tops * buffer_bytes(m * t_cap, d),
+            f"Q={Q}: shared sample {buffer_bytes(m * s_cap, d)}B + "
+            f"{'shared' if n_tops == 1 else 'per-query'} top "
+            f"{buffer_bytes(m * t_cap, d)}B")
+    log.add("gather-survivors[QxJ]", Q * J * buffer_bytes(f_cap, d),
+            Q * J * buffer_bytes(m * f_cap, d),
+            f"per-query {J * buffer_bytes(m * f_cap, d)}B grid J={J}")
+
+    # Query-invariant statistics are hoisted OUT of the per-query vmap when
+    # the oracle consumes no per-query hyper-parameters: the max-singleton
+    # estimates and the top-singleton message depend only on the oracle +
+    # corpus, so Q queries pay for them once (per-query budgets only
+    # rescale the threshold grid, which is O(J) arithmetic).  The per-lane
+    # math is bit-identical either way.
+    shared_stats = not consumes_query_params(oracle)
+    if shared_stats:
+        v_dense = _max_singleton(oracle, S[0], S[2])
+        tf0, ti0, tv0, _ = jax.vmap(
+            lambda f, i, v: _local_top(oracle, f, i, v, t_cap)
+        )(feats_mk, ids_mk, valid_mk)
+        L_shared = (tf0.reshape(m * t_cap, d), ti0.reshape(-1),
+                    tv0.reshape(-1))
+        v_sparse = _max_singleton(oracle, L_shared[0], L_shared[2])
+
+    def one_query(kq, lam, alpha):
+        orc = bind_query(oracle, lam, alpha)
+
+        # ---- dense path over the shared sample --------------------------
+        if shared_stats:
+            taus, fb_d = _tau_grid_from_v(cfg, v_dense, kq)
+        else:
+            taus, fb_d = _tau_grid(orc, cfg, *S, k=kq)
+
+        def phase1(tau):
+            st, sol, size = _empty_solution(orc, K)
+            return _greedy(orc, st, sol, size, *S, tau, K, cfg, k_dyn=kq)
+
+        st_j, sol_j, size_j = jax.vmap(phase1)(taus)
+
+        def local_filter_all(f, i, v):
+            return jax.vmap(
+                lambda st, sol, size, tau: _local_filter(
+                    orc, st, sol, f, i, v, tau, f_cap, size, kq)
+            )(st_j, sol_j, size_j, taus)
+
+        rf, ri, rv, rdrop = jax.vmap(local_filter_all)(feats_mk, ids_mk,
+                                                       valid_mk)
+        rf = rf.transpose(1, 0, 2, 3).reshape(J, m * f_cap, d)
+        ri = ri.transpose(1, 0, 2).reshape(J, m * f_cap)
+        rv = rv.transpose(1, 0, 2).reshape(J, m * f_cap)
+
+        def phase2(st, sol, size, f, i, v, tau):
+            st, sol, size = _greedy(orc, st, sol, size, f, i, v, tau, K, cfg,
+                                    k_dyn=kq)
+            return sol, size, orc.value(st)
+
+        dsol, dsize, dval = jax.vmap(phase2)(st_j, sol_j, size_j,
+                                             rf, ri, rv, taus)
+
+        # ---- sparse path: tops are shared when query-invariant, else
+        # per-query (singletons depend on the query's hyper-parameters) --
+        if shared_stats:
+            L = L_shared
+            taus_s, fb_s = _tau_grid_from_v(cfg, v_sparse, kq)
+        else:
+            tf, ti, tv, _ = jax.vmap(
+                lambda f, i, v: _local_top(orc, f, i, v, t_cap)
+            )(feats_mk, ids_mk, valid_mk)
+            L = (tf.reshape(m * t_cap, d), ti.reshape(-1), tv.reshape(-1))
+            taus_s, fb_s = _tau_grid(orc, cfg, *L, k=kq)
+
+        def sparse_tau(tau):
+            st, sol, size = _empty_solution(orc, K)
+            st, sol, size = _greedy(orc, st, sol, size, *L, tau, K, cfg,
+                                    k_dyn=kq)
+            return sol, size, orc.value(st)
+
+        ssol, ssize, sval = jax.vmap(sparse_tau)(taus_s)
+
+        sols = jnp.concatenate([dsol, ssol], axis=0)
+        sizes = jnp.concatenate([dsize, ssize], axis=0)
+        vals = jnp.concatenate([dval, sval], axis=0)
+        best = jnp.argmax(vals)
+        return (sols[best], sizes[best], vals[best], jnp.sum(rdrop),
+                fb_d + fb_s)
+
+    sols, sizes, vals, rdrops, fbs = jax.vmap(one_query)(
+        qb.k, qb.graph_cut_lam, qb.logdet_alpha)
+    res = SelectionResult(sols, sizes, vals, jnp.sum(sdrop) + rdrops, fbs)
     return res, log
 
 
@@ -341,7 +540,8 @@ def multi_threshold_sim(oracle, feats_mk, ids_mk, valid_mk, opt, t: int,
         st, sol, size = _greedy(oracle, st, sol, size, *R, alpha, k, cfg)
         drops = drops + jnp.sum(sdrop) + jnp.sum(rdrop)
 
-    return SelectionResult(sol, size, oracle.value(st), drops), log
+    return SelectionResult(sol, size, oracle.value(st), drops,
+                           jnp.zeros((), jnp.int32)), log
 
 
 # ---------------------------------------------------------------------------
@@ -350,6 +550,21 @@ def multi_threshold_sim(oracle, feats_mk, ids_mk, valid_mk, opt, t: int,
 
 def _machine_axes_size(mesh: Mesh, axes) -> int:
     return math.prod(mesh.shape[a] for a in axes)
+
+
+def _gather_packed(x, gather_axes, lead: int = 0):
+    """all_gather a packed message buffer inside a shard_map body,
+    concatenating the per-machine buffers on the capacity axis.  ``lead``
+    leading batch axes (e.g. a threshold-grid axis, or (query, grid) in
+    the batched driver) are kept in place — the whole stack moves in one
+    collective."""
+    if lead == 0:
+        return jax.lax.all_gather(x, gather_axes, tiled=True)
+    g = jax.lax.all_gather(x, gather_axes)   # (m, *lead, cap, ...)
+    g = jnp.moveaxis(g, 0, lead)             # (*lead, m, cap, ...)
+    return g.reshape(g.shape[:lead]
+                     + (g.shape[lead] * g.shape[lead + 1],)
+                     + g.shape[lead + 2:])
 
 
 def two_round_known_opt_mesh(oracle, cfg: MRConfig, mesh: Mesh,
@@ -400,7 +615,8 @@ def two_round_known_opt_mesh(oracle, cfg: MRConfig, mesh: Mesh,
 
         st, sol, size = _greedy(oracle, st, sol, size, *R, tau, k, cfg)
         drops = jax.lax.psum(sdrop + rdrop, gather_axes)
-        return SelectionResult(sol, size, oracle.value(st), drops)
+        return SelectionResult(sol, size, oracle.value(st), drops,
+                               jnp.zeros((), jnp.int32))
 
     from jax.experimental.shard_map import shard_map
     fn = shard_map(body, mesh=mesh,
@@ -442,16 +658,6 @@ def two_round_mesh(oracle, cfg: MRConfig, mesh: Mesh,
     log.add("gather-survivors[grid]", J * buffer_bytes(f_cap, feat_dim),
             J * buffer_bytes(m * f_cap, feat_dim), f"grid J={J}")
 
-    def _gather_packed(x, leading=False):
-        """all_gather a packed buffer; leading=True keeps a (J, ...) axis
-        and concatenates machine buffers on axis 1."""
-        if not leading:
-            return jax.lax.all_gather(x, gather_axes, tiled=True)
-        g = jax.lax.all_gather(x, gather_axes)  # (m, J, cap, ...)
-        g = jnp.moveaxis(g, 0, 1)                # (J, m, cap, ...)
-        return g.reshape((g.shape[0], g.shape[1] * g.shape[2])
-                         + g.shape[3:])
-
     def body(feats, ids, key):
         midx = jax.lax.axis_index(gather_axes)
         ky = jax.random.fold_in(key, midx)
@@ -467,7 +673,7 @@ def two_round_mesh(oracle, cfg: MRConfig, mesh: Mesh,
                      for x in (tf, ti, tv))
 
         # ---- dense path: per-tau greedy on the replicated sample --------
-        taus = _tau_grid(oracle, cfg, *S)
+        taus, tau_fb_d = _tau_grid(oracle, cfg, *S)
 
         def phase1(tau):
             st, sol, size = _empty_solution(oracle, k)
@@ -480,9 +686,9 @@ def two_round_mesh(oracle, cfg: MRConfig, mesh: Mesh,
             lambda st, sol, size, tau: _local_filter(
                 oracle, st, sol, feats, ids, valid, tau, f_cap, size, k)
         )(st_j, sol_j, size_j, taus)
-        Rf = _gather_packed(rf, leading=True)
-        Ri = _gather_packed(ri, leading=True)
-        Rv = _gather_packed(rv, leading=True)
+        Rf = _gather_packed(rf, gather_axes, lead=1)
+        Ri = _gather_packed(ri, gather_axes, lead=1)
+        Rv = _gather_packed(rv, gather_axes, lead=1)
 
         def phase2(st, sol, size, f, i, v, tau):
             st, sol, size = _greedy(oracle, st, sol, size, f, i, v, tau, k, cfg)
@@ -492,7 +698,7 @@ def two_round_mesh(oracle, cfg: MRConfig, mesh: Mesh,
                                              Rf, Ri, Rv, taus)
 
         # ---- sparse path: per-tau greedy on the top singletons ----------
-        taus_s = _tau_grid(oracle, cfg, *Ltop)
+        taus_s, tau_fb_s = _tau_grid(oracle, cfg, *Ltop)
 
         def sparse_tau(tau):
             st, sol, size = _empty_solution(oracle, k)
@@ -506,7 +712,8 @@ def two_round_mesh(oracle, cfg: MRConfig, mesh: Mesh,
         vals = jnp.concatenate([dval, sval], axis=0)
         best = jnp.argmax(vals)
         drops = jax.lax.psum(sdrop + jnp.sum(rdrop), gather_axes)
-        return SelectionResult(sols[best], sizes[best], vals[best], drops)
+        return SelectionResult(sols[best], sizes[best], vals[best], drops,
+                               tau_fb_d + tau_fb_s)
 
     from jax.experimental.shard_map import shard_map
     fn = shard_map(body, mesh=mesh,
@@ -519,6 +726,170 @@ def two_round_mesh(oracle, cfg: MRConfig, mesh: Mesh,
         return SelectionResult(*out)
 
     return run, log
+
+
+def two_round_batch_mesh(oracle, cfg: MRConfig, mesh: Mesh,
+                         axes=("data",), data_spec=None):
+    """Theorem 8 for Q queries on a device mesh — the query axis on the
+    production substrate.
+
+    Same two all_gather rounds as two_round_mesh, but each round's message
+    carries every query: round 1 gathers the SHARED Bernoulli sample (drawn
+    once, query-oblivious) plus the per-query top-singleton buffers stacked
+    on a leading (Q,) axis; round 2 gathers the (Q, J, cap) survivor
+    buffers in one collective.  The central phases vmap over queries with
+    per-query dynamic budgets and bind_query'd oracle hyper-parameters.
+    Amortization: Q concurrent selection requests cost ONE partition, ONE
+    sample round, ONE gather round — not Q compiled calls serialized on
+    the pod.
+
+    Returns a jit-able (feats_global, ids_global, qb: QueryBatch, key) ->
+    SelectionResult (every field with a leading (Q,) axis), plus a
+    RoundLog parameterized by ``n_queries``.  The jitted fn specializes on
+    Q (a shape), so a service should pin its slot count.
+    """
+    m = _machine_axes_size(mesh, axes)
+    K = cfg.k
+    s_cap, f_cap, t_cap = cfg.caps()
+    J = cfg.grid_size()
+    gather_axes = axes if len(axes) > 1 else axes[0]
+    data_spec = data_spec or P(axes if len(axes) > 1 else axes[0])
+    ids_spec = P(data_spec[0])
+    feat_dim = oracle.feat_dim
+
+    shared_stats = not consumes_query_params(oracle)
+
+    def round_log(n_queries: int) -> RoundLog:
+        Q = n_queries
+        n_tops = 1 if shared_stats else Q
+        log = RoundLog()
+        log.add("gather-sample||top[Q]",
+                buffer_bytes(s_cap, feat_dim)
+                + n_tops * buffer_bytes(t_cap, feat_dim),
+                buffer_bytes(m * s_cap, feat_dim)
+                + n_tops * buffer_bytes(m * t_cap, feat_dim),
+                f"Q={Q}: shared sample {buffer_bytes(m * s_cap, feat_dim)}B "
+                f"+ {'shared' if n_tops == 1 else 'per-query'} top "
+                f"{buffer_bytes(m * t_cap, feat_dim)}B")
+        log.add("gather-survivors[QxJ]",
+                Q * J * buffer_bytes(f_cap, feat_dim),
+                Q * J * buffer_bytes(m * f_cap, feat_dim),
+                f"per-query {J * buffer_bytes(m * f_cap, feat_dim)}B "
+                f"grid J={J}")
+        return log
+
+    def body(feats, ids, qk, qlam, qalpha, key):
+        midx = jax.lax.axis_index(gather_axes)
+        valid = ids >= 0
+
+        # ---- round 1: shared sample + per-query tops, one gather --------
+        # (same key derivation as two_round_mesh, so a Q=1 batch with
+        # k=cfg.k and default hyper-parameters reproduces it exactly)
+        ky = jax.random.fold_in(key, midx)
+        sf, si, sv, sdrop = _local_sample(oracle, ky, feats, ids, valid,
+                                          cfg.sample_p, s_cap)
+        S = tuple(jax.lax.all_gather(x, gather_axes, tiled=True)
+                  for x in (sf, si, sv))
+        if shared_stats:
+            # query-invariant oracle: ONE top-singleton message + ONE max-
+            # singleton estimate serve the whole batch (budgets only
+            # rescale the grid); the round-1 gather shrinks accordingly
+            tf, ti, tv, _ = _local_top(oracle, feats, ids, valid, t_cap)
+            Ltf = _gather_packed(tf, gather_axes)            # (m*t_cap, d)
+            Lti = _gather_packed(ti, gather_axes)
+            Ltv = _gather_packed(tv, gather_axes)
+            v_dense = _max_singleton(oracle, S[0], S[2])
+            v_sparse = _max_singleton(oracle, Ltf, Ltv)
+            top_axis = None
+        else:
+            tf, ti, tv, _ = jax.vmap(
+                lambda lam, alpha: _local_top(bind_query(oracle, lam, alpha),
+                                              feats, ids, valid, t_cap)
+            )(qlam, qalpha)
+            Ltf = _gather_packed(tf, gather_axes, lead=1)            # (Q, m*t_cap, d)
+            Lti = _gather_packed(ti, gather_axes, lead=1)
+            Ltv = _gather_packed(tv, gather_axes, lead=1)
+            top_axis = 0
+
+        # ---- central phase 1 + local survivor filter, per query ---------
+        def phase_a(kq, lam, alpha):
+            orc = bind_query(oracle, lam, alpha)
+            if shared_stats:
+                taus, fb_d = _tau_grid_from_v(cfg, v_dense, kq)
+            else:
+                taus, fb_d = _tau_grid(orc, cfg, *S, k=kq)
+
+            def p1(tau):
+                st, sol, size = _empty_solution(orc, K)
+                return _greedy(orc, st, sol, size, *S, tau, K, cfg, k_dyn=kq)
+
+            st_j, sol_j, size_j = jax.vmap(p1)(taus)
+            rf, ri, rv, rdrop = jax.vmap(
+                lambda st, sol, size, tau: _local_filter(
+                    orc, st, sol, feats, ids, valid, tau, f_cap, size, kq)
+            )(st_j, sol_j, size_j, taus)
+            return taus, fb_d, st_j, sol_j, size_j, rf, ri, rv, \
+                jnp.sum(rdrop)
+
+        (taus_q, fb_d_q, st_q, sol_q, size_q, rf, ri, rv,
+         rdrop_q) = jax.vmap(phase_a)(qk, qlam, qalpha)
+
+        # ---- round 2: ONE gather of the (Q, J, cap) survivor stack ------
+        Rf = _gather_packed(rf, gather_axes, lead=2)                 # (Q, J, m*f_cap, d)
+        Ri = _gather_packed(ri, gather_axes, lead=2)
+        Rv = _gather_packed(rv, gather_axes, lead=2)
+
+        # ---- central phase 2 + sparse path, per query -------------------
+        def phase_b(kq, lam, alpha, taus, st_j, sol_j, size_j, f_j, i_j, v_j,
+                    ltf, lti, ltv):
+            orc = bind_query(oracle, lam, alpha)
+
+            def p2(st, sol, size, f, i, v, tau):
+                st, sol, size = _greedy(orc, st, sol, size, f, i, v, tau, K,
+                                        cfg, k_dyn=kq)
+                return sol, size, orc.value(st)
+
+            dsol, dsize, dval = jax.vmap(p2)(st_j, sol_j, size_j,
+                                             f_j, i_j, v_j, taus)
+            if shared_stats:
+                taus_s, fb_s = _tau_grid_from_v(cfg, v_sparse, kq)
+            else:
+                taus_s, fb_s = _tau_grid(orc, cfg, ltf, lti, ltv, k=kq)
+
+            def sp(tau):
+                st, sol, size = _empty_solution(orc, K)
+                st, sol, size = _greedy(orc, st, sol, size, ltf, lti, ltv,
+                                        tau, K, cfg, k_dyn=kq)
+                return sol, size, orc.value(st)
+
+            ssol, ssize, sval = jax.vmap(sp)(taus_s)
+            sols = jnp.concatenate([dsol, ssol], axis=0)
+            sizes = jnp.concatenate([dsize, ssize], axis=0)
+            vals = jnp.concatenate([dval, sval], axis=0)
+            best = jnp.argmax(vals)
+            return sols[best], sizes[best], vals[best], fb_s
+
+        sol_b, size_b, val_b, fb_s_q = jax.vmap(
+            phase_b,
+            in_axes=(0,) * 10 + (top_axis,) * 3)(
+            qk, qlam, qalpha, taus_q, st_q, sol_q, size_q, Rf, Ri, Rv,
+            Ltf, Lti, Ltv)
+        drops = jax.lax.psum(sdrop + rdrop_q, gather_axes)
+        return SelectionResult(sol_b, size_b, val_b, drops,
+                               fb_d_q + fb_s_q)
+
+    from jax.experimental.shard_map import shard_map
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(data_spec, ids_spec, P(), P(), P(), P()),
+                   out_specs=P(),
+                   check_rep=False)
+
+    def run(feats_global, ids_global, qb: QueryBatch, key):
+        out = fn(feats_global, ids_global, qb.k, qb.graph_cut_lam,
+                 qb.logdet_alpha, key)
+        return SelectionResult(*out)
+
+    return run, round_log
 
 
 def multi_threshold_mesh(oracle, cfg: MRConfig, t: int, mesh: Mesh,
@@ -560,7 +931,8 @@ def multi_threshold_mesh(oracle, cfg: MRConfig, t: int, mesh: Mesh,
             st, sol, size = _greedy(oracle, st, sol, size, *R, alpha, k, cfg)
             drops = drops + sdrop + rdrop
         drops = jax.lax.psum(drops, gather_axes)
-        return SelectionResult(sol, size, oracle.value(st), drops)
+        return SelectionResult(sol, size, oracle.value(st), drops,
+                               jnp.zeros((), jnp.int32))
 
     from jax.experimental.shard_map import shard_map
     fn = shard_map(body, mesh=mesh,

@@ -57,7 +57,8 @@ def make_oracle(spec: SelectorSpec, feat_dim: int, reference=None,
         return F.FacilityLocation(feat_dim=feat_dim, reference=reference,
                                   use_kernel=spec.use_kernel)
     if spec.oracle == "weighted_coverage":
-        return F.WeightedCoverage(feat_dim=feat_dim)
+        return F.WeightedCoverage(feat_dim=feat_dim,
+                                  use_kernel=spec.use_kernel)
     if spec.oracle == "graph_cut":
         assert total is not None, \
             "graph_cut needs the ground-set feature sum (total)"
@@ -88,6 +89,12 @@ class DistributedSelector:
                  feat_dim: int, axes=("data",), reference=None, total=None):
         self.spec = spec
         self.mesh = mesh
+        # Stash the oracle's corpus-level statistics: opt_upper_bound (and
+        # anything else that rebuilds a full-width oracle outside shard_map)
+        # must thread these through make_oracle again, or the rebuild
+        # asserts/mis-builds for facility_location / exemplar / graph_cut.
+        self.reference = reference
+        self.total = total
         self.axes = tuple(a for a in axes if a in mesh.shape)
         m = 1
         for a in self.axes:
@@ -124,6 +131,8 @@ class DistributedSelector:
                 data_spec=self._data_spec)
             self._needs_opt = False
         self._jitted = None
+        self._batch_run = None
+        self._batch_round_log = None
 
     def data_sharding(self) -> NamedSharding:
         return NamedSharding(self.mesh, self._data_spec)
@@ -140,14 +149,47 @@ class DistributedSelector:
             return self._jitted(embeddings, ids, opt_estimate, key)
         return self._jitted(embeddings, ids, key)
 
+    def select_batch(self, embeddings, queries: mr.QueryBatch, key=None
+                     ) -> mr.SelectionResult:
+        """Answer Q selection queries against one corpus in ONE mesh
+        program: the sample round is shared, the two all_gathers carry
+        every query, and the central phases vmap over per-query budgets
+        (queries.k <= spec.k) and oracle hyper-parameters.  Returns a
+        SelectionResult whose fields carry a leading (Q,) axis.
+
+        Only the OPT-free two_round algorithm batches (the known-OPT
+        variants would need a per-query opt estimate round of their own).
+        The compiled program specializes on Q — a serving loop should pin
+        its slot count and mask unused slots with k=0."""
+        assert self.spec.algorithm == "two_round", \
+            "select_batch requires algorithm='two_round'"
+        k_max = int(jnp.max(queries.k))
+        assert k_max <= self.spec.k, \
+            (f"select_batch: per-query budget {k_max} exceeds the slot "
+             f"buffer capacity spec.k={self.spec.k}; the engine would "
+             f"silently truncate — build the selector with a larger k")
+        n = embeddings.shape[0]
+        ids = jnp.arange(n, dtype=jnp.int32)
+        if self._batch_run is None:
+            run, round_log = mr.two_round_batch_mesh(
+                self.oracle, self.cfg, self.mesh, self.axes,
+                data_spec=self._data_spec)
+            self._batch_run = jax.jit(run)
+            self._batch_round_log = round_log
+        self.round_log_batch = self._batch_round_log(queries.n_queries)
+        return self._batch_run(embeddings, ids, queries, key)
+
     def opt_upper_bound(self, embeddings) -> jax.Array:
         """k * (max singleton value) >= OPT >= max singleton — the standard
         first-round estimate (paper §2.2: 'an extra initial round').
         Runs outside shard_map, so always on a full-width oracle: a TPOracle
         would psum over a mesh axis that doesn't exist here, so rebuild the
-        unsharded base oracle at the embeddings' full feature width."""
+        unsharded base oracle at the embeddings' full feature width (with
+        the stashed reference/total — the rebuild must carry the corpus
+        statistics or it asserts for facility_location/exemplar/graph_cut)."""
         if isinstance(self.oracle, F.TPOracle):
-            oracle = make_oracle(self.spec, embeddings.shape[-1], None)
+            oracle = make_oracle(self.spec, embeddings.shape[-1],
+                                 self.reference, self.total)
         else:
             oracle = self.oracle
         st0 = oracle.init_state()

@@ -104,7 +104,7 @@ def _apply_accept(st, accept_now, new_state, cand_id, idx, k):
 def threshold_greedy(oracle, oracle_state, sol_ids, sol_size, cand_feats,
                      cand_ids, cand_valid, tau, k: int, accept: str = "first",
                      engine: str = "dense", chunk: int = DEFAULT_CHUNK,
-                     with_stats: bool = False):
+                     with_stats: bool = False, k_dyn=None):
     """Algorithm 1.  Extends (sol_ids, sol_size, oracle_state) greedily with
     candidates whose marginal w.r.t. the current solution is >= tau, until
     |G| = k or no candidate qualifies.
@@ -113,6 +113,10 @@ def threshold_greedy(oracle, oracle_state, sol_ids, sol_size, cand_feats,
     engine: "dense" rescores all C candidates per iteration; "lazy" keeps
     stale upper bounds and rescores `chunk`-sized slices on demand (same
     accepted sequence for accept="first"; same invariants for both accepts).
+    ``k`` is the static solution-buffer capacity; ``k_dyn`` (optional, a
+    traced () int32 <= k) is the effective cardinality budget — the batched
+    multi-query path carries per-query budgets through one fixed-shape
+    program this way.
     Returns (oracle_state, sol_ids, sol_size), plus a GreedyStats when
     ``with_stats``.
     """
@@ -122,17 +126,58 @@ def threshold_greedy(oracle, oracle_state, sol_ids, sol_size, cand_feats,
         fn = _threshold_greedy_dense
     else:
         raise ValueError(f"unknown engine {engine!r}")
+    k_eff = k if k_dyn is None else jnp.minimum(
+        jnp.asarray(k_dyn, jnp.int32), k)
     out_state, out_sol, out_size, stats = fn(
         oracle, oracle_state, sol_ids, sol_size, cand_feats, cand_ids,
-        cand_valid, tau, k, accept, chunk)
+        cand_valid, tau, k, k_eff, accept, chunk)
+    if with_stats:
+        return out_state, out_sol, out_size, stats
+    return out_state, out_sol, out_size
+
+
+def threshold_greedy_batch(oracle, oracle_states, sol_ids, sol_sizes,
+                           cand_feats, cand_ids, cand_valid, taus, k: int,
+                           k_dyn=None, bind=None, bind_params=None,
+                           accept: str = "first", engine: str = "dense",
+                           chunk: int = DEFAULT_CHUNK,
+                           with_stats: bool = False):
+    """Q independent ThresholdGreedy queries over ONE shared candidate block.
+
+    The paper's algorithms consume only (oracle state, threshold) — they are
+    oblivious to which query they serve — so Q queries vmap over per-query
+    state while the (C, d) candidate block stays a broadcast operand: one
+    compiled program, one pass over the corpus shard, Q answers.
+
+    oracle_states / sol_ids / sol_sizes / taus carry a leading (Q,) axis;
+    cand_feats / cand_ids / cand_valid do not.  ``k`` is the shared buffer
+    capacity, ``k_dyn`` (Q,) int32 the per-query budgets (<= k).  Per-query
+    oracle hyper-parameters ride in ``bind_params`` (a pytree with leading
+    (Q,) leaves); ``bind(oracle, params_q)`` rebuilds the oracle with one
+    query's slice (see functions.bind_query).
+    Returns (oracle_states, sol_ids, sol_sizes[, GreedyStats]) batched on Q.
+    """
+    Q = taus.shape[0]
+    if k_dyn is None:
+        k_dyn = jnp.full((Q,), k, jnp.int32)
+
+    def one(state, sol, size, tau, kq, prm):
+        orc = oracle if bind is None else bind(oracle, prm)
+        return threshold_greedy(orc, state, sol, size, cand_feats, cand_ids,
+                                cand_valid, tau, k, accept=accept,
+                                engine=engine, chunk=chunk, k_dyn=kq,
+                                with_stats=True)
+
+    out_state, out_sol, out_size, stats = jax.vmap(one)(
+        oracle_states, sol_ids, sol_sizes, taus, k_dyn, bind_params)
     if with_stats:
         return out_state, out_sol, out_size, stats
     return out_state, out_sol, out_size
 
 
 def _threshold_greedy_dense(oracle, oracle_state, sol_ids, sol_size,
-                            cand_feats, cand_ids, cand_valid, tau, k, accept,
-                            chunk):
+                            cand_feats, cand_ids, cand_valid, tau, k, k_eff,
+                            accept, chunk):
     """Batched engine: one full-block marginals call per accept."""
     aux = oracle.prep(oracle_state, cand_feats)
     C = cand_feats.shape[0]
@@ -152,7 +197,7 @@ def _threshold_greedy_dense(oracle, oracle_state, sol_ids, sol_size,
         gains = oracle.marginals(st.oracle_state, aux)
         eligible = cand_valid & ~st.taken
         idx, any_ok = pick(gains, eligible)
-        accept_now = any_ok & (st.sol_size < k)
+        accept_now = any_ok & (st.sol_size < k_eff)
         aux_row = jax.tree.map(lambda a: a[idx], aux)
         new_state = oracle.add(st.oracle_state, aux_row)
         oracle_state, sol_ids, sol_size, taken = _apply_accept(
@@ -162,7 +207,7 @@ def _threshold_greedy_dense(oracle, oracle_state, sol_ids, sol_size,
                            n_iters=st.n_iters + 1)
 
     def cond(st: GreedyState):
-        return (~st.done) & (st.sol_size < k)
+        return (~st.done) & (st.sol_size < k_eff)
 
     init = GreedyState(oracle_state, sol_ids, sol_size,
                        taken=jnp.zeros((C,), bool),
@@ -175,8 +220,8 @@ def _threshold_greedy_dense(oracle, oracle_state, sol_ids, sol_size,
 
 
 def _threshold_greedy_lazy(oracle, oracle_state, sol_ids, sol_size,
-                           cand_feats, cand_ids, cand_valid, tau, k, accept,
-                           chunk):
+                           cand_feats, cand_ids, cand_valid, tau, k, k_eff,
+                           accept, chunk):
     """Lazy engine: stale-gain upper bounds + chunked on-demand rescoring.
 
     Invariant: ``g_stale[i] >= fresh_marginal(i)`` at all times.  It starts
@@ -243,10 +288,18 @@ def _threshold_greedy_lazy(oracle, oracle_state, sol_ids, sol_size,
             found = chunk_ok[j] & (best_fresh >= tau) & \
                 (best_fresh >= max_rest)
         idx = idxs[j]
-        accept_now = found & (st.sol_size < k)
+        accept_now = found & (st.sol_size < k_eff)
 
+        # Fetch the accepted row by GLOBAL index from the original array —
+        # identical to feats_chunk[j] in both branches (idx = base + j /
+        # idxs[j] by construction), but avoids a gather-of-dynamic-slice,
+        # which XLA:CPU has been observed to mis-lower inside while_loop
+        # (the add consumed a row from the previous iteration's chunk when
+        # the scan frontier crossed C - B, leaving stale bounds hot and
+        # accepting elements whose fresh marginal was below tau).
         aux_row = jax.tree.map(
-            lambda a: a[0], oracle.prep(st.oracle_state, feats_chunk[j][None]))
+            lambda a: a[0], oracle.prep(st.oracle_state,
+                                        cand_feats[idx][None]))
         new_state = oracle.add(st.oracle_state, aux_row)
         oracle_state, sol_ids, sol_size, taken = _apply_accept(
             st, accept_now, new_state, cand_ids[idx], idx, k)
@@ -257,7 +310,7 @@ def _threshold_greedy_lazy(oracle, oracle_state, sol_ids, sol_size,
                          n_iters=st.n_iters + 1)
 
     def cond(st: LazyState):
-        return (~st.done) & (st.sol_size < k)
+        return (~st.done) & (st.sol_size < k_eff)
 
     init = LazyState(oracle_state, sol_ids, sol_size,
                      g_stale=jnp.full((C,), jnp.inf, jnp.float32),

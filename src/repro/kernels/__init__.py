@@ -1,6 +1,8 @@
-"""Pallas TPU kernels for the oracle hot spot (facility-location marginals).
+"""Pallas TPU kernels for the oracle hot spots — one fused
+``chunk_marginals`` kernel per registered oracle (facility, coverage,
+weighted coverage, graph cut, log-det, exemplar).
 
-facility_marginals.py — pl.pallas_call + BlockSpec implementations
-ops.py               — jit'd public wrappers (backend dispatch)
-ref.py               — pure-jnp oracles the tests sweep against
+*_marginals.py — pl.pallas_call + BlockSpec implementations
+ops.py         — jit'd public wrappers (backend dispatch)
+ref.py         — pure-jnp oracles the tests sweep against
 """

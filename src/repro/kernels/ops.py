@@ -15,6 +15,7 @@ from repro.kernels import exemplar_marginals as _em
 from repro.kernels import facility_marginals as _fm
 from repro.kernels import graph_cut_marginals as _gc
 from repro.kernels import logdet_marginals as _ld
+from repro.kernels import weighted_coverage_marginals as _wc
 
 
 def _interpret() -> bool:
@@ -52,6 +53,17 @@ def coverage_marginals(x, state, weights=None, *, block_c=None, block_f=None):
         kw["block_f"] = block_f
     return _cm.coverage_marginals(x, state, weights,
                                   interpret=_interpret(), **kw)
+
+
+def weighted_coverage_marginals(x, state, *, block_c=None, block_u=None):
+    """Fused (C,U),(U,)->(C,) WeightedCoverage marginals."""
+    kw = {}
+    if block_c:
+        kw["block_c"] = block_c
+    if block_u:
+        kw["block_u"] = block_u
+    return _wc.weighted_coverage_marginals(x, state,
+                                           interpret=_interpret(), **kw)
 
 
 def graph_cut_marginals(x, total, state, lam=0.5, *, block_c=None,

@@ -53,6 +53,19 @@ def coverage_marginals(x, state, weights=None):
     return jnp.sum(g, axis=-1).astype(jnp.float32)
 
 
+def weighted_coverage_marginals(x, state):
+    """(C, U), (U,) -> (C,): WeightedCoverage marginal gains.
+
+    gains[i] = sum_u state_u * x_{i,u}
+
+    with `state` the remaining (uncovered) weight per universe item and
+    `x` the candidates' incidence rows: the gain is exactly the uncovered
+    weight candidate i picks up.
+    """
+    return jnp.sum(state[None, :].astype(jnp.float32)
+                   * x.astype(jnp.float32), axis=-1).astype(jnp.float32)
+
+
 def graph_cut_marginals(x, total, state, lam=0.5):
     """(C, d), (d,), (d,) -> (C,): GraphCut marginal gains.
 

@@ -79,8 +79,8 @@ REGISTRY = {
 
 #: oracles whose hot paths route through a Pallas kernel when
 #: ``use_kernel=True`` (swept by the kernel differential tests)
-KERNELED = ("feature_coverage", "facility_location", "graph_cut", "log_det",
-            "exemplar")
+KERNELED = ("feature_coverage", "facility_location", "weighted_coverage",
+            "graph_cut", "log_det", "exemplar")
 
 
 def state_of(oracle, feats, subset):

@@ -189,6 +189,44 @@ def test_feature_coverage_oracle_kernel_route():
 
 
 # ---------------------------------------------------------------------------
+# weighted_coverage_marginals kernel
+# ---------------------------------------------------------------------------
+
+from repro.kernels.weighted_coverage_marginals import (  # noqa: E402
+    weighted_coverage_marginals)
+
+
+@pytest.mark.parametrize("C,U", SHAPES_CM)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_weighted_coverage_marginals_matches_ref(C, U, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(C * 17 + U))
+    x = (jax.random.uniform(k1, (C, U)) < 0.3).astype(dtype)  # incidence rows
+    state = jnp.abs(_rand(k2, (U,), jnp.float32))
+    got = weighted_coverage_marginals(x, state, interpret=True)
+    want = ref.weighted_coverage_marginals(x, state)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol * U)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 200), st.integers(1, 160), st.integers(0, 2 ** 31))
+def test_weighted_coverage_marginals_property(C, U, seed):
+    """Nonneg gains; pointwise-smaller remaining weight => smaller gains
+    (diminishing returns as the cover grows); kernel == ref."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = (jax.random.uniform(k1, (C, U)) < 0.4).astype(jnp.float32)
+    st0 = jnp.abs(jax.random.normal(k2, (U,)))
+    g0 = weighted_coverage_marginals(x, st0, interpret=True)
+    g1 = weighted_coverage_marginals(x, st0 * 0.5, interpret=True)
+    assert np.all(np.asarray(g0) >= -1e-6)
+    assert np.all(np.asarray(g1) <= np.asarray(g0) + 1e-5)
+    np.testing.assert_allclose(
+        np.asarray(g0), np.asarray(ref.weighted_coverage_marginals(x, st0)),
+        rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
 # oracle-zoo kernels: graph_cut / logdet / exemplar vs ref.py
 # ---------------------------------------------------------------------------
 
@@ -267,6 +305,11 @@ def test_zoo_kernels_block_shape_invariance(block_c, block_r):
     np.testing.assert_allclose(
         logdet_marginals(cand, U, block_c=block_c, interpret=True),
         ref.logdet_marginals(cand, U), rtol=1e-5, atol=1e-4)
+    inc = (jnp.abs(cand) < 0.4).astype(jnp.float32)
+    np.testing.assert_allclose(
+        weighted_coverage_marginals(inc, state_d, block_c=block_c,
+                                    block_u=block_r, interpret=True),
+        ref.weighted_coverage_marginals(inc, state_d), rtol=1e-5, atol=1e-4)
 
 
 @settings(max_examples=15, deadline=None)

@@ -68,10 +68,12 @@ ORACLES = ["feature_coverage", "facility_location", "weighted_coverage",
 
 
 @pytest.mark.parametrize("name", ORACLES)
-@pytest.mark.parametrize("chunk", [1, 13, 64, 4096])
+@pytest.mark.parametrize("chunk", [1, 13, 64, 128, 4096])
 def test_lazy_matches_dense_exactly_accept_first(name, chunk):
     """Acceptance criterion: identical selected ids/values, every oracle,
-    chunk smaller / ragged / larger than C."""
+    chunk smaller / ragged / larger than C.  chunk=128 (= C/2) regresses
+    the scan-frontier-past-(C - chunk) case where a gather-of-dynamic-slice
+    aux fetch was mis-lowered by XLA:CPU and corrupted the accepted state."""
     k = 10
     oracle, feats, ids, valid, tau = _setup(name)
     dst, dsol, dsize, _ = _run(oracle, feats, ids, valid, tau, k,
