@@ -23,7 +23,8 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
 
 
 #: every instance() kind — benchmark zoo sweeps iterate this
-INSTANCE_KINDS = ("coverage", "facility", "graph_cut", "log_det", "exemplar")
+INSTANCE_KINDS = ("coverage", "facility", "saturated", "graph_cut",
+                  "log_det", "exemplar")
 
 
 def instance(seed=0, n=2048, d=16, m=16, kind="coverage", k=64,
@@ -32,7 +33,8 @@ def instance(seed=0, n=2048, d=16, m=16, kind="coverage", k=64,
     over m machines.  ``k`` sizes LogDetDiversity's fixed-capacity state
     (must be >= the cardinality budget the driver runs with)."""
     from repro.core import (ExemplarClustering, FacilityLocation,
-                            FeatureCoverage, GraphCut, LogDetDiversity)
+                            FeatureCoverage, GraphCut, LogDetDiversity,
+                            SaturatedCoverage)
 
     rng = np.random.default_rng(seed)
     if n % m:
@@ -47,6 +49,10 @@ def instance(seed=0, n=2048, d=16, m=16, kind="coverage", k=64,
         ref = X[:: max(1, n // 64)][:64]
         oracle = FacilityLocation(feat_dim=d, reference=ref,
                                   use_kernel=use_kernel)
+    elif kind == "saturated":
+        X = jnp.asarray((rng.random((n, d)).astype(np.float32)) ** 2)
+        oracle = SaturatedCoverage(feat_dim=d, total=jnp.sum(X, axis=0),
+                                   alpha=0.15, use_kernel=use_kernel)
     elif kind == "graph_cut":
         X = jnp.asarray((rng.random((n, d)).astype(np.float32)) ** 2)
         oracle = GraphCut(feat_dim=d, total=jnp.sum(X, axis=0), lam=0.5,

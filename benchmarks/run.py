@@ -6,6 +6,7 @@
   distributed_baselines   vs RandGreeDi [2] and MZ core-sets [7]
   selection_throughput    engine throughput + Pallas kernel check
   selection_qps           batched multi-query vs sequential queries/sec
+  streaming               one-pass sieve throughput, value ratios, warm-start
   selection_roofline      §Perf pair-3 report (paper technique on the pod)
   roofline_report         aggregates results/dryrun into §Roofline rows
 
@@ -26,7 +27,7 @@ import traceback
 
 MODULES = ("approx_ratio", "adversarial", "memory_rounds",
            "distributed_baselines", "selection_throughput", "selection_qps",
-           "selection_roofline", "roofline_report")
+           "streaming", "selection_roofline", "roofline_report")
 
 
 def main() -> None:

@@ -10,8 +10,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (ExemplarClustering, FeatureCoverage, GraphCut,
-                        LogDetDiversity, MRConfig, multi_threshold_sim,
-                        two_round_known_opt_sim, two_round_sim)
+                        LogDetDiversity, MRConfig, SaturatedCoverage,
+                        multi_threshold_sim, two_round_known_opt_sim,
+                        two_round_sim)
 from repro.core.distributed_baselines import mz_coresets, rand_greedi
 from repro.core.sequential import greedy
 
@@ -73,6 +74,9 @@ print("\nNote the paper's regime: 2 rounds, no duplication, ratio >= 1/2-eps"
 print(f"\n{'oracle zoo (Thm 8, same X)':34s} {'rounds':>6s} "
       f"{'f(S)/greedy':>12s}")
 zoo = {
+    "saturated_coverage": SaturatedCoverage(feat_dim=d,
+                                            total=jnp.sum(X, axis=0),
+                                            alpha=0.15),
     "graph_cut": GraphCut(feat_dim=d, total=jnp.sum(X, axis=0), lam=0.5),
     "log_det": LogDetDiversity(feat_dim=d, k_max=k, alpha=1.0),
     "exemplar": ExemplarClustering(feat_dim=d, reference=X[:: n // 64][:64]),

@@ -4,8 +4,9 @@ maximization in the MapReduce model (Liu–Vondrák, SOSA 2019)."""
 from repro.core.functions import (AdversarialThreshold, ExemplarClustering,
                                   FacilityLocation, FeatureCoverage,
                                   GraphCut, LogDetDiversity,
-                                  SubmodularOracle, WeightedCoverage,
-                                  bind_query, make_adversarial_instance)
+                                  SaturatedCoverage, SubmodularOracle,
+                                  WeightedCoverage, bind_query,
+                                  make_adversarial_instance)
 from repro.core.mapreduce import (MRConfig, QueryBatch, SelectionResult,
                                   dense_two_round_sim, make_query_batch,
                                   multi_threshold_mesh,
@@ -22,7 +23,7 @@ from repro.core.threshold import (GreedyStats, pack_by_mask,
 __all__ = [
     "GreedyStats",
     "AdversarialThreshold", "ExemplarClustering", "FacilityLocation",
-    "FeatureCoverage", "GraphCut", "LogDetDiversity",
+    "FeatureCoverage", "GraphCut", "LogDetDiversity", "SaturatedCoverage",
     "SubmodularOracle", "WeightedCoverage", "bind_query",
     "make_adversarial_instance",
     "MRConfig", "QueryBatch", "SelectionResult", "dense_two_round_sim",

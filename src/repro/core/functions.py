@@ -25,6 +25,10 @@ Oracles implemented:
                      (the Pallas kernel target; state is the cover vector)
   WeightedCoverage   classic weighted max-coverage (the paper's canonical
                      application, cf. Assadi–Khanna / McGregor–Vu)
+  SaturatedCoverage  f(S) = sum_f w_f * min(sum_{e in S} x_{e,f},
+                     alpha * total_f) — per-feature coverage truncated at
+                     a fraction of the dataset total (Krause's SATURATE
+                     family); state is the O(d) accumulator
   GraphCut           f(S) = sum_{u in V, v in S} w(u,v) - lam sum_{u,v in S}
                      w(u,v) with w(u,v) = <x_u, x_v>, x >= 0 — the cut
                      objective of the GreeDi/core-set evaluations, in O(d)
@@ -204,6 +208,56 @@ class WeightedCoverage(SubmodularOracle):
 
     def value(self, state):
         return jnp.sum(self._w()) - jnp.sum(state)
+
+
+@dataclasses.dataclass(frozen=True)
+class SaturatedCoverage(SubmodularOracle):
+    """f(S) = sum_f w_f * min(sum_{e in S} x_{e,f}, alpha * total_f),
+    x >= 0 — coverage that saturates at a fraction ``alpha`` of the
+    dataset's per-feature total (the ROADMAP's saturated-coverage
+    candidate; cf. Krause–Guestrin SATURATE).  min(·, cap) is concave
+    nondecreasing, so the composition with the modular accumulator is
+    monotone submodular.
+
+    Like GraphCut's ``total``, ``total`` here is a corpus-level statistic
+    (the ground-set feature sum) computed once up front and cached by the
+    serving layer; the state stays the O(d) accumulator, so the MapReduce
+    "ship G to everyone" is still a d-float message.
+    """
+
+    feat_dim: int
+    total: Any = None      # (d,) = sum of all element features
+    alpha: float = 0.25    # saturation fraction of the per-feature total
+    weights: Any = None    # optional (d,) nonneg weights
+    use_kernel: bool = False
+
+    def _cap(self):
+        return self.alpha * self.total
+
+    def init_state(self):
+        return jnp.zeros((self.feat_dim,), jnp.float32)
+
+    def marginals(self, state, aux):
+        if self.use_kernel:
+            from repro.kernels import ops
+
+            return ops.saturated_coverage_marginals(aux, state, self._cap(),
+                                                    self.weights)
+        cap = self._cap()[None, :]
+        new = jnp.minimum(state[None, :] + aux, cap) \
+            - jnp.minimum(state[None, :], cap)
+        if self.weights is not None:
+            new = new * self.weights[None, :]
+        return jnp.sum(new, axis=-1)
+
+    def add(self, state, aux_row):
+        return state + aux_row
+
+    def value(self, state):
+        v = jnp.minimum(state, self._cap())
+        if self.weights is not None:
+            v = v * self.weights
+        return jnp.sum(v)
 
 
 @dataclasses.dataclass(frozen=True)

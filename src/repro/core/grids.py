@@ -1,0 +1,91 @@
+"""Threshold-grid and OPT-estimate helpers, shared across subsystems.
+
+The paper's unknown-OPT machinery is one idea used everywhere: estimate
+OPT from the max singleton value v (v <= OPT <= k*v), and cover the
+uncertainty with a geometric grid of thresholds tau_j so that some tau_j
+lands within (1+eps) of the ideal OPT/2k.  The MapReduce drivers
+(`repro.core.mapreduce`) build their per-tau parallel copies from this
+grid; the streaming subsystem (`repro.streaming.sieve`) maintains the
+same geometric grid *online* as threshold lanes that re-seed as the
+stream's v estimate grows.  Both import from here so the grid geometry
+(and its degenerate-sample guard) is defined once.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def grid_size(k: int, eps: float, n_grid=None) -> int:
+    """Points needed so one tau_j lies within (1+eps) of OPT/2k given
+    OPT in [v, k*v]: ~log_{1+eps}(k), padded."""
+    return n_grid or max(4, int(math.ceil(
+        math.log(max(2 * k, 4)) / math.log1p(eps))) + 2)
+
+
+def max_singleton(oracle, s_feats, s_valid):
+    """Max singleton value v over a packed sample — the dense OPT estimate
+    (v in [OPT/2k, OPT] whp for the paper's Bernoulli sample; v in
+    [OPT/k, OPT] exactly when the whole ground set streamed past).
+    Query-invariant unless the oracle consumes per-query hyper-parameters,
+    so the batched drivers hoist it out of the per-query vmap."""
+    st0 = oracle.init_state()
+    singles = oracle.marginals(st0, oracle.prep(st0, s_feats))
+    return jnp.max(jnp.where(s_valid, singles, 0.0), initial=0.0)
+
+
+def tau_grid_from_v(v, k, eps: float, n_points: int):
+    """Scale a max-singleton estimate v into the (J,) threshold grid
+    tau_j = (v/2k)(1+eps)^j for (a possibly traced) budget ``k``.
+
+    Degenerate-sample guard: an empty / all-masked / all-zero sample gives
+    v = 0 and an all-zero grid, under which EVERY candidate passes every
+    tau (marginal >= 0 always) — the algorithm would silently select k
+    arbitrary elements with no signal.  Instead the grid falls back to
+    +inf (nothing qualifies, the path selects nothing) and the event is
+    *reported*: the returned () int32 flag is 1, surfaced by the drivers
+    as SelectionResult.tau_fallback.
+
+    Returns (taus (J,), degenerate () int32)."""
+    degenerate = v <= 0.0
+    j = jnp.arange(n_points, dtype=jnp.float32)
+    taus = (v / (2.0 * k)) * (1.0 + eps) ** j
+    taus = jnp.where(degenerate, jnp.inf, taus)
+    return taus, degenerate.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# geometric threshold lanes (the streaming sieve's online form of the grid)
+# ---------------------------------------------------------------------------
+
+def lane_count(k: int, eps: float) -> int:
+    """Lanes needed to cover v_grid in [m, 2km] at ratio (1+eps): the
+    SieveStreaming instantiation window (Badanidiyuru et al.)."""
+    return int(math.ceil(math.log(max(2 * k, 4)) / math.log1p(eps))) + 2
+
+
+def lane_window_lo(v_max, eps: float):
+    """Exponent of the smallest grid value >= v_max: the live window is
+    exponents [lo, lo + L - 1], i.e. grid values ~[v_max, 2k*v_max].
+    Only meaningful when v_max > 0 (callers gate on that)."""
+    return jnp.ceil(jnp.log(jnp.maximum(v_max, 1e-30))
+                    / jnp.log1p(eps)).astype(jnp.int32)
+
+
+def lane_exponents(lo, n_lanes: int):
+    """The unique exponent assignment e_j in [lo, lo + L) with
+    e_j ≡ j (mod L): lane identity is exponent-mod-L, so when the window
+    slides up, exactly the lanes whose exponents fell below ``lo`` are
+    reassigned to the top of the window (and must be re-seeded empty) —
+    every other lane keeps its exponent and its accumulated state."""
+    j = jnp.arange(n_lanes, dtype=jnp.int32)
+    return lo + jnp.mod(j - lo, n_lanes)
+
+
+def lane_taus(exps, k, eps: float, active):
+    """tau_j = (1+eps)^{e_j} / (2k) while active; +inf before the first
+    nonzero singleton arrives (the same degenerate guard as the grid)."""
+    v = jnp.exp(exps.astype(jnp.float32) * jnp.log1p(eps))
+    return jnp.where(active, v / (2.0 * k), jnp.inf)

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core import grids
 from repro.core.functions import bind_query, consumes_query_params
 from repro.core.rounds import RoundLog, buffer_bytes
 from repro.core.threshold import (DEFAULT_CHUNK, exclude_ids, pack_by_mask,
@@ -127,8 +128,7 @@ class MRConfig:
 
     def grid_size(self) -> int:
         # one tau_j within (1+eps) of OPT/2k needs ~log_{1+eps}(k) points
-        return self.n_grid or max(4, int(math.ceil(
-            math.log(max(2 * self.k, 4)) / math.log1p(self.eps))) + 2)
+        return grids.grid_size(self.k, self.eps, self.n_grid)
 
 
 def _empty_solution(oracle, k):
@@ -187,15 +187,8 @@ def _local_top(oracle, feats, ids, valid, cap):
 
 def _tau_grid(oracle, cfg, s_feats, s_ids, s_valid, k=None):
     """Threshold guesses tau_j = (v/2k)(1+eps)^j from the sampled max
-    singleton v (the 'dense' estimate; v in [OPT/2k, OPT] whp).
-
-    Degenerate-sample guard: an empty / all-masked / all-zero sample gives
-    v = 0 and an all-zero grid, under which EVERY candidate passes every
-    tau (marginal >= 0 always) — the algorithm would silently select k
-    arbitrary elements with no signal.  Instead the grid falls back to
-    +inf (nothing qualifies, the path selects nothing) and the event is
-    *reported*: the returned () int32 flag is 1, and the drivers surface
-    it as SelectionResult.tau_fallback.
+    singleton v (the 'dense' estimate; v in [OPT/2k, OPT] whp), with the
+    degenerate-sample +inf guard — see grids.tau_grid_from_v.
 
     ``k`` optionally overrides cfg.k (a traced per-query budget in the
     batched multi-query path).
@@ -204,23 +197,16 @@ def _tau_grid(oracle, cfg, s_feats, s_ids, s_valid, k=None):
     return _tau_grid_from_v(cfg, v, cfg.k if k is None else k)
 
 
-def _max_singleton(oracle, s_feats, s_valid):
-    """Max singleton value v over a packed sample — the dense OPT estimate.
-    Query-invariant unless the oracle consumes per-query hyper-parameters,
-    so the batched drivers hoist it out of the per-query vmap."""
-    st0 = oracle.init_state()
-    singles = oracle.marginals(st0, oracle.prep(st0, s_feats))
-    return jnp.max(jnp.where(s_valid, singles, 0.0), initial=0.0)
+# Shared with the streaming subsystem (repro.core.grids defines the grid
+# geometry once); the underscore aliases keep the drivers' call sites and
+# the white-box tests stable.
+_max_singleton = grids.max_singleton
 
 
 def _tau_grid_from_v(cfg, v, k):
     """Scale the sampled max singleton v into the (J,) threshold grid for
     budget ``k`` (traced-friendly), applying the degenerate guard."""
-    degenerate = v <= 0.0
-    j = jnp.arange(cfg.grid_size(), dtype=jnp.float32)
-    taus = (v / (2.0 * k)) * (1.0 + cfg.eps) ** j
-    taus = jnp.where(degenerate, jnp.inf, taus)
-    return taus, degenerate.astype(jnp.int32)
+    return grids.tau_grid_from_v(v, k, cfg.eps, cfg.grid_size())
 
 
 # ---------------------------------------------------------------------------

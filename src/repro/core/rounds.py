@@ -10,7 +10,7 @@ Lemma-2/Lemma-6 memory bounds are checkable quantities, not comments.
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import Dict, List
 
 
 @dataclasses.dataclass(frozen=True)
@@ -24,11 +24,23 @@ class RoundRecord:
 @dataclasses.dataclass
 class RoundLog:
     records: List[RoundRecord] = dataclasses.field(default_factory=list)
+    #: runtime event counters (tau_fallback, n_dropped, ...) noted by the
+    #: selector after each run — unlike ``records`` these are observed, not
+    #: static.  Values may be (device) scalars; they are only coerced to
+    #: int when summarized, so noting them never forces a sync.
+    events: Dict[str, object] = dataclasses.field(default_factory=dict)
 
     def add(self, name: str, bytes_per_machine: int, bytes_total: int,
             detail: str = "") -> None:
         self.records.append(
             RoundRecord(name, int(bytes_per_machine), int(bytes_total), detail))
+
+    def note(self, name: str, count) -> None:
+        """Accumulate a runtime counter (e.g. tau_fallback events across the
+        selects served by this driver).  Lazy: ``count`` may be a traced-out
+        device scalar; it is summed symbolically and realized in summary()."""
+        prev = self.events.get(name)
+        self.events[name] = count if prev is None else prev + count
 
     @property
     def n_rounds(self) -> int:
@@ -48,6 +60,10 @@ class RoundLog:
             lines.append(
                 f"  round {i}: {r.name:24s} per-machine<={r.bytes_per_machine}B "
                 f"gathered={r.bytes_total}B {r.detail}")
+        if self.events:
+            counts = " ".join(f"{k}={int(v)}"
+                              for k, v in sorted(self.events.items()))
+            lines.append(f"  events: {counts}")
         return "\n".join(lines)
 
 

@@ -32,6 +32,7 @@ class SelectorSpec:
     use_kernel: bool = False
     graph_cut_lam: float = 0.5         # GraphCut redundancy penalty, <= 1/2
     logdet_alpha: float = 1.0          # LogDetDiversity kernel scale
+    saturated_alpha: float = 0.25      # SaturatedCoverage saturation frac
     oracle_tp: bool = False            # shard the feature dim over "model"
     #                                    (TPOracle — the central phase's
     #                                    elementwise work / tp per device)
@@ -41,7 +42,7 @@ class SelectorSpec:
 #: harness sweep this list, so registering an oracle here opts it into the
 #: ratio / throughput / property-test coverage.
 ORACLE_NAMES = ("feature_coverage", "facility_location", "weighted_coverage",
-                "graph_cut", "log_det", "exemplar")
+                "saturated_coverage", "graph_cut", "log_det", "exemplar")
 
 
 def make_oracle(spec: SelectorSpec, feat_dim: int, reference=None,
@@ -59,6 +60,12 @@ def make_oracle(spec: SelectorSpec, feat_dim: int, reference=None,
     if spec.oracle == "weighted_coverage":
         return F.WeightedCoverage(feat_dim=feat_dim,
                                   use_kernel=spec.use_kernel)
+    if spec.oracle == "saturated_coverage":
+        assert total is not None, \
+            "saturated_coverage needs the ground-set feature sum (total)"
+        return F.SaturatedCoverage(feat_dim=feat_dim, total=total,
+                                   alpha=spec.saturated_alpha,
+                                   use_kernel=spec.use_kernel)
     if spec.oracle == "graph_cut":
         assert total is not None, \
             "graph_cut needs the ground-set feature sum (total)"
@@ -133,6 +140,7 @@ class DistributedSelector:
         self._jitted = None
         self._batch_run = None
         self._batch_round_log = None
+        self._batch_logs = {}      # Q -> RoundLog (events accumulate)
 
     def data_sharding(self) -> NamedSharding:
         return NamedSharding(self.mesh, self._data_spec)
@@ -146,8 +154,16 @@ class DistributedSelector:
         if self._needs_opt:
             assert opt_estimate is not None, \
                 f"{self.spec.algorithm} needs an OPT estimate"
-            return self._jitted(embeddings, ids, opt_estimate, key)
-        return self._jitted(embeddings, ids, key)
+            res = self._jitted(embeddings, ids, opt_estimate, key)
+        else:
+            res = self._jitted(embeddings, ids, key)
+        # Degenerate-sample / overflow events surface in the round log's
+        # runtime counters (lazy device scalars — no sync here), so serving
+        # dashboards reading round_log.summary() see them, not only callers
+        # that inspect the raw SelectionResult.
+        self.round_log.note("tau_fallback", res.tau_fallback)
+        self.round_log.note("n_dropped", res.n_dropped)
+        return res
 
     def select_batch(self, embeddings, queries: mr.QueryBatch, key=None
                      ) -> mr.SelectionResult:
@@ -176,8 +192,17 @@ class DistributedSelector:
                 data_spec=self._data_spec)
             self._batch_run = jax.jit(run)
             self._batch_round_log = round_log
-        self.round_log_batch = self._batch_round_log(queries.n_queries)
-        return self._batch_run(embeddings, ids, queries, key)
+        # one RoundLog per slot width, REUSED across calls so the runtime
+        # event counters accumulate over every select_batch this selector
+        # serves (note()'s contract) instead of resetting per step
+        Q = queries.n_queries
+        if Q not in self._batch_logs:
+            self._batch_logs[Q] = self._batch_round_log(Q)
+        self.round_log_batch = self._batch_logs[Q]
+        res = self._batch_run(embeddings, ids, queries, key)
+        self.round_log_batch.note("tau_fallback", jnp.sum(res.tau_fallback))
+        self.round_log_batch.note("n_dropped", jnp.sum(res.n_dropped))
+        return res
 
     def opt_upper_bound(self, embeddings) -> jax.Array:
         """k * (max singleton value) >= OPT >= max singleton — the standard

@@ -16,9 +16,18 @@ import jax.numpy as jnp
 import numpy as np
 
 
-def greedy(oracle, feats, valid, k: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Classic greedy: k batched argmax steps.  Returns (ids, size, value)."""
+def greedy(oracle, feats, valid, k: int, ids=None,
+           k_dyn=None) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Classic greedy: k batched argmax steps.  Returns (ids, size, value).
+
+    The solution buffer reports row indices, or global ids when ``ids``
+    is given (the streaming merge pools carry arbitrary global ids).
+    ``k_dyn`` (optional, traced () int32 <= k) caps the accepted count
+    within the fixed k-step loop — per-request budgets through one
+    compiled program, same convention as threshold_greedy."""
     n = feats.shape[0]
+    k_eff = k if k_dyn is None else jnp.minimum(
+        jnp.asarray(k_dyn, jnp.int32), k)
     st = oracle.init_state()
     aux = oracle.prep(st, feats)
     sol = jnp.full((k,), -1, jnp.int32)
@@ -28,11 +37,12 @@ def greedy(oracle, feats, valid, k: int) -> Tuple[jax.Array, jax.Array, jax.Arra
         gains = oracle.marginals(st, aux)
         gains = jnp.where(valid & ~taken, gains, -jnp.inf)
         best = jnp.argmax(gains)
-        ok = gains[best] > 0.0
+        ok = (gains[best] > 0.0) & (i < k_eff)
         aux_row = jax.tree.map(lambda a: a[best], aux)
         new_st = oracle.add(st, aux_row)
         st = jax.tree.map(lambda a, b: jnp.where(ok, a, b), new_st, st)
-        sol = jnp.where(ok, sol.at[i].set(best.astype(jnp.int32)), sol)
+        out_id = best.astype(jnp.int32) if ids is None else ids[best]
+        sol = jnp.where(ok, sol.at[i].set(out_id), sol)
         taken = taken.at[best].set(taken[best] | ok)
         return st, sol, taken
 

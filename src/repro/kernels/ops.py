@@ -15,6 +15,7 @@ from repro.kernels import exemplar_marginals as _em
 from repro.kernels import facility_marginals as _fm
 from repro.kernels import graph_cut_marginals as _gc
 from repro.kernels import logdet_marginals as _ld
+from repro.kernels import saturated_coverage_marginals as _sc
 from repro.kernels import weighted_coverage_marginals as _wc
 
 
@@ -53,6 +54,18 @@ def coverage_marginals(x, state, weights=None, *, block_c=None, block_f=None):
         kw["block_f"] = block_f
     return _cm.coverage_marginals(x, state, weights,
                                   interpret=_interpret(), **kw)
+
+
+def saturated_coverage_marginals(x, state, cap, weights=None, *,
+                                 block_c=None, block_f=None):
+    """Fused (C,d),(d,),(d,)->(C,) SaturatedCoverage marginals."""
+    kw = {}
+    if block_c:
+        kw["block_c"] = block_c
+    if block_f:
+        kw["block_f"] = block_f
+    return _sc.saturated_coverage_marginals(x, state, cap, weights,
+                                            interpret=_interpret(), **kw)
 
 
 def weighted_coverage_marginals(x, state, *, block_c=None, block_u=None):

@@ -53,6 +53,22 @@ def coverage_marginals(x, state, weights=None):
     return jnp.sum(g, axis=-1).astype(jnp.float32)
 
 
+def saturated_coverage_marginals(x, state, cap, weights=None):
+    """(C, d), (d,), (d,)[, (d,)] -> (C,): SaturatedCoverage marginal gains.
+
+    gains[i] = sum_f w_f (min(state_f + x_{i,f}, cap_f) - min(state_f, cap_f))
+
+    with cap = alpha * total the per-feature saturation level.
+    """
+    x = x.astype(jnp.float32)
+    state = state.astype(jnp.float32)[None, :]
+    cap = cap.astype(jnp.float32)[None, :]
+    g = jnp.minimum(state + x, cap) - jnp.minimum(state, cap)
+    if weights is not None:
+        g = g * weights[None, :]
+    return jnp.sum(g, axis=-1).astype(jnp.float32)
+
+
 def weighted_coverage_marginals(x, state):
     """(C, U), (U,) -> (C,): WeightedCoverage marginal gains.
 

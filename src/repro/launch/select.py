@@ -27,8 +27,8 @@ def main() -> None:
     ap.add_argument("--d", type=int, default=64)
     ap.add_argument("--oracle", default="feature_coverage",
                     choices=["feature_coverage", "facility_location",
-                             "weighted_coverage", "graph_cut", "log_det",
-                             "exemplar"])
+                             "weighted_coverage", "saturated_coverage",
+                             "graph_cut", "log_det", "exemplar"])
     ap.add_argument("--algorithm", default="two_round",
                     choices=["two_round", "multi_threshold"])
     ap.add_argument("--t", type=int, default=3)
@@ -43,7 +43,8 @@ def main() -> None:
     reference = None
     if args.oracle in ("facility_location", "exemplar"):
         reference = jax.random.uniform(kr, (256, args.d))
-    total = jnp.sum(emb, axis=0) if args.oracle == "graph_cut" else None
+    total = jnp.sum(emb, axis=0) \
+        if args.oracle in ("graph_cut", "saturated_coverage") else None
 
     spec = SelectorSpec(k=args.k, oracle=args.oracle,
                         algorithm=args.algorithm, t=args.t)

@@ -1,8 +1,11 @@
 """Continuous-batching selection service: many concurrent (oracle, k)
-queries against one corpus, served by the batched two-round driver.
+queries against one corpus, served by the batched two-round driver — plus
+an online ingestion path that admits new documents between serve steps
+and answers warm selections from a live sieve state.
 
     PYTHONPATH=src python -m repro.launch.select_serve --n 4096 --k 32 \
-        --slots 8 --requests 24 --oracle graph_cut [--engine lazy]
+        --slots 8 --requests 24 --oracle graph_cut [--engine lazy] \
+        [--ingest-docs 512 --ingest-every 2]
 
 The serving analogue of launch/serve.py's token loop, for selection:
 requests occupy a fixed number of SLOTS (the compiled program specializes
@@ -13,14 +16,28 @@ one gather round, Q answers — and retires them.  Unfilled slots are
 masked with k=0 (they select nothing and cost no extra rounds).
 
 Corpus-level statistics are computed ONCE at startup and cached across
-every request on the corpus: the graph-cut feature-sum ``total`` and the
-facility/exemplar reference set are per-corpus, not per-query, so no
-request pays for them again — this is the GreeDi-style amortization the
-paper's query-oblivious partition enables.
+every request on the corpus: the graph-cut / saturated-coverage
+feature-sum ``total`` and the facility/exemplar reference set are
+per-corpus, not per-query, so no request pays for them again — this is
+the GreeDi-style amortization the paper's query-oblivious partition
+enables.  (Under ingestion these statistics stay pinned at their
+service-start values — the standard practice of a fixed reference
+subsample / an a-priori total estimate — so the compiled programs and
+the live sieve state stay valid as the corpus grows.)
+
+`SelectionService.ingest()` is the online path (DESIGN.md §8): new
+documents stream host->device through the out-of-core sieve
+(repro.streaming), each document exactly once, ever; a subsequent
+`select_warm()` reads the answer out of the live sieve state in O(L*k)
+work — independent of the corpus size — instead of recomputing a full
+MapReduce pass from scratch.  benchmarks/streaming.py measures the
+warm-vs-cold gap.
 
 Requests carry per-query budgets (k <= --k) and, where the oracle has the
 knob, per-query hyper-parameters (graph_cut lam / log_det alpha), so the
-slots genuinely serve *different* queries in one program.
+slots genuinely serve *different* queries in one program.  Per-request
+stats surface `tau_fallback` (degenerate-sample events) and the service
+aggregates them, so a silent no-signal corpus is visible in serving.
 """
 
 from __future__ import annotations
@@ -31,17 +48,122 @@ from collections import deque
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.mapreduce import make_query_batch
-from repro.core.selector import DistributedSelector, SelectorSpec
+from repro.core.selector import (DistributedSelector, ORACLE_NAMES,
+                                 SelectorSpec, make_oracle)
 from repro.launch.mesh import make_mesh_for
+from repro.streaming import SieveSpec, StreamingSelector
+
+
+class SelectionService:
+    """One corpus, two serve paths, shared statistics.
+
+    * ``select_batch(requests, key)`` — the batched slot path: Q concurrent
+      queries against the materialized corpus in one mesh program.
+    * ``ingest(docs)`` / ``select_warm(budget)`` — the online path: new
+      documents are absorbed into a live one-pass sieve (host-resident
+      corpus, device sees one chunk at a time) and selections warm-start
+      from its state instead of recomputing from scratch.
+
+    Corpus statistics (reference / total) are computed once from the
+    initial corpus and pinned for the service lifetime.
+    """
+
+    def __init__(self, spec: SelectorSpec, mesh, init_corpus,
+                 reference=None, total=None, stream_chunk: int = 512):
+        init_corpus = np.asarray(init_corpus, np.float32)
+        n0, d = init_corpus.shape
+        self.spec, self.mesh, self.feat_dim = spec, mesh, d
+        if reference is None and spec.oracle in ("facility_location",
+                                                 "exemplar"):
+            step = max(1, n0 // spec.reference_size)
+            reference = jnp.asarray(init_corpus[::step][:spec.reference_size])
+        if total is None and spec.oracle in ("graph_cut",
+                                             "saturated_coverage"):
+            total = jnp.asarray(init_corpus.sum(axis=0))
+        self.reference, self.total = reference, total
+
+        self.selector = DistributedSelector(
+            spec, mesh, n_total=n0, feat_dim=d, reference=reference,
+            total=total)
+        self._emb = None          # materialized (device) corpus, batch path
+
+        # the online path is built eagerly (cheap: jit closures + empty
+        # state) but the initial corpus is only streamed through the sieve
+        # on FIRST use of ingest()/select_warm() — a static-corpus serve
+        # (no --ingest-docs) never pays the sieve compile or the n-row scan
+        oracle = make_oracle(spec, d, reference=reference, total=total)
+        sieve_spec = SieveSpec(k=spec.k, eps=spec.eps, accept=spec.accept,
+                               engine=spec.engine, chunk=spec.chunk)
+        self.stream = StreamingSelector(oracle, sieve_spec, d,
+                                        chunk_elems=stream_chunk)
+        self._init_corpus = init_corpus
+        self._stream_started = False
+        self.stats = {"served": 0, "tau_fallback": 0, "n_dropped": 0,
+                      "ingested": int(n0), "warm_selects": 0}
+
+    # ---- batched slot path ---------------------------------------------
+    def materialize(self):
+        """Device-put the initial corpus with the selector's sharding (the
+        batch path serves the corpus the selector was built for)."""
+        if self._emb is None:
+            with self.mesh:
+                self._emb = jax.device_put(jnp.asarray(self._init_corpus),
+                                           self.selector.data_sharding())
+        return self._emb
+
+    def _ensure_stream(self):
+        """First online-path use: absorb the initial corpus into the sieve
+        (deferred from __init__ so static-corpus serving never pays it)."""
+        if not self._stream_started:
+            self._stream_started = True
+            self.stream.ingest(self._init_corpus)
+
+    def select_batch(self, queries, key):
+        res = self.selector.select_batch(self.materialize(), queries, key)
+        return res
+
+    def account(self, res, n_active: int):
+        """Fold one step's per-request outcomes into the service stats.
+        Slots are filled front-first, so only the first ``n_active`` lanes
+        are real requests — masked k=0 filler slots share the corpus-wide
+        degenerate flag and would inflate the event counts."""
+        self.stats["served"] += n_active
+        self.stats["tau_fallback"] += int(jnp.sum(
+            res.tau_fallback[:n_active]))
+        self.stats["n_dropped"] += int(jnp.sum(res.n_dropped[:n_active]))
+
+    # ---- online ingestion path -----------------------------------------
+    def ingest(self, docs) -> dict:
+        """Admit new documents between serve steps: host-side append +
+        one-pass sieve absorption (each document streamed exactly once)."""
+        self._ensure_stream()
+        info = self.stream.ingest(docs)
+        self.stats["ingested"] = info["n_total"]
+        return info
+
+    def select_warm(self, budget=None):
+        """Answer a selection request from the live sieve state: O(L*k)
+        central completion, independent of how much has been ingested."""
+        self._ensure_stream()
+        res = self.stream.select(budget)
+        self.stats["warm_selects"] += 1
+        self.stats["tau_fallback"] += int(res.tau_fallback)
+        return res
+
+    def summary(self) -> str:
+        s = self.stats
+        return (f"[service] served={s['served']} warm={s['warm_selects']} "
+                f"ingested={s['ingested']} docs; events: "
+                f"tau_fallback={s['tau_fallback']} "
+                f"n_dropped={s['n_dropped']}")
 
 
 def synth_requests(n_requests: int, k_max: int, oracle: str, seed: int):
     """A synthetic request stream: per-request budget + hyper-parameters.
     In the framework these arrive from users; the shapes are what matters."""
-    import numpy as np
-
     rng = np.random.default_rng(seed)
     reqs = []
     for rid in range(n_requests):
@@ -64,43 +186,57 @@ def main() -> None:
                     help="request slots Q (the compiled batch dimension)")
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--oracle", default="feature_coverage",
-                    choices=["feature_coverage", "facility_location",
-                             "weighted_coverage", "graph_cut", "log_det",
-                             "exemplar"])
+                    choices=list(ORACLE_NAMES))
     ap.add_argument("--engine", default="dense", choices=["dense", "lazy"])
+    ap.add_argument("--ingest-docs", type=int, default=0,
+                    help="admit this many new docs between serve steps "
+                         "(0 = static corpus)")
+    ap.add_argument("--ingest-every", type=int, default=2,
+                    help="ingest cadence in serve steps")
+    ap.add_argument("--stream-chunk", type=int, default=512,
+                    help="out-of-core sieve chunk (device footprint rows)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     mesh = make_mesh_for(len(jax.devices()), model_parallel=1)
     key = jax.random.PRNGKey(args.seed)
-    kd, kr, ks = jax.random.split(key, 3)
-    emb = jax.random.uniform(kd, (args.n, args.d)) ** 2
+    kd, ki, ks = jax.random.split(key, 3)
+    emb = np.asarray(jax.random.uniform(kd, (args.n, args.d)) ** 2)
 
     # ---- per-CORPUS statistics: computed once, cached for every request --
     t0 = time.time()
-    reference = None
-    if args.oracle in ("facility_location", "exemplar"):
-        reference = jax.random.uniform(kr, (256, args.d))
-    total = jnp.sum(emb, axis=0) if args.oracle == "graph_cut" else None
     spec = SelectorSpec(k=args.k, oracle=args.oracle, algorithm="two_round",
                         engine=args.engine)
-    sel = DistributedSelector(spec, mesh, n_total=args.n, feat_dim=args.d,
-                              reference=reference, total=total)
-    with mesh:
-        emb = jax.device_put(emb, sel.data_sharding())
-        jax.block_until_ready(emb)
+    svc = SelectionService(spec, mesh, emb, stream_chunk=args.stream_chunk)
+    svc.materialize()
     t_prep = time.time() - t0
     print(f"[select_serve] corpus ready: n={args.n} d={args.d} "
           f"oracle={args.oracle} stats cached in {t_prep * 1e3:.0f}ms")
 
     pending = deque(synth_requests(args.requests, args.k, args.oracle,
                                    args.seed))
+    new_docs = np.asarray(
+        jax.random.uniform(ki, (max(args.ingest_docs, 1), args.d)) ** 2)
     Q = args.slots
     done, step, t_first, first_step_served = [], 0, None, 0
+    t_online = 0.0     # ingest/warm time, excluded from the serving qps
     t_serve = time.time()
     with mesh:
         while pending:
-            # ---- admit: fill free slots from the queue ------------------
+            # ---- admit: new documents (online path), then requests ------
+            # (timed separately: the online path runs between serve steps,
+            # so the printed steady-state qps stays comparable to a
+            # static-corpus run of the same tool)
+            if args.ingest_docs and step and step % args.ingest_every == 0:
+                t0o = time.time()
+                info = svc.ingest(new_docs[:args.ingest_docs])
+                warm = svc.select_warm()
+                jax.block_until_ready(warm.value)
+                t_online += time.time() - t0o
+                print(f"[select_serve] step {step}: ingested "
+                      f"{args.ingest_docs} docs (corpus={info['n_total']}), "
+                      f"warm f(S)={float(warm.value):.4f} "
+                      f"|S|={int(warm.sol_size)}")
             active = [pending.popleft() for _ in range(min(Q, len(pending)))]
             ks_q = [r["k"] for r in active] + [0] * (Q - len(active))
             lam_q = [r.get("lam", spec.graph_cut_lam) for r in active] \
@@ -111,7 +247,7 @@ def main() -> None:
                                   logdet_alpha=alpha_q)
 
             # ---- serve: one batched program answers every occupied slot -
-            res = sel.select_batch(emb, qb, key=jax.random.fold_in(ks, step))
+            res = svc.select_batch(qb, key=jax.random.fold_in(ks, step))
             jax.block_until_ready(res.value)
             if t_first is None:
                 t_first = time.time() - t_serve  # includes the one compile
@@ -124,6 +260,7 @@ def main() -> None:
                              "value": float(res.value[slot]),
                              "dropped": int(res.n_dropped[slot]),
                              "tau_fallback": int(res.tau_fallback[slot])})
+            svc.account(res, len(active))
             step += 1
     t_total = time.time() - t_serve
 
@@ -132,14 +269,16 @@ def main() -> None:
     # with a single step there is no warm window to measure, so say so
     # instead of passing a compile-dominated figure off as steady-state
     if step > 1:
-        qps = (len(done) - first_step_served) / max(t_total - t_first, 1e-9)
+        qps = (len(done) - first_step_served) \
+            / max(t_total - t_first - t_online, 1e-9)
         rate = f"steady-state {qps:.1f} queries/s"
     else:
         rate = (f"{len(done) / max(t_total, 1e-9):.1f} queries/s "
                 f"incl. compile (single step — no steady-state window)")
     print(f"[select_serve] slots={Q} served={len(done)} steps={step} "
           f"first-step {t_first * 1e3:.0f}ms (incl. compile), {rate}")
-    print(sel.round_log_batch.summary())
+    print(svc.selector.round_log_batch.summary())
+    print(svc.summary())
     for r in done[: min(8, len(done))]:
         print(f"[select_serve]   req {r['id']:3d}: k={r['k']:3d} "
               f"|S|={r['size']:3d} f(S)={r['value']:.4f} "

@@ -1,0 +1,25 @@
+"""Streaming selection subsystem: single-pass sieve engines, distributed
+sieve-and-merge, and out-of-core/online corpus ingestion.
+
+The MapReduce drivers (repro.core.mapreduce) answer "select k from a
+materialized corpus"; this package answers the companion regimes from the
+distributed-submodular literature — corpora that arrive over time, exceed
+device memory, or live as per-machine streams — reusing the same oracle
+zoo, ThresholdGreedy engines and fused Pallas chunk kernels unmodified.
+See DESIGN.md §8.
+"""
+
+from repro.streaming.distributed_sieve import (sieve_and_merge_mesh,
+                                               sieve_and_merge_sim)
+from repro.streaming.ingest import (HostCorpus, StreamingSelector,
+                                    prefetch_to_device)
+from repro.streaming.sieve import (SieveSpec, SieveState, merge_pool,
+                                   sieve_best, sieve_chunks, sieve_finish,
+                                   sieve_init, sieve_run, sieve_update)
+
+__all__ = [
+    "SieveSpec", "SieveState", "merge_pool", "sieve_best", "sieve_chunks",
+    "sieve_finish", "sieve_init", "sieve_run", "sieve_update",
+    "sieve_and_merge_mesh", "sieve_and_merge_sim",
+    "HostCorpus", "StreamingSelector", "prefetch_to_device",
+]

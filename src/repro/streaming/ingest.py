@@ -1,0 +1,173 @@
+"""Out-of-core ingestion: the corpus lives host-side in fixed-size chunks
+and is double-buffer prefetched through the sieve scan — selection runs on
+n far larger than device memory, and new documents can arrive between
+selections.
+
+Memory model: the device only ever holds ONE (B, d) chunk in flight (plus
+the next chunk being transferred, plus the O(L·k·d) sieve state).  The
+full (n, d) corpus exists only as host numpy chunks inside `HostCorpus`;
+it is never materialized on device, so the feasible n is bounded by host
+RAM / disk, not HBM.
+
+Warm starts: the sieve is one-pass and its state is a fixed-shape pytree,
+so `StreamingSelector.ingest()` absorbs new documents incrementally (each
+element is streamed exactly once, ever) and `select()` is a cheap read of
+the live state — O(L·k) pool completion, independent of n — instead of a
+full re-selection.  `benchmarks/streaming.py` measures the warm-vs-cold
+gap; `launch/select_serve.py` exposes this as the serving `ingest()` API.
+
+Determinism: replaying the same sequence of ingest()/select() calls with
+the same data is bit-identical (chunk boundaries are part of the replay —
+a select() flushes the partial tail chunk, which advances the stream
+exactly as it does on the replay).
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, Iterator, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mapreduce import SelectionResult
+from repro.streaming.sieve import (SieveSpec, sieve_finish, sieve_init,
+                                   sieve_update)
+
+
+class HostCorpus:
+    """A growing host-resident corpus, handed out as fixed-size chunks.
+
+    Rows get global ids in arrival order.  `chunks(start)` yields
+    (feats (B, d) np, ids (B,) np, valid (B,) np) with the tail chunk
+    zero-padded and masked invalid."""
+
+    def __init__(self, feat_dim: int, chunk_elems: int = 512):
+        self.feat_dim = int(feat_dim)
+        self.chunk_elems = int(chunk_elems)
+        self._parts: List[np.ndarray] = []
+        self.n_total = 0
+
+    def append(self, feats) -> int:
+        """Add rows (host numpy / anything np.asarray-able); returns the
+        first global id of the appended block."""
+        feats = np.asarray(feats, np.float32)
+        assert feats.ndim == 2 and feats.shape[1] == self.feat_dim, \
+            f"expected (m, {self.feat_dim}) rows, got {feats.shape}"
+        first = self.n_total
+        self._parts.append(feats)
+        self.n_total += feats.shape[0]
+        return first
+
+    def _rows(self, start: int, stop: int) -> np.ndarray:
+        out = np.empty((stop - start, self.feat_dim), np.float32)
+        lo = 0
+        for p in self._parts:
+            hi = lo + p.shape[0]
+            a, b = max(start, lo), min(stop, hi)
+            if a < b:
+                out[a - start:b - start] = p[a - lo:b - lo]
+            lo = hi
+        return out
+
+    def chunks(self, start: int, stop: Optional[int] = None,
+               full_only: bool = False) -> Iterator[tuple]:
+        """Yield (feats, ids, valid) host chunks covering [start, stop)."""
+        B = self.chunk_elems
+        stop = self.n_total if stop is None else stop
+        at = start
+        while at < stop:
+            hi = min(at + B, stop)
+            if full_only and hi - at < B:
+                return
+            feats = self._rows(at, hi)
+            ids = np.arange(at, hi, dtype=np.int32)
+            valid = np.ones((hi - at,), bool)
+            if hi - at < B:     # padded tail
+                pad = B - (hi - at)
+                feats = np.pad(feats, ((0, pad), (0, 0)))
+                ids = np.pad(ids, (0, pad), constant_values=-1)
+                valid = np.pad(valid, (0, pad))
+            yield feats, ids, valid
+            at = hi
+
+
+def prefetch_to_device(chunks: Iterable[tuple]) -> Iterator[tuple]:
+    """Double-buffer host->device transfer: chunk t+1 is dispatched to the
+    device while chunk t is being consumed, so the copy hides behind the
+    sieve compute (jax transfers/dispatch are async)."""
+    it = iter(chunks)
+    try:
+        nxt = jax.tree.map(jnp.asarray, next(it))
+    except StopIteration:
+        return
+    for c in it:
+        cur, nxt = nxt, jax.tree.map(jnp.asarray, c)
+        yield cur
+    yield nxt
+
+
+class StreamingSelector:
+    """Online selection over a host-resident, growing corpus.
+
+    ``ingest(docs)`` appends documents and streams any newly completed
+    chunks through the (jitted) sieve update; ``select()`` flushes the
+    partial tail chunk and reads a selection out of the live sieve state.
+    Selection cost is O(L·k) — independent of how much has been ingested —
+    which is the warm-start win over re-running a MapReduce driver on the
+    full corpus.
+    """
+
+    def __init__(self, oracle, spec: SieveSpec, feat_dim: int,
+                 chunk_elems: int = 512):
+        self.oracle = oracle
+        self.spec = spec
+        self.corpus = HostCorpus(feat_dim, chunk_elems)
+        self.state = sieve_init(oracle, spec, feat_dim)
+        self.n_streamed = 0      # rows already absorbed by the sieve
+        self._update = jax.jit(
+            lambda st, f, i, v: sieve_update(oracle, spec, st, f, i, v))
+        self._finish = jax.jit(
+            lambda st, kq: sieve_finish(oracle, spec, st, k_dyn=kq))
+
+    @property
+    def n_total(self) -> int:
+        return self.corpus.n_total
+
+    def ingest(self, docs) -> dict:
+        """Append document feature rows and absorb every newly completed
+        chunk (full chunks only — the tail waits for more documents or for
+        the next select()'s flush).  Returns ingest stats."""
+        first = self.corpus.append(docs)
+        n_chunks = 0
+        for f, i, v in prefetch_to_device(
+                self.corpus.chunks(self.n_streamed, full_only=True)):
+            self.state = self._update(self.state, f, i, v)
+            self.n_streamed += f.shape[0]
+            n_chunks += 1
+        return {"first_id": first, "n_total": self.n_total,
+                "streamed": self.n_streamed, "chunks": n_chunks}
+
+    def _flush(self) -> None:
+        for f, i, v in prefetch_to_device(
+                self.corpus.chunks(self.n_streamed)):
+            self.state = self._update(self.state, f, i, v)
+            self.n_streamed = min(self.n_streamed + f.shape[0],
+                                  self.n_total)
+
+    def select(self, budget: Optional[int] = None) -> SelectionResult:
+        """Warm selection from the live sieve state (flushes the pending
+        tail first).  ``budget`` <= spec.k serves a smaller per-request
+        cardinality without recompiling."""
+        if budget is not None and budget > self.spec.k:
+            # mirror select_batch's guard: the lane/solution buffers are
+            # statically spec.k wide, so a larger budget would silently
+            # truncate — fail loudly instead
+            raise ValueError(
+                f"select: budget {budget} exceeds the sieve buffer "
+                f"capacity spec.k={self.spec.k}; build the "
+                f"StreamingSelector with a larger k")
+        self._flush()
+        kq = jnp.asarray(self.spec.k if budget is None else budget,
+                         jnp.int32)
+        return self._finish(self.state, kq)

@@ -1,0 +1,297 @@
+"""Single-pass SieveStreaming over corpus chunks (the streaming companion
+of the MapReduce drivers — Badanidiyuru et al.'s sieve, on the repo's
+fixed-shape oracle machinery).
+
+The MapReduce drivers assume the corpus is materialized and re-partitioned
+per call; the sieve assumes only that it arrives as a sequence of
+fixed-size chunks.  It maintains the paper's geometric threshold grid
+*online* as L parallel **lanes**: lane j holds an independent oracle state
+/ solution buffer and a fixed threshold tau_j = v_j / (2k) for a grid
+value v_j = (1+eps)^{e_j}.  One `sieve_update` call per chunk:
+
+  1. the chunk's singleton values (one `oracle.chunk_marginals` from the
+     empty state — the fused Pallas path) update the running max v_max;
+  2. the live exponent window [lo, lo+L) slides so grid values cover
+     [v_max, ~2k * v_max]; lanes whose exponent fell below the window are
+     **re-seeded** empty at the top (`repro.core.grids.lane_exponents` —
+     lane identity is exponent mod L, so surviving lanes keep their
+     accumulated state bit-for-bit);
+  3. every lane runs Algorithm-1 ThresholdGreedy over the chunk (vmapped
+     over lanes, `accept="first"` — exactly the paper's streaming accept
+     loop restricted to this chunk), reusing the dense/lazy engines and
+     the oracle zoo's `chunk_marginals` kernels unmodified.
+
+Everything is deterministic and fixed-shape: replaying the same chunk
+sequence reproduces the same SieveState bit-for-bit (no RNG anywhere).
+
+Guarantee (the classic sieve argument, chunk-granular): v_max is updated
+*before* the chunk's accepts, so a lane born at chunk t only ever missed
+elements whose singleton value was < tau_j (they arrived while
+v_max < v_j / 2k, and marginals are bounded by singletons) — the lane
+covering OPT from above (OPT <= v_j <= (1+eps) OPT exists since
+v_max <= OPT <= k * v_max) therefore ends with
+f(S_j) >= (1/2 - eps/2) OPT, and `sieve_finish` only improves on it.
+
+`sieve_finish` is the GreeDi-style central completion: the union of lane
+solutions (<= L*k elements, features carried in the state) is deduped and
+re-run through the standard tau grid with the existing ThresholdGreedy
+engines, best-of taken against the raw best lane.  This costs O(L*k)
+candidate rows — independent of the stream length n.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import grids
+from repro.core.mapreduce import SelectionResult
+from repro.core.sequential import greedy
+from repro.core.threshold import (DEFAULT_CHUNK, exclude_ids,
+                                  threshold_greedy)
+
+EXP_UNSEEDED = -(2 ** 30)   # exponent sentinel: lane never assigned
+
+
+@dataclasses.dataclass(frozen=True)
+class SieveSpec:
+    """Knobs of the streaming engine (the streaming analogue of MRConfig)."""
+    k: int
+    eps: float = 0.1
+    n_lanes: Optional[int] = None     # default: cover [v, 2kv] at (1+eps)
+    top_cap: Optional[int] = None     # running top-singleton reservoir size
+    accept: str = "first"
+    engine: str = "dense"             # per-chunk ThresholdGreedy engine
+    chunk: int = DEFAULT_CHUNK        # lazy-engine rescore chunk
+
+    @property
+    def lanes(self) -> int:
+        return self.n_lanes or grids.lane_count(self.k, self.eps)
+
+    @property
+    def tops(self) -> int:
+        # Algorithm 7's "O(k) largest" sparse-path message, kept online
+        return self.top_cap or 2 * self.k
+
+    def grid_size(self) -> int:
+        return grids.grid_size(self.k, self.eps)
+
+
+class SieveState(NamedTuple):
+    """Live state of one sieve pass — a fixed-shape pytree, so it scans,
+    jits, checkpoints and warm-starts trivially."""
+    oracle_states: Any       # stacked (L, ...) oracle-state pytree
+    sol_ids: jax.Array       # (L, k) int32 global ids, -1 padded
+    sol_feats: jax.Array     # (L, k, d) selected feature rows (for finish)
+    sol_sizes: jax.Array     # (L,) int32
+    exps: jax.Array          # (L,) int32 grid exponents (EXP_UNSEEDED = new)
+    v_max: jax.Array         # () f32 running max singleton value
+    n_seen: jax.Array        # () int32 valid elements streamed so far
+    top_feats: jax.Array     # (T, d) running top singletons (Alg-7 analog)
+    top_ids: jax.Array       # (T,) int32, -1 padded
+    top_vals: jax.Array      # (T,) f32 singleton values, -inf padded
+
+
+def _stacked_init(oracle, n_lanes: int):
+    """(L,)-stacked empty oracle states."""
+    return jax.vmap(lambda _: oracle.init_state())(jnp.arange(n_lanes))
+
+
+def sieve_init(oracle, spec: SieveSpec, feat_dim: int) -> SieveState:
+    L, k, T = spec.lanes, spec.k, spec.tops
+    return SieveState(
+        oracle_states=_stacked_init(oracle, L),
+        sol_ids=jnp.full((L, k), -1, jnp.int32),
+        sol_feats=jnp.zeros((L, k, feat_dim), jnp.float32),
+        sol_sizes=jnp.zeros((L,), jnp.int32),
+        exps=jnp.full((L,), EXP_UNSEEDED, jnp.int32),
+        v_max=jnp.zeros((), jnp.float32),
+        n_seen=jnp.zeros((), jnp.int32),
+        top_feats=jnp.zeros((T, feat_dim), jnp.float32),
+        top_ids=jnp.full((T,), -1, jnp.int32),
+        top_vals=jnp.full((T,), -jnp.inf, jnp.float32),
+    )
+
+
+def sieve_update(oracle, spec: SieveSpec, state: SieveState, feats, ids,
+                 valid) -> SieveState:
+    """Absorb one (B, d) chunk.  Pure and jit/scan-friendly; bit-identical
+    on replay of the same chunk sequence."""
+    L, k = spec.lanes, spec.k
+    B = feats.shape[0]
+
+    # ---- 1. lazy max-singleton tracker (fused kernel path) --------------
+    singles = oracle.chunk_marginals(oracle.init_state(), feats)
+    v_chunk = jnp.max(jnp.where(valid, singles, 0.0), initial=0.0)
+    v_max = jnp.maximum(state.v_max, v_chunk)
+    active = v_max > 0.0
+
+    # ---- 1b. running top-singleton reservoir (Algorithm 7, online) ------
+    # the sparse path's "O(k) largest elements" kept as stream state: the
+    # finish pool gets globally strong candidates even when every lane
+    # filled up on early, merely-above-threshold elements
+    cat_vals = jnp.concatenate(
+        [state.top_vals, jnp.where(valid, singles, -jnp.inf)])
+    top_vals, t_idx = jax.lax.top_k(cat_vals, spec.tops)
+    cat_ids = jnp.concatenate([state.top_ids, ids])
+    cat_feats = jnp.concatenate([state.top_feats, feats])
+    top_ids = jnp.where(jnp.isfinite(top_vals), cat_ids[t_idx], -1)
+    top_feats = cat_feats[t_idx]
+
+    # ---- 2. slide the exponent window; re-seed dropped lanes ------------
+    lo = grids.lane_window_lo(v_max, spec.eps)
+    new_exps = jnp.where(active, grids.lane_exponents(lo, L),
+                         jnp.full((L,), EXP_UNSEEDED, jnp.int32))
+    reseed = new_exps != state.exps
+    lane_states = jax.tree.map(
+        lambda init, old: jnp.where(
+            reseed.reshape((-1,) + (1,) * (old.ndim - 1)), init, old),
+        _stacked_init(oracle, L), state.oracle_states)
+    sol_ids = jnp.where(reseed[:, None], -1, state.sol_ids)
+    sol_feats = jnp.where(reseed[:, None, None], 0.0, state.sol_feats)
+    sol_sizes = jnp.where(reseed, 0, state.sol_sizes)
+
+    # ---- 3. per-lane threshold accept over the chunk --------------------
+    taus = grids.lane_taus(new_exps, k, spec.eps, active)
+
+    def lane_accept(st, sol, size, tau):
+        v = exclude_ids(ids, valid & (ids >= 0), sol)
+        return threshold_greedy(oracle, st, sol, size, feats, ids, v, tau,
+                                k, accept=spec.accept, engine=spec.engine,
+                                chunk=spec.chunk)
+
+    lane_states, sol_ids, new_sizes = jax.vmap(lane_accept)(
+        lane_states, sol_ids, sol_sizes, taus)
+
+    # ---- 4. carry the accepted feature rows (needed by the finish) ------
+    slot = jnp.arange(k, dtype=jnp.int32)
+
+    def lane_feats(sol, old_feats, old_size, new_size):
+        match = sol[:, None] == ids[None, :]            # (k, B)
+        here = jnp.any(match & valid[None, :], axis=1)
+        pos = jnp.argmax(match, axis=1)
+        fresh = (slot >= old_size) & (slot < new_size) & here
+        return jnp.where(fresh[:, None], feats[pos], old_feats)
+
+    sol_feats = jax.vmap(lane_feats)(sol_ids, sol_feats, sol_sizes,
+                                     new_sizes)
+
+    return SieveState(lane_states, sol_ids, sol_feats, new_sizes, new_exps,
+                      v_max, state.n_seen + jnp.sum(valid),
+                      top_feats, top_ids, top_vals)
+
+
+def sieve_best(oracle, state: SieveState):
+    """(sol_ids (k,), size (), value ()) of the best raw lane."""
+    vals = jax.vmap(oracle.value)(state.oracle_states)
+    vals = jnp.where(state.sol_sizes > 0, vals, -jnp.inf)
+    best = jnp.argmax(vals)
+    return (state.sol_ids[best], state.sol_sizes[best],
+            jnp.maximum(vals[best], 0.0))
+
+
+def merge_pool(oracle, spec: SieveSpec, pool_feats, pool_ids, pool_valid,
+               v_max, best_sol, best_size, best_val,
+               k_dyn=None) -> SelectionResult:
+    """Central completion shared by `sieve_finish` and the distributed
+    sieve-and-merge driver: dedupe the pooled survivors by global id, run
+    the standard tau grid over them with ThresholdGreedy, and return the
+    best of (grid solutions, incoming best-local solution).
+
+    ``k_dyn`` (optional, traced () int32 <= spec.k) serves per-request
+    budgets from one compiled program — the warm serving path; the raw
+    best-lane candidate only competes at the full budget (its value is
+    only known for the whole lane solution).
+
+    The pool is device-resident and O(survivors) — the stream length never
+    appears here."""
+    k = spec.k
+    if k_dyn is not None:
+        at_full = jnp.asarray(k_dyn, jnp.int32) >= k
+        best_val = jnp.where(at_full, best_val, -jnp.inf)
+    # first occurrence wins; duplicates (same element selected by several
+    # lanes/machines) are masked out so the greedy never double-counts
+    eq = (pool_ids[:, None] == pool_ids[None, :]) & pool_valid[None, :]
+    P = pool_ids.shape[0]
+    dup = jnp.any(eq & (jnp.arange(P)[None, :] < jnp.arange(P)[:, None]),
+                  axis=1)
+    pool_valid = pool_valid & ~dup
+
+    taus, tau_fb = grids.tau_grid_from_v(v_max, k, spec.eps,
+                                         spec.grid_size())
+
+    def per_tau(tau):
+        st = oracle.init_state()
+        sol = jnp.full((k,), -1, jnp.int32)
+        st, sol, size = threshold_greedy(
+            oracle, st, sol, jnp.zeros((), jnp.int32), pool_feats, pool_ids,
+            pool_valid, tau, k, accept=spec.accept, engine=spec.engine,
+            chunk=spec.chunk, k_dyn=k_dyn)
+        return sol, size, oracle.value(st)
+
+    sol_j, size_j, val_j = jax.vmap(per_tau)(taus)
+    # the GreeDi completion: classic greedy on the pooled survivors —
+    # O(k * |pool|) marginal rows, still independent of the stream length,
+    # and the strongest of the central candidates in practice
+    g_sol, g_size, g_val = greedy(oracle, pool_feats, pool_valid, k,
+                                  ids=pool_ids, k_dyn=k_dyn)
+    sols = jnp.concatenate([sol_j, g_sol[None], best_sol[None]], axis=0)
+    sizes = jnp.concatenate([size_j, g_size[None], best_size[None]], axis=0)
+    vals = jnp.concatenate([val_j, g_val[None], best_val[None]], axis=0)
+    b = jnp.argmax(vals)
+    return SelectionResult(sols[b], sizes[b], vals[b],
+                           jnp.zeros((), jnp.int32), tau_fb)
+
+
+
+
+def sieve_finish(oracle, spec: SieveSpec, state: SieveState,
+                 k_dyn=None) -> SelectionResult:
+    """Read a selection out of the live sieve state (non-destructive: the
+    state keeps streaming afterwards — this is the warm-start read path).
+    ``k_dyn`` optionally serves a smaller per-request budget."""
+    L, k = spec.lanes, spec.k
+    d = state.sol_feats.shape[-1]
+    pool_feats = jnp.concatenate([state.sol_feats.reshape(L * k, d),
+                                  state.top_feats])
+    pool_ids = jnp.concatenate([state.sol_ids.reshape(L * k),
+                                state.top_ids])
+    return merge_pool(oracle, spec, pool_feats, pool_ids, pool_ids >= 0,
+                      state.v_max, *sieve_best(oracle, state), k_dyn=k_dyn)
+
+
+def sieve_chunks(feats, ids, valid, chunk_elems: int):
+    """Reshape a device-resident corpus into the (T, B, ...) chunk stream
+    the scan consumes, padding the tail with invalid rows."""
+    n, d = feats.shape
+    T = -(-n // chunk_elems)
+    pad = T * chunk_elems - n
+    if pad:
+        feats = jnp.pad(feats, ((0, pad), (0, 0)))
+        ids = jnp.pad(ids, (0, pad), constant_values=-1)
+        valid = jnp.pad(valid, (0, pad), constant_values=False)
+    return (feats.reshape(T, chunk_elems, d),
+            ids.reshape(T, chunk_elems),
+            valid.reshape(T, chunk_elems))
+
+
+def sieve_run(oracle, spec: SieveSpec, feats, ids, valid,
+              chunk_elems: int = 512):
+    """One-pass sieve over a device-resident corpus: scan `sieve_update`
+    over its chunks, then `sieve_finish`.  (For host-resident / growing
+    corpora use repro.streaming.ingest.StreamingSelector, which feeds the
+    same update from a double-buffered host stream.)
+
+    Returns (SelectionResult, SieveState)."""
+    state = sieve_init(oracle, spec, feats.shape[-1])
+    fs, is_, vs = sieve_chunks(feats, ids, valid, chunk_elems)
+
+    def step(st, chunk):
+        f, i, v = chunk
+        return sieve_update(oracle, spec, st, f, i, v), None
+
+    state, _ = jax.lax.scan(step, state, (fs, is_, vs))
+    return sieve_finish(oracle, spec, state), state

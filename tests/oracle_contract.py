@@ -26,7 +26,7 @@ import numpy as np
 
 from repro.core import (ExemplarClustering, FacilityLocation,
                         FeatureCoverage, GraphCut, LogDetDiversity,
-                        WeightedCoverage)
+                        SaturatedCoverage, WeightedCoverage)
 
 K_CAP = 8   # max subset size the property tests draw (>= |B| + 1 below)
 
@@ -43,6 +43,15 @@ def build_weighted_coverage(rng, n, d):
     inc = jnp.asarray((rng.random((n, d)) < 0.3).astype(np.float32))
     w = jnp.asarray(rng.random(d).astype(np.float32))
     return WeightedCoverage(feat_dim=d, weights=w), inc
+
+
+def build_saturated_coverage(rng, n, d):
+    feats = _nonneg(rng, n, d)
+    w = jnp.asarray(rng.random(d).astype(np.float32))
+    # alpha low enough that the cap actually binds inside K_CAP-sized
+    # subsets — otherwise the tests only exercise the linear regime
+    return (SaturatedCoverage(feat_dim=d, total=jnp.sum(feats, axis=0),
+                              alpha=0.15, weights=w), feats)
 
 
 def build_facility_location(rng, n, d):
@@ -71,6 +80,7 @@ def build_exemplar(rng, n, d):
 REGISTRY = {
     "feature_coverage": build_feature_coverage,
     "weighted_coverage": build_weighted_coverage,
+    "saturated_coverage": build_saturated_coverage,
     "facility_location": build_facility_location,
     "graph_cut": build_graph_cut,
     "log_det": build_log_det,
@@ -80,7 +90,7 @@ REGISTRY = {
 #: oracles whose hot paths route through a Pallas kernel when
 #: ``use_kernel=True`` (swept by the kernel differential tests)
 KERNELED = ("feature_coverage", "facility_location", "weighted_coverage",
-            "graph_cut", "log_det", "exemplar")
+            "saturated_coverage", "graph_cut", "log_det", "exemplar")
 
 
 def state_of(oracle, feats, subset):

@@ -323,7 +323,8 @@ def test_opt_upper_bound_every_oracle_with_tp_rebuild(name):
     X = jnp.asarray((rng.random((n, d)).astype(np.float32)) ** 2)
     ref = jnp.asarray(rng.random((16, d)).astype(np.float32)) \
         if name in ("facility_location", "exemplar") else None
-    total = jnp.sum(X, axis=0) if name == "graph_cut" else None
+    total = jnp.sum(X, axis=0) \
+        if name in ("graph_cut", "saturated_coverage") else None
     mesh = make_mesh_for(len(jax.devices()), model_parallel=1)
     spec = SelectorSpec(k=k, oracle=name, algorithm="two_round")
     sel = DistributedSelector(spec, mesh, n_total=n, feat_dim=d,

@@ -189,6 +189,52 @@ def test_feature_coverage_oracle_kernel_route():
 
 
 # ---------------------------------------------------------------------------
+# saturated_coverage_marginals kernel
+# ---------------------------------------------------------------------------
+
+from repro.kernels.saturated_coverage_marginals import (  # noqa: E402
+    saturated_coverage_marginals)
+
+
+@pytest.mark.parametrize("C,d", SHAPES_CM)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("weighted", [False, True])
+def test_saturated_coverage_marginals_matches_ref(C, d, dtype, weighted):
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(C * 19 + d), 4)
+    x = jnp.abs(_rand(k1, (C, d), dtype))          # coverage needs x >= 0
+    state = jnp.abs(_rand(k2, (d,), jnp.float32))
+    cap = jnp.abs(_rand(k3, (d,), jnp.float32)) * 2.0
+    w = jnp.abs(_rand(k4, (d,), jnp.float32)) if weighted else None
+    got = saturated_coverage_marginals(x, state, cap, w, interpret=True)
+    want = ref.saturated_coverage_marginals(x, state, cap, w)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol * d)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 200), st.integers(1, 160), st.integers(0, 2 ** 31))
+def test_saturated_coverage_marginals_property(C, d, seed):
+    """Nonneg gains, bounded by the unsaturated (linear) gain; a larger
+    state gives pointwise-smaller gains (diminishing returns); kernel ==
+    ref."""
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = jnp.abs(jax.random.normal(k1, (C, d)))
+    st0 = jnp.abs(jax.random.normal(k2, (d,)))
+    cap = jnp.abs(jax.random.normal(k3, (d,))) * 2.0
+    g0 = saturated_coverage_marginals(x, st0, cap, interpret=True)
+    g1 = saturated_coverage_marginals(
+        x, st0 + jnp.abs(jax.random.normal(k4, (d,))), cap, interpret=True)
+    assert np.all(np.asarray(g0) >= -1e-6)
+    assert np.all(np.asarray(g0) <= np.asarray(jnp.sum(x, axis=-1)) + 1e-4)
+    assert np.all(np.asarray(g1) <= np.asarray(g0) + 1e-5)  # submodular
+    np.testing.assert_allclose(
+        np.asarray(g0),
+        np.asarray(ref.saturated_coverage_marginals(x, st0, cap)),
+        rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
 # weighted_coverage_marginals kernel
 # ---------------------------------------------------------------------------
 

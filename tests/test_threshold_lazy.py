@@ -35,6 +35,11 @@ def _setup(name, seed=0, n=256, d=10, k=10):
         feats = jnp.asarray(rng.random((n, d)).astype(np.float32))
         ref = jnp.asarray(rng.random((24, d)).astype(np.float32))
         oracle = FacilityLocation(feat_dim=d, reference=ref)
+    elif name == "saturated_coverage":
+        from repro.core import SaturatedCoverage
+        feats = jnp.asarray((rng.random((n, d)).astype(np.float32)) ** 2)
+        oracle = SaturatedCoverage(feat_dim=d, total=jnp.sum(feats, axis=0),
+                                   alpha=0.15)
     elif name == "graph_cut":
         feats = jnp.asarray((rng.random((n, d)).astype(np.float32)) ** 2)
         oracle = GraphCut(feat_dim=d, total=jnp.sum(feats, axis=0), lam=0.5)
@@ -64,7 +69,7 @@ def _run(oracle, feats, ids, valid, tau, k, **kw):
 
 
 ORACLES = ["feature_coverage", "facility_location", "weighted_coverage",
-           "graph_cut", "log_det", "exemplar"]
+           "saturated_coverage", "graph_cut", "log_det", "exemplar"]
 
 
 @pytest.mark.parametrize("name", ORACLES)
