@@ -17,17 +17,40 @@ Every invocation writes a per-module status/timing summary to
 import) still leaves a `failed` row there, so "which tables regenerated?"
 is answerable from files rather than scrollback.  Unknown ``--only`` names
 are rejected up front instead of surfacing as an ImportError mid-run.
+
+A registered bench that returns without (re)writing its JSON trajectory
+file(s) — ``results/bench/<module>.json``, plus anything the module lists
+in ``JSON_OUTPUTS`` — is a FAILURE, not a silent skip: the EXPERIMENTS
+tables regenerate from those files, so a missing file means a table
+silently frozen at its last value.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import time
 import traceback
 
 MODULES = ("approx_ratio", "adversarial", "memory_rounds",
            "distributed_baselines", "selection_throughput", "selection_qps",
            "streaming", "selection_roofline", "roofline_report")
+
+
+def _missing_outputs(mod, name: str, t0: float) -> list:
+    """JSON files the module should have (re)written this run but didn't.
+    Freshness is mtime >= the module's start time, so a stale file left by
+    a previous run doesn't mask a bench that stopped saving."""
+    from benchmarks.common import RESULTS_DIR
+
+    expected = tuple(getattr(mod, "JSON_OUTPUTS", (name,)))
+    missing = []
+    for out in expected:
+        path = os.path.join(RESULTS_DIR, f"{out}.json")
+        # 2s slack for coarse filesystem mtime granularity
+        if not os.path.exists(path) or os.path.getmtime(path) < t0 - 2.0:
+            missing.append(f"{out}.json")
+    return missing
 
 
 def main() -> None:
@@ -52,6 +75,12 @@ def main() -> None:
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
             rows = mod.run(quick=args.quick)
+            missing = _missing_outputs(mod, name, t0)
+            if missing:
+                raise RuntimeError(
+                    f"benchmark {name} ran but wrote no JSON for "
+                    f"{missing} — trajectory files must not silently "
+                    f"go missing")
             status = "ok"
             n_rows = len(rows) if isinstance(rows, list) else 0
             print(f"[bench] {name} done in {time.time() - t0:.1f}s",

@@ -64,6 +64,14 @@ class SubmodularOracle:
     chunk_marginals(state, cand_feats): (B,) gains straight from features —
                                   the lazy engine's streaming path; never
                                   materializes a full-block aux.
+    chunk_accept(state, cand_feats, eligible, tau, budget):
+                                  the fused engine's path — run the whole
+                                  Algorithm-1 accept loop over the (B, d)
+                                  chunk, returning (mask (B,) bool,
+                                  new_state, gains (B,) f32); the default
+                                  is a lax.scan over rows (correct for
+                                  every oracle), kerneled oracles override
+                                  it with a single Pallas sweep.
     add(state, aux_row):          state for S + {e}, from e's aux row.
     value(state):                 f(S).
     """
@@ -78,6 +86,38 @@ class SubmodularOracle:
 
     def chunk_marginals(self, state, cand_feats):
         return self.marginals(state, self.prep(state, cand_feats))
+
+    def chunk_accept(self, state, cand_feats, eligible, tau, budget):
+        """Sequential threshold-accept sweep over one chunk (the paper's
+        Algorithm-1 inner loop restricted to these B rows): row i's gain
+        is its fresh marginal against the state *after* every earlier
+        accepted row, it is accepted when eligible & gain >= tau &
+        accepts-so-far < budget, and accepted rows update the state.
+
+        Returns (mask (B,) bool, new_state, gains (B,) f32).  The gains
+        are fresh marginals at scan time — valid stale upper bounds for
+        the lazy buffer by submodularity.  This reference implementation
+        is a lax.scan over rows with a conditional state swap per row —
+        correct for every oracle (including pytree states like log-det's
+        incremental Cholesky); the state-decomposable oracles override it
+        with fused Pallas kernels that keep the state in VMEM scratch.
+        """
+        aux = self.prep(state, cand_feats)
+
+        def step(carry, xs):
+            st, n_acc = carry
+            ok, aux_row = xs
+            gain = self.marginals(
+                st, jax.tree.map(lambda a: a[None], aux_row))[0]
+            acc = ok & (gain >= tau) & (n_acc < budget)
+            new_st = self.add(st, aux_row)
+            st = jax.tree.map(
+                lambda new, old: jnp.where(acc, new, old), new_st, st)
+            return (st, n_acc + acc.astype(jnp.int32)), (acc, gain)
+
+        (st, _), (mask, gains) = jax.lax.scan(
+            step, (state, jnp.zeros((), jnp.int32)), (eligible, aux))
+        return mask, st, gains
 
     def marginals(self, state, aux):  # pragma: no cover - interface
         raise NotImplementedError
@@ -114,6 +154,14 @@ class FeatureCoverage(SubmodularOracle):
         if self.weights is not None:
             new = new * self.weights[None, :]
         return jnp.sum(new, axis=-1)
+
+    def chunk_accept(self, state, cand_feats, eligible, tau, budget):
+        if self.use_kernel:
+            from repro.kernels import ops
+
+            return ops.coverage_accept(cand_feats, state, self.weights,
+                                       eligible, tau, budget)
+        return super().chunk_accept(state, cand_feats, eligible, tau, budget)
 
     def add(self, state, aux_row):
         return state + aux_row
@@ -167,6 +215,17 @@ class FacilityLocation(SubmodularOracle):
             return ops.facility_marginals(cand_feats, self.reference, state)
         return self.marginals(state, self.prep(state, cand_feats))
 
+    def chunk_accept(self, state, cand_feats, eligible, tau, budget):
+        # The fused engine's hot path: matmul + rectified residual +
+        # the whole accept loop in one kernel, (B, r) similarities and the
+        # cover vector both living in VMEM scratch.
+        if self.use_kernel:
+            from repro.kernels import ops
+
+            return ops.facility_accept(cand_feats, self.reference, state,
+                                       eligible, tau, budget)
+        return super().chunk_accept(state, cand_feats, eligible, tau, budget)
+
     def add(self, state, aux_row):
         return jnp.maximum(state, aux_row)
 
@@ -202,6 +261,14 @@ class WeightedCoverage(SubmodularOracle):
 
             return ops.weighted_coverage_marginals(aux, state)
         return jnp.sum(state[None, :] * aux, axis=-1)
+
+    def chunk_accept(self, state, cand_feats, eligible, tau, budget):
+        if self.use_kernel:
+            from repro.kernels import ops
+
+            return ops.weighted_coverage_accept(cand_feats, state, eligible,
+                                                tau, budget)
+        return super().chunk_accept(state, cand_feats, eligible, tau, budget)
 
     def add(self, state, aux_row):
         return state * (1.0 - aux_row)
@@ -249,6 +316,15 @@ class SaturatedCoverage(SubmodularOracle):
         if self.weights is not None:
             new = new * self.weights[None, :]
         return jnp.sum(new, axis=-1)
+
+    def chunk_accept(self, state, cand_feats, eligible, tau, budget):
+        if self.use_kernel:
+            from repro.kernels import ops
+
+            return ops.saturated_coverage_accept(cand_feats, state,
+                                                 self._cap(), self.weights,
+                                                 eligible, tau, budget)
+        return super().chunk_accept(state, cand_feats, eligible, tau, budget)
 
     def add(self, state, aux_row):
         return state + aux_row
@@ -299,6 +375,16 @@ class GraphCut(SubmodularOracle):
             return ops.graph_cut_marginals(aux, self.total, state, self.lam)
         lin = aux @ (self.total - 2.0 * self.lam * state)
         return lin - self.lam * jnp.sum(aux * aux, axis=-1)
+
+    def chunk_accept(self, state, cand_feats, eligible, tau, budget):
+        # like marginals, the accept kernel bakes lam in at compile time —
+        # a traced (per-query) lam routes through the scan reference
+        if self.use_kernel and isinstance(self.lam, (int, float)):
+            from repro.kernels import ops
+
+            return ops.graph_cut_accept(cand_feats, self.total, state,
+                                        eligible, tau, budget, self.lam)
+        return super().chunk_accept(state, cand_feats, eligible, tau, budget)
 
     def add(self, state, aux_row):
         return state + aux_row
@@ -475,7 +561,12 @@ class TPOracle(SubmodularOracle):
     marginal evaluations' optimization: inside the MapReduce drivers the
     central ThresholdGreedy phase runs replicated across the model axis, so
     without this the model axis is idle — with it, every marginals pass
-    does 1/tp of the elementwise work and one (C,)-sized psum."""
+    does 1/tp of the elementwise work and one (C,)-sized psum.
+
+    chunk_accept is inherited from the generic scan: prep/marginals/add
+    all delegate through the psum'd wrappers, so every shard sees the
+    full (psummed) gain before the accept decision and applies only its
+    local slice of the update — accept sequences stay replicated."""
 
     base: Any = None
     axis: str = "model"

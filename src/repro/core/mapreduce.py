@@ -33,7 +33,8 @@ from repro.core import grids
 from repro.core.functions import bind_query, consumes_query_params
 from repro.core.rounds import RoundLog, buffer_bytes
 from repro.core.threshold import (DEFAULT_CHUNK, exclude_ids, pack_by_mask,
-                                  threshold_filter, threshold_greedy)
+                                  threshold_filter, threshold_greedy,
+                                  validate_engine)
 
 
 class SelectionResult(NamedTuple):
@@ -93,8 +94,21 @@ class MRConfig:
     top_cap: Optional[int] = None         # per machine, Algorithm 7
     n_grid: Optional[int] = None          # unknown-OPT threshold grid size
     accept: str = "first"                 # "first" = Algorithm-1-faithful
-    engine: str = "dense"                 # ThresholdGreedy: "dense" | "lazy"
-    chunk: int = DEFAULT_CHUNK            # lazy-engine rescore chunk
+    engine: str = "dense"                 # ThresholdGreedy engine:
+    #                                       "dense" | "lazy" | "fused"
+    chunk: int = DEFAULT_CHUNK            # lazy/fused-engine chunk size
+
+    def __post_init__(self):
+        # trace-time knob validation with the config as the call site —
+        # a typo'd engine fails here, not deep inside a vmapped driver
+        validate_engine(self.engine, self.accept, where="MRConfig")
+
+    @property
+    def filter_chunk(self) -> Optional[int]:
+        """Tile size for threshold_filter's streaming sweep: the chunked
+        engines bound the filter's transient aux the same way they bound
+        the greedy rescore; the dense engine keeps the one-shot call."""
+        return self.chunk if self.engine in ("lazy", "fused") else None
 
     @property
     def sample_p(self) -> float:
@@ -156,8 +170,10 @@ def _local_sample(oracle, key, feats, ids, valid, p, cap):
 
 
 def _local_filter(oracle, st, sol, feats, ids, valid, tau, cap, size=None,
-                  k=None):
+                  k=None, chunk=None):
     """Algorithm 2 local half: survivors of ThresholdFilter, packed.
+    ``chunk`` (from MRConfig.filter_chunk) tiles the marginal sweep so the
+    filter never materializes a full-block prep aux.
 
     Lemma 2's escape hatch: if the partial greedy solution already has k
     elements, the algorithm is done and the machines send *nothing* to the
@@ -165,7 +181,7 @@ def _local_filter(oracle, st, sol, feats, ids, valid, tau, cap, size=None,
     Without this, low thresholds in the unknown-OPT grid overflow their
     whp-sized survivor buffers."""
     v = exclude_ids(ids, valid, sol)
-    mask = threshold_filter(oracle, st, feats, v, tau)
+    mask = threshold_filter(oracle, st, feats, v, tau, chunk=chunk)
     if size is not None and k is not None:
         mask = mask & (size < k)
     return pack_by_mask(feats, ids, mask, cap)
@@ -234,7 +250,7 @@ def two_round_known_opt_sim(oracle, feats_mk, ids_mk, valid_mk, opt, cfg: MRConf
 
     rf, ri, rv, rdrop = jax.vmap(
         lambda f, i, v: _local_filter(oracle, st, sol, f, i, v, tau, f_cap,
-                                      size, k)
+                                      size, k, cfg.filter_chunk)
     )(feats_mk, ids_mk, valid_mk)
     R = (rf.reshape(m * f_cap, d), ri.reshape(-1), rv.reshape(-1))
     log.add("gather-survivors", buffer_bytes(f_cap, d),
@@ -276,7 +292,8 @@ def dense_two_round_sim(oracle, feats_mk, ids_mk, valid_mk, cfg: MRConfig,
     def local_filter_all(f, i, v):
         return jax.vmap(
             lambda st, sol, size, tau: _local_filter(oracle, st, sol, f, i, v,
-                                                     tau, f_cap, size, k)
+                                                     tau, f_cap, size, k,
+                                                     cfg.filter_chunk)
         )(st_j, sol_j, size_j, taus)
 
     rf, ri, rv, rdrop = jax.vmap(local_filter_all)(feats_mk, ids_mk, valid_mk)
@@ -433,7 +450,8 @@ def two_round_batch_sim(oracle, feats_mk, ids_mk, valid_mk, qb: QueryBatch,
         def local_filter_all(f, i, v):
             return jax.vmap(
                 lambda st, sol, size, tau: _local_filter(
-                    orc, st, sol, f, i, v, tau, f_cap, size, kq)
+                    orc, st, sol, f, i, v, tau, f_cap, size, kq,
+                    cfg.filter_chunk)
             )(st_j, sol_j, size_j, taus)
 
         rf, ri, rv, rdrop = jax.vmap(local_filter_all)(feats_mk, ids_mk,
@@ -518,7 +536,7 @@ def multi_threshold_sim(oracle, feats_mk, ids_mk, valid_mk, opt, t: int,
 
         rf, ri, rv, rdrop = jax.vmap(
             lambda f, i, v: _local_filter(oracle, st, sol, f, i, v, alpha, f_cap,
-                                          size, k)
+                                          size, k, cfg.filter_chunk)
         )(feats_mk, ids_mk, valid_mk)
         R = (rf.reshape(m * f_cap, d), ri.reshape(-1), rv.reshape(-1))
         log.add(f"gather-survivors-l{ell}", buffer_bytes(f_cap, d),
@@ -594,7 +612,8 @@ def two_round_known_opt_mesh(oracle, cfg: MRConfig, mesh: Mesh,
         st, sol, size = _greedy(oracle, st, sol, size, *S, tau, k, cfg)
 
         rf, ri, rv, rdrop = _local_filter(oracle, st, sol, feats, ids, valid,
-                                          tau, f_cap, size, k)
+                                          tau, f_cap, size, k,
+                                          cfg.filter_chunk)
         R = (jax.lax.all_gather(rf, gather_axes, tiled=True),
              jax.lax.all_gather(ri, gather_axes, tiled=True),
              jax.lax.all_gather(rv, gather_axes, tiled=True))
@@ -670,7 +689,8 @@ def two_round_mesh(oracle, cfg: MRConfig, mesh: Mesh,
         # ---- round 2: per-tau survivors of the local shard ---------------
         rf, ri, rv, rdrop = jax.vmap(
             lambda st, sol, size, tau: _local_filter(
-                oracle, st, sol, feats, ids, valid, tau, f_cap, size, k)
+                oracle, st, sol, feats, ids, valid, tau, f_cap, size, k,
+                cfg.filter_chunk)
         )(st_j, sol_j, size_j, taus)
         Rf = _gather_packed(rf, gather_axes, lead=1)
         Ri = _gather_packed(ri, gather_axes, lead=1)
@@ -812,7 +832,8 @@ def two_round_batch_mesh(oracle, cfg: MRConfig, mesh: Mesh,
             st_j, sol_j, size_j = jax.vmap(p1)(taus)
             rf, ri, rv, rdrop = jax.vmap(
                 lambda st, sol, size, tau: _local_filter(
-                    orc, st, sol, feats, ids, valid, tau, f_cap, size, kq)
+                    orc, st, sol, feats, ids, valid, tau, f_cap, size, kq,
+                    cfg.filter_chunk)
             )(st_j, sol_j, size_j, taus)
             return taus, fb_d, st_j, sol_j, size_j, rf, ri, rv, \
                 jnp.sum(rdrop)
@@ -911,7 +932,8 @@ def multi_threshold_mesh(oracle, cfg: MRConfig, t: int, mesh: Mesh,
                       for x in (sf, si, sv))
             st, sol, size = _greedy(oracle, st, sol, size, *S, alpha, k, cfg)
             rf, ri, rv, rdrop = _local_filter(oracle, st, sol, feats, ids,
-                                              valid, alpha, f_cap, size, k)
+                                              valid, alpha, f_cap, size, k,
+                                              cfg.filter_chunk)
             R = tuple(jax.lax.all_gather(x, gather_axes, tiled=True)
                       for x in (rf, ri, rv))
             st, sol, size = _greedy(oracle, st, sol, size, *R, alpha, k, cfg)

@@ -26,8 +26,9 @@ class SelectorSpec:
     t: int = 1                         # thresholds for multi_threshold
     eps: float = 0.15
     accept: str = "first"
-    engine: str = "dense"              # ThresholdGreedy: "dense" | "lazy"
-    chunk: int = 128                   # lazy-engine rescore chunk size
+    engine: str = "dense"              # ThresholdGreedy engine:
+    #                                    "dense" | "lazy" | "fused"
+    chunk: int = 128                   # lazy/fused-engine chunk size
     reference_size: int = 256          # facility location / exemplar clients
     use_kernel: bool = False
     graph_cut_lam: float = 0.5         # GraphCut redundancy penalty, <= 1/2

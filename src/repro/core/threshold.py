@@ -18,7 +18,7 @@ Paper-faithful semantics with TPU-shaped execution:
   Either rule preserves the two facts the proofs use: every accepted marginal
   is >= tau, and on exit (with |G| < k) no candidate has marginal >= tau.
 
-* Two interchangeable engines (DESIGN.md §3):
+* Three interchangeable engines (DESIGN.md §3):
 
     - ``engine="dense"``: every iteration rescores the *whole* candidate
       block with one batched ``marginals`` call — O(|G| * C) oracle rows.
@@ -32,10 +32,21 @@ Paper-faithful semantics with TPU-shaped execution:
       full prep aux — candidates stream through ``oracle.chunk_marginals``
       in (chunk, d) tiles (FacilityLocation routes them through the fused
       Pallas kernel, so the (C, r) similarity block never exists in HBM).
+    - ``engine="fused"`` (accept="first" only): the whole accept loop moves
+      on-device — each iteration hands one contiguous ``chunk`` at the scan
+      frontier to ``oracle.chunk_accept``, which sweeps its rows *inside
+      one kernel* (state in VMEM scratch for the kerneled oracles, a
+      lax.scan reference otherwise), accepting every qualifying row in
+      stream order.  The outer while_loop advances one CHUNK per trip
+      instead of one accept: the per-accept kernel launch, the tree-wide
+      jnp.where over the oracle state, and the O(C) frontier scan are all
+      paid once per chunk.  Accepted sequences are bit-identical to the
+      dense engine's (the sweep is exactly Algorithm 1's sequential loop).
 
 * Everything is fixed-shape: candidate blocks carry a validity mask, the
-  solution is a fixed (k,) id buffer with a size counter.  Both engines are
-  a ``lax.while_loop`` bounded by k accepts.
+  solution is a fixed (k,) id buffer with a size counter.  Every engine is
+  a ``lax.while_loop`` bounded by k accepts (the fused engine additionally
+  by the chunk count).
 
 All functions are pure and jit/shard_map friendly; determinism across
 machines (the paper needs G_0 identical everywhere) is inherited from
@@ -53,6 +64,31 @@ import jax.numpy as jnp
 NEG = -jnp.inf
 
 DEFAULT_CHUNK = 128
+
+ENGINES = ("dense", "lazy", "fused")
+ACCEPTS = ("first", "best")
+
+
+def validate_engine(engine: str, accept: str = "first",
+                    where: str = "threshold_greedy") -> None:
+    """Shared trace-time validation of the (engine, accept) knobs.
+
+    Every consumer — threshold_greedy, threshold_greedy_batch, MRConfig,
+    the streaming SieveSpec — funnels through here, so a typo'd knob fails
+    immediately with the call-site name instead of surfacing as a
+    mysterious shape/tracer error deep inside a vmapped driver (or, worse,
+    only on the one code path that happened to dispatch on it)."""
+    if engine not in ENGINES:
+        raise ValueError(f"{where}: unknown engine {engine!r}; "
+                         f"choose from {ENGINES}")
+    if accept not in ACCEPTS:
+        raise ValueError(f"{where}: unknown accept {accept!r}; "
+                         f"choose from {ACCEPTS}")
+    if engine == "fused" and accept != "first":
+        raise ValueError(
+            f"{where}: engine='fused' sweeps chunks in stream order — a "
+            f"forward pass — so it only implements accept='first' "
+            f"(Algorithm-1-faithful); use engine='lazy' for accept='best'")
 
 
 class GreedyStats(NamedTuple):
@@ -112,20 +148,20 @@ def threshold_greedy(oracle, oracle_state, sol_ids, sol_size, cand_feats,
     cand_feats: (C, feat_dim); cand_ids: (C,) int32; cand_valid: (C,) bool.
     engine: "dense" rescores all C candidates per iteration; "lazy" keeps
     stale upper bounds and rescores `chunk`-sized slices on demand (same
-    accepted sequence for accept="first"; same invariants for both accepts).
-    ``k`` is the static solution-buffer capacity; ``k_dyn`` (optional, a
-    traced () int32 <= k) is the effective cardinality budget — the batched
-    multi-query path carries per-query budgets through one fixed-shape
-    program this way.
+    accepted sequence for accept="first"; same invariants for both accepts);
+    "fused" runs the accept loop itself inside ``oracle.chunk_accept`` and
+    advances one chunk per iteration (accept="first" only; same accepted
+    sequence).  ``k`` is the static solution-buffer capacity; ``k_dyn``
+    (optional, a traced () int32 <= k) is the effective cardinality budget
+    — the batched multi-query path carries per-query budgets through one
+    fixed-shape program this way.
     Returns (oracle_state, sol_ids, sol_size), plus a GreedyStats when
     ``with_stats``.
     """
-    if engine == "lazy":
-        fn = _threshold_greedy_lazy
-    elif engine == "dense":
-        fn = _threshold_greedy_dense
-    else:
-        raise ValueError(f"unknown engine {engine!r}")
+    validate_engine(engine, accept, where="threshold_greedy")
+    fn = {"dense": _threshold_greedy_dense,
+          "lazy": _threshold_greedy_lazy,
+          "fused": _threshold_greedy_fused}[engine]
     k_eff = k if k_dyn is None else jnp.minimum(
         jnp.asarray(k_dyn, jnp.int32), k)
     out_state, out_sol, out_size, stats = fn(
@@ -157,6 +193,7 @@ def threshold_greedy_batch(oracle, oracle_states, sol_ids, sol_sizes,
     query's slice (see functions.bind_query).
     Returns (oracle_states, sol_ids, sol_sizes[, GreedyStats]) batched on Q.
     """
+    validate_engine(engine, accept, where="threshold_greedy_batch")
     Q = taus.shape[0]
     if k_dyn is None:
         k_dyn = jnp.full((Q,), k, jnp.int32)
@@ -323,11 +360,102 @@ def _threshold_greedy_lazy(oracle, oracle_state, sol_ids, sol_size,
             GreedyStats(out.n_evals, out.n_iters))
 
 
-def threshold_filter(oracle, oracle_state, cand_feats, cand_valid, tau):
-    """Algorithm 2.  One batched oracle call: keep candidates whose marginal
-    w.r.t. the current solution is >= tau.  Returns the survivor mask."""
-    aux = oracle.prep(oracle_state, cand_feats)
-    gains = oracle.marginals(oracle_state, aux)
+def _threshold_greedy_fused(oracle, oracle_state, sol_ids, sol_size,
+                            cand_feats, cand_ids, cand_valid, tau, k, k_eff,
+                            accept, chunk):
+    """Fused engine: the accept loop runs inside ``oracle.chunk_accept``.
+
+    Same stale-gains invariant and scan frontier as the lazy engine
+    (accept="first" is a single forward pass), but each while_loop trip
+    hands the whole contiguous chunk at the frontier to the oracle's
+    chunk_accept sweep, which accepts EVERY qualifying row in stream order
+    against the live state — state updates happen in the kernel's VMEM
+    scratch (or a lax.scan carry for the reference path), not as one
+    tree-wide jnp.where over HBM per accept.  The loop advances one chunk
+    per trip instead of one accept, so n_iters drops from ~|G| to
+    ~(span of the accept region)/chunk.
+
+    The emitted per-row gains are fresh marginals at scan time — valid
+    stale upper bounds forever (submodularity), so the frontier logic is
+    unchanged: after a sweep every non-accepted chunk row is provably cold
+    (its recorded gain < tau), except rows cut off by the budget, which
+    the exit condition (sol_size == k_eff) retires anyway.
+
+    Bit-identity with dense (accept="first"): dense accepts are strictly
+    increasing in stream index at fixed tau (a row once seen below tau can
+    never re-qualify), and the sweep IS that sequential loop restricted to
+    the chunk, so both engines accept the same sequence.
+    """
+    C = cand_feats.shape[0]
+    B = max(1, min(chunk, C))
+    arange_b = jnp.arange(B, dtype=jnp.int32)
+
+    def body(st: LazyState) -> LazyState:
+        eligible = cand_valid & ~st.taken
+        hot = eligible & (st.g_stale >= tau)
+        # contiguous chunk at the scan frontier; the dynamic_slice clamp
+        # near the right edge only re-reads rows already proven cold or
+        # taken (ineligible), which the sweep can never re-accept
+        c = jnp.argmax(hot).astype(jnp.int32)
+        feats_chunk = jax.lax.dynamic_slice_in_dim(cand_feats, c, B)
+        base = jnp.minimum(c, C - B)
+        idxs = base + arange_b
+        budget = k_eff - st.sol_size
+        mask, oracle_state, g_chunk = oracle.chunk_accept(
+            st.oracle_state, feats_chunk, eligible[idxs], tau, budget)
+        mask = mask.astype(bool)
+        g_stale = jax.lax.dynamic_update_slice_in_dim(st.g_stale, g_chunk,
+                                                      c, axis=0)
+        # in-order append of every accepted row; slot k = out-of-bounds
+        # sentinel dropped by the scatter (budget keeps real slots < k)
+        m32 = mask.astype(jnp.int32)
+        slots = jnp.where(mask, st.sol_size + jnp.cumsum(m32) - 1, k)
+        sol_ids = st.sol_ids.at[slots].set(cand_ids[idxs], mode="drop")
+        sol_size = st.sol_size + jnp.sum(m32)
+        taken = st.taken.at[idxs].set(st.taken[idxs] | mask)
+
+        hot_left = cand_valid & ~taken & (g_stale >= tau)
+        return LazyState(oracle_state, sol_ids, sol_size, g_stale, taken,
+                         done=~jnp.any(hot_left), n_evals=st.n_evals + B,
+                         n_iters=st.n_iters + 1)
+
+    def cond(st: LazyState):
+        return (~st.done) & (st.sol_size < k_eff)
+
+    init = LazyState(oracle_state, sol_ids, sol_size,
+                     g_stale=jnp.full((C,), jnp.inf, jnp.float32),
+                     taken=jnp.zeros((C,), bool),
+                     done=~jnp.any(cand_valid),
+                     n_evals=jnp.zeros((), jnp.int32),
+                     n_iters=jnp.zeros((), jnp.int32))
+    out = jax.lax.while_loop(cond, body, init)
+    return (out.oracle_state, out.sol_ids, out.sol_size,
+            GreedyStats(out.n_evals, out.n_iters))
+
+
+def threshold_filter(oracle, oracle_state, cand_feats, cand_valid, tau,
+                     chunk=None):
+    """Algorithm 2: keep candidates whose marginal w.r.t. the current
+    solution is >= tau.  Returns the survivor mask.
+
+    Marginals route through ``oracle.chunk_marginals`` rather than
+    prep+marginals, so a kerneled oracle never materializes the full prep
+    aux in HBM (for facility location that aux is the (C, r) similarity
+    block — the fused kernel streams it through VMEM tiles instead).
+    ``chunk`` optionally bounds the non-kernel path's transient aux too:
+    candidates are swept in (chunk, d) tiles via lax.map, exactly like the
+    lazy engine's streaming rescore (row-wise identical gains)."""
+    if chunk is None:
+        gains = oracle.chunk_marginals(oracle_state, cand_feats)
+    else:
+        C, d = cand_feats.shape
+        B = max(1, min(chunk, C))
+        T = -(-C // B)
+        pad = T * B - C
+        tiles = jnp.pad(cand_feats, ((0, pad), (0, 0))).reshape(T, B, d)
+        gains = jax.lax.map(
+            lambda t: oracle.chunk_marginals(oracle_state, t),
+            tiles).reshape(-1)[:C]
     return cand_valid & (gains >= tau)
 
 
@@ -347,17 +475,26 @@ def pack_by_mask(feats, ids, mask, cap: int, priority=None):
     report the overflow count so the paper's whp bounds become runtime checks.
 
     Returns (feats (cap, d), ids (cap,), valid (cap,), n_dropped ()).
+
+    Selection is a single ``lax.top_k`` on a composite descending key —
+    O(n log cap)-ish work instead of the O(n log n) full argsort/lexsort
+    this used to run, and top_k's tie rule (equal keys -> lower index
+    first) is exactly the stream-order tie-break the MRC messages need.
+    Masked rows must sort strictly after every valid row: keying them
+    -inf alone would let a valid row whose priority is itself -inf tie
+    with (and, earlier in the stream, lose to) a masked row — so valid
+    ±inf priorities are clamped to the finite float32 extremes, keeping
+    them above every masked key while preserving their order.
     """
     n = ids.shape[0]
     if priority is None:
-        key = jnp.where(mask, jnp.arange(n, dtype=jnp.float32), jnp.inf)
-        take = jnp.argsort(key)[:cap]
+        # stream order: descending key = -index, masked rows last
+        key = jnp.where(mask, -jnp.arange(n, dtype=jnp.float32), -jnp.inf)
     else:
-        # Masked rows must sort strictly after every valid row — keying them
-        # -inf alone lets a valid row whose priority is itself -inf tie with
-        # (and lose to, under the stable argsort) a masked row.  Primary key:
-        # validity; secondary: descending priority among the valid.
-        take = jnp.lexsort((jnp.where(mask, -priority, 0.0), ~mask))[:cap]
+        fmax = jnp.finfo(jnp.float32).max
+        p = jnp.clip(priority.astype(jnp.float32), -fmax, fmax)
+        key = jnp.where(mask, p, -jnp.inf)
+    _, take = jax.lax.top_k(key, min(cap, n))
     valid_sorted = mask[take]
     count = jnp.sum(mask)
     n_dropped = jnp.maximum(count - cap, 0)

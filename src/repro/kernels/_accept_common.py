@@ -1,0 +1,147 @@
+"""Shared row-sweep skeleton for the fused chunk-accept kernels.
+
+A chunk-accept kernel runs the ThresholdGreedy inner loop *inside* one
+``pallas_call``: it sweeps a (B, d) candidate tile row by row, computing
+each row's marginal against the live oracle state held in VMEM scratch,
+accepting the row (state update in scratch, no HBM round-trip) whenever
+the gain clears tau and budget remains, and emitting
+
+    mask  (B,) int32  — 1 where the row was accepted, in stream order
+    state (1, dp) f32 — the post-sweep oracle state
+    gains (B,) f32    — each row's fresh marginal *at the moment it was
+                        scanned* (a valid stale upper bound forever, by
+                        submodularity — the engine feeds these straight
+                        into its stale-gains buffer)
+
+This is exactly the paper's Algorithm-1 accept loop restricted to the
+tile, so the accepted sequence is bit-identical to what the dense engine
+produces one full-block rescore at a time (accept="first").
+
+The sweep is shared; each oracle kernel supplies two callbacks working on
+(1, dp)-shaped f32 VMEM blocks:
+
+    row_fn(i)        -> the i-th candidate row (features, or a
+                        precomputed similarity row held in scratch)
+    step_fn(st, row) -> (gain (), new_state (1, dp))
+
+Eligibility is consumed as a full (B,) vector and selected per row with a
+masked reduce (no dynamic scalar loads); tau/budget arrive as (1, 1)
+blocks (SMEM-shaped scalars).  Per-row outputs are kept in loop-carried
+vectors and written once at the end — no dynamic vector stores.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._tiling import ceil_to as _ceil_to
+from repro.kernels._tiling import pad_axis as _pad_axis
+
+
+def run_sweep(nrows: int, elig_ref, tau_ref, budget_ref, mask_ref,
+              state_out_ref, gains_ref, st_scratch, row_fn, step_fn):
+    """The sequential accept sweep.  ``st_scratch`` must already hold the
+    incoming oracle state; on return it (and ``state_out_ref``) hold the
+    post-sweep state."""
+    B = nrows
+    tau = tau_ref[0, 0]
+    budget = budget_ref[0, 0]
+    elig = elig_ref[...]                                   # (B,) int32
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (B, 1), 0)[:, 0]
+
+    def body(i, carry):
+        n_acc, mask, gains = carry
+        row = row_fn(i)                                    # (1, dp)
+        st = st_scratch[...]
+        gain, new_st = step_fn(st, row)
+        here = row_iota == i
+        ok = jnp.sum(jnp.where(here, elig, 0)) > 0         # elig[i], masked
+        acc = ok & (gain >= tau) & (n_acc < budget)
+
+        @pl.when(acc)
+        def _accept():
+            st_scratch[...] = new_st
+
+        mask = jnp.where(here, acc.astype(jnp.int32), mask)
+        gains = jnp.where(here, gain, gains)
+        return n_acc + acc.astype(jnp.int32), mask, gains
+
+    init = (jnp.zeros((), jnp.int32),
+            jnp.zeros((B,), jnp.int32),
+            jnp.zeros((B,), jnp.float32))
+    _, mask, gains = jax.lax.fori_loop(0, B, body, init)
+    mask_ref[...] = mask
+    gains_ref[...] = gains
+    state_out_ref[...] = st_scratch[...]
+
+
+def accept_call(step_from, x, state, extras, eligible, tau, budget, *,
+                interpret: bool):
+    """Shared ``pallas_call`` plumbing for the elementwise-state accept
+    kernels (state and every extra operand are (d,)-broadcast rows, all
+    zero-padded — each oracle's gain/update contributes exactly 0 on
+    zero-padded feature columns; facility location, whose state pads with
+    +inf, rolls its own call in kernels/facility_accept.py).
+
+    ``extras`` are (d,) operands (weights / caps / totals);
+    ``step_from(*extra_refs)`` builds the ``step_fn(st, x)`` callback for
+    :func:`run_sweep`.
+
+    Returns ``(mask (B,) bool, state (d,) f32, gains (B,) f32)``.
+    """
+    B, d = x.shape
+    Bp, dp = _ceil_to(B, 8), _ceil_to(d, 128)
+    n_extras = len(extras)
+
+    x_p = _pad_axis(_pad_axis(x, 0, Bp), 1, dp)
+    state_p = _pad_axis(state.astype(jnp.float32), 0, dp)[None, :]
+    extras_p = [_pad_axis(e.astype(jnp.float32), 0, dp)[None, :]
+                for e in extras]
+    elig_p = _pad_axis(eligible.astype(jnp.int32), 0, Bp)
+    tau_b = jnp.asarray(tau, jnp.float32).reshape(1, 1)
+    budget_b = jnp.asarray(budget, jnp.int32).reshape(1, 1)
+
+    def kernel(*refs):
+        x_ref, state_ref = refs[0], refs[1]
+        extra_refs = refs[2:2 + n_extras]
+        elig_ref, tau_ref, budget_ref = refs[2 + n_extras:5 + n_extras]
+        mask_ref, state_out_ref, gains_ref, st_scratch = refs[5 + n_extras:]
+        st_scratch[...] = state_ref[...]
+
+        def row(i):
+            return x_ref[i, :].astype(jnp.float32)[None, :]
+
+        run_sweep(Bp, elig_ref, tau_ref, budget_ref, mask_ref,
+                  state_out_ref, gains_ref, st_scratch, row,
+                  step_from(*extra_refs))
+
+    mask, state_out, gains = pl.pallas_call(
+        kernel,
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((Bp, dp), lambda i: (0, 0)),
+            pl.BlockSpec((1, dp), lambda i: (0, 0)),
+            *[pl.BlockSpec((1, dp), lambda i: (0, 0))] * n_extras,
+            pl.BlockSpec((Bp,), lambda i: (0,)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((Bp,), lambda i: (0,)),
+            pl.BlockSpec((1, dp), lambda i: (0, 0)),
+            pl.BlockSpec((Bp,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp,), jnp.int32),
+            jax.ShapeDtypeStruct((1, dp), jnp.float32),
+            jax.ShapeDtypeStruct((Bp,), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, dp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x_p, state_p, *extras_p, elig_p, tau_b, budget_b)
+    return mask[:B] != 0, state_out[0, :d], gains[:B]

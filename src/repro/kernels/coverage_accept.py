@@ -1,0 +1,46 @@
+"""Pallas TPU kernel: fused FeatureCoverage chunk-accept sweep.
+
+Runs the ThresholdGreedy inner loop over a (B, d) candidate tile inside
+ONE kernel: row i's marginal
+
+    gain_i = sum_f w_f * ( sqrt(st_f + x_{i,f}) - sqrt(st_f) )
+
+is computed against the live accumulator ``st`` held in VMEM scratch; an
+accepted row applies the O(d) elementwise update ``st += x_i`` in scratch
+and the sweep continues — the dense engine's one-kernel-launch-per-accept
+(plus a tree-wide jnp.where over the state in HBM) collapses into a
+single launch per *chunk*.  Outputs: accepted-row mask, post-sweep state,
+and each row's fresh gain at scan time (stale upper bounds for the lazy
+buffer) — see kernels/_accept_common.py for the shared sweep.
+
+Padding: x/state pad with 0 (padded features contribute sqrt(0+0) -
+sqrt(0) = 0 and stay 0 under the additive update); eligibility pads with
+0 so padded rows never accept.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels._accept_common import accept_call
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def coverage_accept(x, state, weights, eligible, tau, budget, *,
+                    interpret: bool = False):
+    """(B, d), (d,)[, (d,)], (B,) bool, (), () -> (mask (B,) bool,
+    state (d,) f32, gains (B,) f32) — the FeatureCoverage accept sweep."""
+    d = x.shape[1]
+    w = weights if weights is not None else jnp.ones((d,), jnp.float32)
+
+    def step_from(w_ref):
+        def step(st, x_row):
+            gain = jnp.sum((jnp.sqrt(st + x_row) - jnp.sqrt(st)) * w_ref[...])
+            return gain, st + x_row
+        return step
+
+    return accept_call(step_from, x, state, [w], eligible, tau, budget,
+                       interpret=interpret)

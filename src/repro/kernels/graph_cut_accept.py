@@ -1,0 +1,42 @@
+"""Pallas TPU kernel: fused GraphCut chunk-accept sweep.
+
+ThresholdGreedy's inner loop over a (B, d) tile in one kernel: row i's
+marginal against the live selected-sum ``s`` (VMEM scratch) is
+
+    gain_i = sum_f x_{i,f} * (total_f - 2*lam*s_f) - lam * x_{i,f}^2
+
+(GraphCut's  <x, t> - lam*(2<x, s> + ||x||^2)  in O(d)); an accepted row
+applies the elementwise update ``s += x_i`` in scratch.  ``lam`` is baked
+in at compile time like the marginals kernel — a traced lam routes
+through the jnp scan fallback (functions.GraphCut.chunk_accept).  See
+kernels/_accept_common.py for the shared sweep and output contract.
+
+Padding: x/total/state pad with 0, contributing exactly 0 to both terms.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels._accept_common import accept_call
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("lam", "interpret"))
+def graph_cut_accept(x, total, state, eligible, tau, budget,
+                     lam: float = 0.5, *, interpret: bool = False):
+    """(B, d), (d,), (d,), (B,) bool, (), () -> (mask (B,) bool,
+    state (d,) f32, gains (B,) f32) — the GraphCut accept sweep."""
+
+    def step_from(total_ref):
+        def step(st, x_row):
+            coef = total_ref[...] - 2.0 * lam * st
+            gain = jnp.sum(x_row * coef - lam * x_row * x_row)
+            return gain, st + x_row
+        return step
+
+    return accept_call(step_from, x, state, [total], eligible, tau, budget,
+                       interpret=interpret)

@@ -10,12 +10,17 @@ from __future__ import annotations
 
 import jax
 
+from repro.kernels import coverage_accept as _ca
 from repro.kernels import coverage_marginals as _cm
 from repro.kernels import exemplar_marginals as _em
+from repro.kernels import facility_accept as _fa
 from repro.kernels import facility_marginals as _fm
+from repro.kernels import graph_cut_accept as _ga
 from repro.kernels import graph_cut_marginals as _gc
 from repro.kernels import logdet_marginals as _ld
+from repro.kernels import saturated_coverage_accept as _sa
 from repro.kernels import saturated_coverage_marginals as _sc
+from repro.kernels import weighted_coverage_accept as _wa
 from repro.kernels import weighted_coverage_marginals as _wc
 
 
@@ -97,6 +102,42 @@ def logdet_marginals(x, U, alpha=1.0, *, block_c=None):
     if block_c:
         kw["block_c"] = block_c
     return _ld.logdet_marginals(x, U, alpha, interpret=_interpret(), **kw)
+
+
+def coverage_accept(x, state, weights, eligible, tau, budget):
+    """Fused FeatureCoverage chunk-accept sweep: one kernel runs the
+    ThresholdGreedy inner loop over the (B, d) tile.  Returns
+    (mask (B,) bool, state (d,), gains (B,))."""
+    return _ca.coverage_accept(x, state, weights, eligible, tau, budget,
+                               interpret=_interpret())
+
+
+def weighted_coverage_accept(x, state, eligible, tau, budget):
+    """Fused WeightedCoverage chunk-accept sweep."""
+    return _wa.weighted_coverage_accept(x, state, eligible, tau, budget,
+                                        interpret=_interpret())
+
+
+def saturated_coverage_accept(x, state, cap, weights, eligible, tau,
+                              budget):
+    """Fused SaturatedCoverage chunk-accept sweep."""
+    return _sa.saturated_coverage_accept(x, state, cap, weights, eligible,
+                                         tau, budget,
+                                         interpret=_interpret())
+
+
+def graph_cut_accept(x, total, state, eligible, tau, budget, lam=0.5):
+    """Fused GraphCut chunk-accept sweep (lam baked at compile time)."""
+    return _ga.graph_cut_accept(x, total, state, eligible, tau, budget,
+                                lam, interpret=_interpret())
+
+
+def facility_accept(cand, ref, state, eligible, tau, budget):
+    """Fused facility-location chunk-accept sweep: matmul + rectified
+    residual + accept loop in one kernel; the (B, r) similarity block
+    never leaves VMEM."""
+    return _fa.facility_accept(cand, ref, state, eligible, tau, budget,
+                               interpret=_interpret())
 
 
 def exemplar_marginals(cand, ref, state, *, block_c=None, block_r=None):

@@ -6,6 +6,7 @@ These are the semantics; the kernels must match them to float tolerance
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 
@@ -112,6 +113,80 @@ def logdet_marginals(x, U, alpha=1.0, eps=1e-12):
     resid = 1.0 + alpha * jnp.sum(x * x, axis=-1) \
         - (alpha * alpha) * jnp.sum(proj * proj, axis=-1)
     return jnp.log(jnp.maximum(resid, eps)).astype(jnp.float32)
+
+
+def _accept_scan(gain_fn, upd_fn, rows, state, eligible, tau, budget):
+    """Sequential accept sweep (the chunk-accept semantics, as a scan).
+
+    Walks ``rows`` in stream order: row i's gain is computed against the
+    state *after* every earlier accepted row's update, it is accepted when
+    eligible & gain >= tau & accepts-so-far < budget, and accepted rows
+    update the state.  Returns (mask (B,) bool, state, gains (B,) f32) —
+    exactly what the fused Pallas accept kernels must reproduce.
+    """
+    def step(carry, xs):
+        st, n_acc = carry
+        ok, x = xs
+        g = gain_fn(st, x)
+        acc = ok & (g >= tau) & (n_acc < budget)
+        st = jnp.where(acc, upd_fn(st, x), st)
+        return (st, n_acc + acc.astype(jnp.int32)), (acc, g)
+
+    (st, _), (mask, gains) = jax.lax.scan(
+        step, (state.astype(jnp.float32), jnp.zeros((), jnp.int32)),
+        (eligible, rows))
+    return mask, st, gains.astype(jnp.float32)
+
+
+def coverage_accept(x, state, weights, eligible, tau, budget):
+    """Reference FeatureCoverage accept sweep (see coverage_marginals)."""
+    w = (weights if weights is not None
+         else jnp.ones((x.shape[1],), jnp.float32))
+    return _accept_scan(
+        lambda st, xr: jnp.sum((jnp.sqrt(st + xr) - jnp.sqrt(st)) * w),
+        lambda st, xr: st + xr,
+        x.astype(jnp.float32), state, eligible, tau, budget)
+
+
+def weighted_coverage_accept(x, state, eligible, tau, budget):
+    """Reference WeightedCoverage accept sweep."""
+    return _accept_scan(
+        lambda st, xr: jnp.sum(st * xr),
+        lambda st, xr: st * (1.0 - xr),
+        x.astype(jnp.float32), state, eligible, tau, budget)
+
+
+def saturated_coverage_accept(x, state, cap, weights, eligible, tau, budget):
+    """Reference SaturatedCoverage accept sweep."""
+    w = (weights if weights is not None
+         else jnp.ones((x.shape[1],), jnp.float32))
+    cap = cap.astype(jnp.float32)
+    return _accept_scan(
+        lambda st, xr: jnp.sum(
+            (jnp.minimum(st + xr, cap) - jnp.minimum(st, cap)) * w),
+        lambda st, xr: st + xr,
+        x.astype(jnp.float32), state, eligible, tau, budget)
+
+
+def graph_cut_accept(x, total, state, eligible, tau, budget, lam=0.5):
+    """Reference GraphCut accept sweep."""
+    total = total.astype(jnp.float32)
+    return _accept_scan(
+        lambda st, xr: jnp.sum(xr * (total - 2.0 * lam * st)
+                               - lam * xr * xr),
+        lambda st, xr: st + xr,
+        x.astype(jnp.float32), state, eligible, tau, budget)
+
+
+def facility_accept(cand, ref, state, eligible, tau, budget):
+    """Reference facility-location accept sweep: rectified similarity rows
+    against the running cover vector (see facility_marginals)."""
+    sims = jnp.maximum(
+        cand.astype(jnp.float32) @ ref.astype(jnp.float32).T, 0.0)
+    return _accept_scan(
+        lambda st, sr: jnp.sum(jnp.maximum(sr - st, 0.0)),
+        lambda st, sr: jnp.maximum(st, sr),
+        sims, state, eligible, tau, budget)
 
 
 def exemplar_marginals(cand, ref, state):

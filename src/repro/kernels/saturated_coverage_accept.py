@@ -1,0 +1,43 @@
+"""Pallas TPU kernel: fused SaturatedCoverage chunk-accept sweep.
+
+ThresholdGreedy's inner loop over a (B, d) tile in one kernel: row i's
+marginal against the live accumulator ``st`` (VMEM scratch) is
+
+    gain_i = sum_f w_f * ( min(st_f + x_{i,f}, cap_f) - min(st_f, cap_f) )
+
+with cap = alpha * total the per-feature saturation level; an accepted
+row applies the O(d) elementwise update ``st += x_i`` in scratch.  See
+kernels/_accept_common.py for the shared sweep and output contract.
+
+Padding: x/state/cap/weights pad with 0 — min(0 + 0, 0) - min(0, 0) = 0,
+so padded features contribute exactly 0.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels._accept_common import accept_call
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def saturated_coverage_accept(x, state, cap, weights, eligible, tau,
+                              budget, *, interpret: bool = False):
+    """(B, d), (d,), (d,)[, (d,)], (B,) bool, (), () -> (mask (B,) bool,
+    state (d,) f32, gains (B,) f32) — the SaturatedCoverage accept sweep."""
+    d = x.shape[1]
+    w = weights if weights is not None else jnp.ones((d,), jnp.float32)
+
+    def step_from(cap_ref, w_ref):
+        def step(st, x_row):
+            cap_row = cap_ref[...]
+            new = jnp.minimum(st + x_row, cap_row) - jnp.minimum(st, cap_row)
+            gain = jnp.sum(new * w_ref[...])
+            return gain, st + x_row
+        return step
+
+    return accept_call(step_from, x, state, [cap, w], eligible, tau, budget,
+                       interpret=interpret)

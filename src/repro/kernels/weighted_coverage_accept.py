@@ -1,0 +1,40 @@
+"""Pallas TPU kernel: fused WeightedCoverage chunk-accept sweep.
+
+ThresholdGreedy's inner loop over a (B, U) incidence tile in one kernel:
+row i's marginal against the live remaining-weight vector ``st`` (VMEM
+scratch) is
+
+    gain_i = sum_u st_u * x_{i,u}
+
+and an accepted row applies the O(U) elementwise update
+``st *= (1 - x_i)`` in scratch.  See kernels/_accept_common.py for the
+shared sweep and output contract (mask, post-sweep state, fresh gains).
+
+Padding: x/state pad with 0 — padded universe items contribute 0 weight
+and 0 * (1 - 0) keeps them inert.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels._accept_common import accept_call
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def weighted_coverage_accept(x, state, eligible, tau, budget, *,
+                             interpret: bool = False):
+    """(B, U), (U,), (B,) bool, (), () -> (mask (B,) bool, state (U,) f32,
+    gains (B,) f32) — the WeightedCoverage accept sweep."""
+
+    def step_from():
+        def step(st, x_row):
+            gain = jnp.sum(st * x_row)
+            return gain, st * (1.0 - x_row)
+        return step
+
+    return accept_call(step_from, x, state, [], eligible, tau, budget,
+                       interpret=interpret)

@@ -31,6 +31,14 @@ def main() -> None:
                              "graph_cut", "log_det", "exemplar"])
     ap.add_argument("--algorithm", default="two_round",
                     choices=["two_round", "multi_threshold"])
+    ap.add_argument("--engine", default="dense",
+                    choices=["dense", "lazy", "fused"],
+                    help="ThresholdGreedy engine for the central phases")
+    ap.add_argument("--chunk", type=int, default=128,
+                    help="lazy/fused-engine chunk size")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="route oracle marginals/accepts through the "
+                         "Pallas kernels (interpret mode off-TPU)")
     ap.add_argument("--t", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -47,7 +55,9 @@ def main() -> None:
         if args.oracle in ("graph_cut", "saturated_coverage") else None
 
     spec = SelectorSpec(k=args.k, oracle=args.oracle,
-                        algorithm=args.algorithm, t=args.t)
+                        algorithm=args.algorithm, t=args.t,
+                        engine=args.engine, chunk=args.chunk,
+                        use_kernel=args.use_kernel)
     sel = DistributedSelector(spec, mesh, n_total=args.n, feat_dim=args.d,
                               reference=reference, total=total)
     with mesh:

@@ -187,7 +187,8 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--oracle", default="feature_coverage",
                     choices=list(ORACLE_NAMES))
-    ap.add_argument("--engine", default="dense", choices=["dense", "lazy"])
+    ap.add_argument("--engine", default="dense",
+                    choices=["dense", "lazy", "fused"])
     ap.add_argument("--ingest-docs", type=int, default=0,
                     help="admit this many new docs between serve steps "
                          "(0 = static corpus)")

@@ -51,7 +51,7 @@ from repro.core import grids
 from repro.core.mapreduce import SelectionResult
 from repro.core.sequential import greedy
 from repro.core.threshold import (DEFAULT_CHUNK, exclude_ids,
-                                  threshold_greedy)
+                                  threshold_greedy, validate_engine)
 
 EXP_UNSEEDED = -(2 ** 30)   # exponent sentinel: lane never assigned
 
@@ -64,8 +64,16 @@ class SieveSpec:
     n_lanes: Optional[int] = None     # default: cover [v, 2kv] at (1+eps)
     top_cap: Optional[int] = None     # running top-singleton reservoir size
     accept: str = "first"
-    engine: str = "dense"             # per-chunk ThresholdGreedy engine
-    chunk: int = DEFAULT_CHUNK        # lazy-engine rescore chunk
+    engine: str = "dense"             # per-chunk ThresholdGreedy engine:
+    #                                   "dense" | "lazy" | "fused" (fused
+    #                                   runs each lane's per-chunk accept
+    #                                   loop through oracle.chunk_accept)
+    chunk: int = DEFAULT_CHUNK        # lazy/fused-engine chunk size
+
+    def __post_init__(self):
+        # shared trace-time knob validation (threshold.validate_engine) —
+        # a typo'd engine fails at spec construction, naming the sieve
+        validate_engine(self.engine, self.accept, where="SieveSpec")
 
     @property
     def lanes(self) -> int:

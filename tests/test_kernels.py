@@ -401,3 +401,167 @@ def test_oracle_kernel_routes_match_plain(name):
         np.asarray(fused.chunk_marginals(st_, X)),
         np.asarray(plain.marginals(st_, plain.prep(st_, X))),
         rtol=1e-5, atol=1e-4, err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# fused chunk-accept kernels: the whole accept loop inside one pallas_call
+# ---------------------------------------------------------------------------
+
+SHAPES_ACC = [
+    # (B, d) — tile multiples, ragged, tiny, wide
+    (32, 128), (13, 20), (1, 1), (64, 300), (129, 64), (8, 1024),
+]
+
+
+def _accept_case(seed, B, d, dtype, nonneg=True):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = _rand(k1, (B, d), dtype)
+    if nonneg:
+        x = jnp.abs(x)
+    state = jnp.abs(_rand(k2, (d,), jnp.float32))
+    elig = jax.random.uniform(k3, (B,)) < 0.8
+    return x, state, elig
+
+
+def _assert_accept_matches(got, want, d, dtype, name):
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]),
+                                  err_msg=f"{name}: accept masks differ")
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]),
+                               rtol=tol, atol=tol * d, err_msg=name)
+    np.testing.assert_allclose(np.asarray(got[2]), np.asarray(want[2]),
+                               rtol=tol, atol=tol * d, err_msg=name)
+
+
+@pytest.mark.parametrize("B,d", SHAPES_ACC)
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_coverage_accept_matches_ref(B, d, dtype):
+    from repro.kernels.coverage_accept import coverage_accept
+
+    x, state, elig = _accept_case(B * 31 + d, B, d, dtype)
+    w = jnp.abs(_rand(jax.random.PRNGKey(d), (d,), jnp.float32))
+    # tau from the gain scale so accepts/rejects both occur
+    tau = float(jnp.median(ref.coverage_marginals(x, state, w)))
+    budget = max(1, B // 3)
+    got = coverage_accept(x, state, w, elig, tau, budget, interpret=True)
+    want = ref.coverage_accept(x, state, w, elig, tau, budget)
+    _assert_accept_matches(got, want, d, dtype, "coverage_accept")
+
+
+@pytest.mark.parametrize("B,d", SHAPES_ACC)
+def test_weighted_coverage_accept_matches_ref(B, d):
+    from repro.kernels.weighted_coverage_accept import \
+        weighted_coverage_accept
+
+    rng = np.random.default_rng(B * 7 + d)
+    x = jnp.asarray((rng.random((B, d)) < 0.3).astype(np.float32))
+    state = jnp.abs(_rand(jax.random.PRNGKey(d), (d,), jnp.float32))
+    elig = jnp.asarray(rng.random(B) < 0.8)
+    tau = float(jnp.median(ref.weighted_coverage_marginals(x, state)))
+    budget = max(1, B // 2)
+    got = weighted_coverage_accept(x, state, elig, tau, budget,
+                                   interpret=True)
+    want = ref.weighted_coverage_accept(x, state, elig, tau, budget)
+    _assert_accept_matches(got, want, d, jnp.float32,
+                           "weighted_coverage_accept")
+
+
+@pytest.mark.parametrize("B,d", SHAPES_ACC)
+def test_saturated_coverage_accept_matches_ref(B, d):
+    from repro.kernels.saturated_coverage_accept import \
+        saturated_coverage_accept
+
+    x, state, elig = _accept_case(B * 13 + d, B, d, jnp.float32)
+    cap = jnp.abs(_rand(jax.random.PRNGKey(B), (d,), jnp.float32)) * 2.0
+    w = jnp.abs(_rand(jax.random.PRNGKey(d + 1), (d,), jnp.float32))
+    tau = float(jnp.median(
+        ref.saturated_coverage_marginals(x, state, cap, w)))
+    budget = max(1, B // 3)
+    got = saturated_coverage_accept(x, state, cap, w, elig, tau, budget,
+                                    interpret=True)
+    want = ref.saturated_coverage_accept(x, state, cap, w, elig, tau,
+                                         budget)
+    _assert_accept_matches(got, want, d, jnp.float32,
+                           "saturated_coverage_accept")
+
+
+@pytest.mark.parametrize("B,d", SHAPES_ACC)
+def test_graph_cut_accept_matches_ref(B, d):
+    from repro.kernels.graph_cut_accept import graph_cut_accept
+
+    x, state, elig = _accept_case(B * 17 + d, B, d, jnp.float32)
+    total = jnp.sum(x, axis=0) + state
+    tau = float(jnp.median(ref.graph_cut_marginals(x, total, state, 0.5)))
+    budget = max(1, B // 3)
+    got = graph_cut_accept(x, total, state, elig, tau, budget, 0.5,
+                           interpret=True)
+    want = ref.graph_cut_accept(x, total, state, elig, tau, budget, 0.5)
+    _assert_accept_matches(got, want, d, jnp.float32, "graph_cut_accept")
+
+
+@pytest.mark.parametrize("B,r,d", [(32, 128, 64), (13, 20, 8), (1, 1, 1),
+                                   (64, 300, 16), (100, 257, 33)])
+def test_facility_accept_matches_ref(B, r, d):
+    from repro.kernels.facility_accept import facility_accept
+
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(B * 3 + r), 4)
+    cand = _rand(k1, (B, d), jnp.float32)
+    refs = _rand(k2, (r, d), jnp.float32)
+    state = jnp.abs(_rand(k3, (r,), jnp.float32)) * 0.1
+    elig = jax.random.uniform(k4, (B,)) < 0.8
+    tau = float(jnp.median(ref.facility_marginals(cand, refs, state)))
+    budget = max(1, B // 3)
+    got = facility_accept(cand, refs, state, elig, tau, budget,
+                          interpret=True)
+    want = ref.facility_accept(cand, refs, state, elig, tau, budget)
+    _assert_accept_matches(got, want, d, jnp.float32, "facility_accept")
+
+
+def test_accept_budget_and_eligibility_respected():
+    """No kernel accepts an ineligible row or exceeds the budget, and the
+    emitted gains are the accept-time fresh marginals (valid stale upper
+    bounds): replaying the mask sequentially reproduces them."""
+    from repro.kernels.coverage_accept import coverage_accept
+
+    rng = np.random.default_rng(5)
+    B, d = 40, 12
+    x = jnp.asarray(rng.random((B, d)).astype(np.float32)) ** 2
+    state = jnp.zeros((d,), jnp.float32)
+    elig = jnp.asarray(rng.random(B) < 0.5)
+    tau = 0.1
+    budget = 4
+    mask, st_out, gains = coverage_accept(x, state, None, elig, tau,
+                                          budget, interpret=True)
+    mask = np.asarray(mask)
+    assert mask.sum() <= budget
+    assert not np.any(mask & ~np.asarray(elig))
+    # replay: accepted rows' gains computed against the running state
+    st_ = state
+    for i in range(B):
+        g = float(jnp.sum(jnp.sqrt(st_ + x[i]) - jnp.sqrt(st_)))
+        np.testing.assert_allclose(g, float(gains[i]), rtol=1e-5)
+        if mask[i]:
+            assert g >= tau
+            st_ = st_ + x[i]
+    np.testing.assert_allclose(np.asarray(st_out), np.asarray(st_),
+                               rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 16), st.integers(0, 2 ** 16),
+       st.integers(0, 8), st.floats(0.0, 2.0))
+def test_accept_scan_vs_kernel_property(B, d, seed, budget, tau_scale):
+    """Property: the coverage accept kernel agrees with the scan reference
+    over random shapes, budgets and thresholds (incl. budget 0)."""
+    from repro.kernels.coverage_accept import coverage_accept
+
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.random((B, d)).astype(np.float32)) ** 2
+    state = jnp.asarray(rng.random((d,)).astype(np.float32))
+    elig = jnp.asarray(rng.random(B) < 0.7)
+    tau = tau_scale * float(
+        jnp.max(ref.coverage_marginals(x, state, None))) / 2.0
+    got = coverage_accept(x, state, None, elig, tau, budget,
+                          interpret=True)
+    want = ref.coverage_accept(x, state, None, elig, tau, budget)
+    _assert_accept_matches(got, want, d, jnp.float32, "coverage_accept")

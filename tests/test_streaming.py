@@ -320,3 +320,40 @@ def test_selector_round_log_notes_runtime_events():
     sel.select(X, key=jax.random.PRNGKey(1))
     s = sel.round_log.summary()
     assert "events:" in s and "tau_fallback=0" in s and "n_dropped=0" in s
+
+
+# ---------------------------------------------------------------------------
+# fused engine through the sieve's per-lane update
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["feature_coverage", "facility_location",
+                                  "graph_cut"])
+def test_sieve_fused_engine_matches_dense(name):
+    """SieveSpec(engine="fused") — the per-lane Algorithm-1 accept over
+    each chunk runs through oracle.chunk_accept (vmapped over lanes) and
+    must reproduce the dense sieve bit-for-bit, plain and kernel paths."""
+    import dataclasses
+
+    n, d, k = 256, 8, 8
+    oracle, X = _instance(name, seed=6, n=n, d=d, k=k)
+    ids, valid = _streamed(X, n)
+    out = {}
+    for engine in ("dense", "fused"):
+        spec = SieveSpec(k=k, engine=engine, chunk=32)
+        res, state = sieve_run(oracle, spec, X, ids, valid, chunk_elems=64)
+        out[engine] = (res, state)
+    np.testing.assert_array_equal(np.asarray(out["dense"][0].sol_ids),
+                                  np.asarray(out["fused"][0].sol_ids))
+    np.testing.assert_array_equal(np.asarray(out["dense"][1].sol_ids),
+                                  np.asarray(out["fused"][1].sol_ids))
+    np.testing.assert_allclose(float(out["dense"][0].value),
+                               float(out["fused"][0].value), rtol=1e-6)
+
+    try:
+        krn = dataclasses.replace(oracle, use_kernel=True)
+    except TypeError:
+        return
+    spec = SieveSpec(k=k, engine="fused", chunk=32)
+    res_k, _ = sieve_run(krn, spec, X, ids, valid, chunk_elems=64)
+    np.testing.assert_array_equal(np.asarray(out["dense"][0].sol_ids),
+                                  np.asarray(res_k.sol_ids))

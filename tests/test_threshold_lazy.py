@@ -1,9 +1,11 @@
-"""Lazy/chunked ThresholdGreedy engine tests: exact dense-equivalence for
-accept="first", the two proof invariants (accepted marginals >= tau; exit
-implies no marginal >= tau), oracle-work accounting, engine plumbing through
+"""ThresholdGreedy engine tests (lazy + fused): exact dense-equivalence
+for accept="first", the two proof invariants (accepted marginals >= tau;
+exit implies no marginal >= tau), oracle-work accounting (incl. the fused
+engine's one-trip-per-chunk math), the fused kernel path, k_dyn/batched-
+query parity, the shared engine/accept validation, engine plumbing through
 the sim drivers/selector, and regressions for the satellite fixes
 (pack_by_mask priority ties, MRConfig.n_local ceil, opt_upper_bound TP path,
-sim-vs-mesh RoundLog byte consistency)."""
+sim-vs-mesh RoundLog byte consistency, threshold_filter tiling)."""
 
 import dataclasses
 
@@ -328,3 +330,235 @@ def test_mesh_roundlog_bytes_match_sim():
         assert m_rec.name == s_rec.name
         assert m_rec.bytes_per_machine == s_rec.bytes_per_machine
         assert m_rec.bytes_total == s_rec.bytes_total
+
+
+# ---------------------------------------------------------------------------
+# fused engine: chunk_accept sweeps, bit-identity, accounting, validation
+# ---------------------------------------------------------------------------
+
+ENGINES_FIRST = ["dense", "lazy", "fused"]
+
+
+@pytest.mark.parametrize("name", ORACLES)
+@pytest.mark.parametrize("chunk", [1, 13, 64, 128, 4096])
+def test_fused_matches_dense_exactly_accept_first(name, chunk):
+    """Acceptance criterion: engine="fused" (chunk_accept scan reference)
+    selects bit-identical ids/values to dense on every registered oracle,
+    chunk smaller / ragged / equal-to-C/2 / larger than C.  chunk=128
+    (= C/2) covers the clamped-frontier case near C - chunk."""
+    k = 10
+    oracle, feats, ids, valid, tau = _setup(name)
+    dst, dsol, dsize, _ = _run(oracle, feats, ids, valid, tau, k,
+                               engine="dense")
+    fst, fsol, fsize, _ = _run(oracle, feats, ids, valid, tau, k,
+                               engine="fused", chunk=chunk)
+    np.testing.assert_array_equal(np.asarray(dsol), np.asarray(fsol))
+    assert int(dsize) == int(fsize)
+    np.testing.assert_allclose(float(oracle.value(dst)),
+                               float(oracle.value(fst)), rtol=1e-6)
+
+
+@pytest.mark.parametrize("name", KERNELED)
+def test_engine_parity_sweep_kernel_path(name):
+    """Engine-parity sweep over every KERNELED oracle with use_kernel=True:
+    fused (Pallas accept sweep where the oracle has one, scan reference
+    otherwise) vs dense vs lazy accepted sequences are bit-identical for
+    accept="first"."""
+    k = 9
+    oracle, feats, ids, valid, tau = _setup(name, seed=5)
+    krn = dataclasses.replace(oracle, use_kernel=True)
+    sols = {}
+    for engine in ENGINES_FIRST:
+        _, sol, size, _ = _run(krn, feats, ids, valid, tau, k,
+                               engine=engine, chunk=32)
+        sols[engine] = (np.asarray(sol), int(size))
+    for engine in ("lazy", "fused"):
+        np.testing.assert_array_equal(sols["dense"][0], sols[engine][0],
+                                      err_msg=f"{name}/{engine}")
+        assert sols["dense"][1] == sols[engine][1]
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 16), st.integers(1, 80), st.sampled_from(ORACLES),
+       st.floats(0.05, 4.0))
+def test_fused_matches_dense_property(seed, chunk, name, tau_scale):
+    """Property: dense/fused accept="first" equivalence over random
+    instances, chunk sizes and threshold scales."""
+    k = 8
+    oracle, feats, ids, valid, tau = _setup(name, seed=seed, n=64, d=6, k=k)
+    tau = tau * tau_scale
+    _, dsol, dsize, _ = _run(oracle, feats, ids, valid, tau, k,
+                             engine="dense")
+    _, fsol, fsize, _ = _run(oracle, feats, ids, valid, tau, k,
+                             engine="fused", chunk=chunk)
+    np.testing.assert_array_equal(np.asarray(dsol), np.asarray(fsol))
+    assert int(dsize) == int(fsize)
+
+
+def test_fused_engine_stats_accounting():
+    """GreedyStats chunk math: the fused engine pays B candidate rows per
+    while trip (n_evals == n_iters * chunk), and in the accept-rich regime
+    (low tau, budget fills inside the first chunks) its trip count drops
+    well below dense's one-trip-per-accept."""
+    k = 16
+    chunk = 64
+    oracle, feats, ids, valid, tau = _setup("feature_coverage", n=2048, k=k)
+    _, _, dsize, dstats = _run(oracle, feats, ids, valid, tau, k,
+                               engine="dense")
+    _, _, fsize, fstats = _run(oracle, feats, ids, valid, tau, k,
+                               engine="fused", chunk=chunk)
+    assert int(dsize) == int(fsize) == k          # budget fills: accept-rich
+    assert int(dstats.n_iters) == k               # one trip per accept
+    assert int(fstats.n_evals) == int(fstats.n_iters) * chunk
+    assert int(fstats.n_iters) * 5 <= int(dstats.n_iters)
+
+
+def test_fused_engine_k_dyn_budget():
+    """A fused run with traced budget q equals the first q accepts of the
+    full-budget dense run (the k_dyn contract)."""
+    k = 12
+    oracle, feats, ids, valid, tau = _setup("graph_cut", seed=2)
+    _, dsol, dsize, _ = _run(oracle, feats, ids, valid, tau, k,
+                             engine="dense")
+    for q in (1, 5, 12):
+        _, fsol, fsize, _ = _run(oracle, feats, ids, valid, tau, k,
+                                 engine="fused", chunk=32,
+                                 k_dyn=jnp.asarray(q, jnp.int32))
+        want = np.asarray(dsol).copy()
+        want[min(q, int(dsize)):] = -1
+        np.testing.assert_array_equal(np.asarray(fsol), want)
+        assert int(fsize) == min(q, int(dsize))
+
+
+def test_fused_engine_batched_queries_parity():
+    """threshold_greedy_batch(engine="fused"): Q vmapped queries with
+    per-query budgets and thresholds match the dense batch bit-for-bit,
+    and each lane matches its own single-query run."""
+    from repro.core.threshold import threshold_greedy_batch
+
+    k = 10
+    oracle, feats, ids, valid, tau = _setup("feature_coverage", seed=9)
+    Q = 4
+    taus = jnp.asarray([tau * 0.5, tau, tau * 2.0, tau * 8.0], jnp.float32)
+    kds = jnp.asarray([3, 10, 7, 1], jnp.int32)
+    states = jax.vmap(lambda _: oracle.init_state())(jnp.arange(Q))
+    sols = jnp.full((Q, k), -1, jnp.int32)
+    sizes = jnp.zeros((Q,), jnp.int32)
+    out = {}
+    for engine in ("dense", "fused"):
+        out[engine] = threshold_greedy_batch(
+            oracle, states, sols, sizes, feats, ids, valid, taus, k,
+            k_dyn=kds, engine=engine, chunk=16)
+    np.testing.assert_array_equal(np.asarray(out["dense"][1]),
+                                  np.asarray(out["fused"][1]))
+    np.testing.assert_array_equal(np.asarray(out["dense"][2]),
+                                  np.asarray(out["fused"][2]))
+    for q in range(Q):
+        _, sol_q, size_q, _ = _run(oracle, feats, ids, valid,
+                                   float(taus[q]), k, engine="fused",
+                                   chunk=16, k_dyn=kds[q])
+        np.testing.assert_array_equal(np.asarray(out["fused"][1])[q],
+                                      np.asarray(sol_q))
+
+
+def test_fused_sim_drivers_and_selector():
+    """engine="fused" through the sim drivers and the production mesh
+    selector reproduces the dense results bit-for-bit (same PRNG key)."""
+    rng = np.random.default_rng(21)
+    n, d, k, m = 512, 8, 8, 8
+    X = jnp.asarray((rng.random((n, d)).astype(np.float32)) ** 2)
+    oracle = FeatureCoverage(feat_dim=d)
+    feats_mk = X.reshape(m, n // m, d)
+    ids_mk = jnp.arange(n, dtype=jnp.int32).reshape(m, n // m)
+    valid_mk = jnp.ones((m, n // m), bool)
+    out = {}
+    for engine in ("dense", "fused"):
+        cfg = MRConfig(k=k, n_total=n, n_machines=m, engine=engine,
+                       chunk=32)
+        out[engine], _ = two_round_sim(oracle, feats_mk, ids_mk, valid_mk,
+                                       cfg, jax.random.PRNGKey(7))
+    np.testing.assert_array_equal(np.asarray(out["dense"].sol_ids),
+                                  np.asarray(out["fused"].sol_ids))
+
+    mesh = make_mesh_for(len(jax.devices()), model_parallel=1)
+    res = {}
+    for engine in ("dense", "fused"):
+        spec = SelectorSpec(k=6, algorithm="two_round", engine=engine,
+                            chunk=32)
+        sel = DistributedSelector(spec, mesh, n_total=n, feat_dim=d)
+        res[engine] = sel.select(X, key=jax.random.PRNGKey(3))
+    np.testing.assert_array_equal(np.asarray(res["dense"].sol_ids),
+                                  np.asarray(res["fused"].sol_ids))
+
+
+def test_validate_engine_call_sites():
+    """The shared knob validation fires at trace time with the call-site
+    name — threshold_greedy, the batch entry, MRConfig and SieveSpec all
+    reject a typo'd engine, and engine="fused" rejects accept="best"."""
+    from repro.core.threshold import threshold_greedy_batch, validate_engine
+    from repro.streaming.sieve import SieveSpec
+
+    k = 4
+    oracle, feats, ids, valid, tau = _setup("feature_coverage", n=32, d=4,
+                                            k=k)
+    with pytest.raises(ValueError, match="threshold_greedy: unknown engine"):
+        _run(oracle, feats, ids, valid, tau, k, engine="lzay")
+    with pytest.raises(ValueError,
+                       match="threshold_greedy_batch: unknown engine"):
+        threshold_greedy_batch(
+            oracle, jax.vmap(lambda _: oracle.init_state())(jnp.arange(2)),
+            jnp.full((2, k), -1, jnp.int32), jnp.zeros((2,), jnp.int32),
+            feats, ids, valid, jnp.asarray([tau, tau]), k, engine="fussed")
+    with pytest.raises(ValueError, match="MRConfig: unknown engine"):
+        MRConfig(k=k, n_total=32, n_machines=2, engine="dens")
+    with pytest.raises(ValueError, match="SieveSpec: unknown engine"):
+        SieveSpec(k=k, engine="lazyy")
+    with pytest.raises(ValueError, match="unknown accept"):
+        MRConfig(k=k, n_total=32, n_machines=2, accept="fist")
+    with pytest.raises(ValueError, match="accept='first'"):
+        _run(oracle, feats, ids, valid, tau, k, engine="fused",
+             accept="best")
+    with pytest.raises(ValueError, match="accept='first'"):
+        validate_engine("fused", "best", where="somewhere")
+    validate_engine("fused", "first")            # valid combos pass
+    validate_engine("lazy", "best")
+
+
+def test_threshold_filter_tiled_matches_one_shot():
+    """threshold_filter(chunk=...) sweeps (chunk, d) tiles and must return
+    the identical survivor mask as the one-shot call, including ragged
+    tails and chunk > C (the satellite perf fix must not change
+    semantics)."""
+    from repro.core.threshold import threshold_filter
+
+    k = 8
+    oracle, feats, ids, valid, tau = _setup("facility_location", seed=4)
+    st_ = oracle.init_state()
+    aux = oracle.prep(st_, feats[:3])
+    for i in range(3):
+        st_ = oracle.add(st_, jax.tree.map(lambda a: a[i], aux))
+    want = threshold_filter(oracle, st_, feats, valid, tau)
+    for chunk in (1, 7, 64, 100, 4096):
+        got = threshold_filter(oracle, st_, feats, valid, tau, chunk=chunk)
+        np.testing.assert_array_equal(np.asarray(want), np.asarray(got),
+                                      err_msg=f"chunk={chunk}")
+
+
+def test_bench_run_fails_on_missing_json(tmp_path, monkeypatch):
+    """benchmarks.run treats a bench that writes no JSON as a failure,
+    not a silent skip (satellite: trajectory files can't go missing)."""
+    import types
+
+    from benchmarks import common, run as bench_run
+
+    monkeypatch.setattr(common, "RESULTS_DIR", str(tmp_path))
+    fake = types.ModuleType("fake_bench")
+    missing = bench_run._missing_outputs(fake, "fake_bench",
+                                         t0=0.0)
+    assert missing == ["fake_bench.json"]
+    common.save("fake_bench", [{"ok": 1}])
+    assert bench_run._missing_outputs(fake, "fake_bench", t0=0.0) == []
+    # declared extra outputs are checked too
+    fake.JSON_OUTPUTS = ("fake_bench", "fake_traj")
+    assert bench_run._missing_outputs(fake, "fake_bench",
+                                      t0=0.0) == ["fake_traj.json"]
