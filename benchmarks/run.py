@@ -1,6 +1,7 @@
 """Run the full benchmark suite: one module per paper table/claim.
 
   approx_ratio            Lemma 1 / Lemma 3 / Theorem 8 ratios
+  epoch_quality           multi-epoch (1 - 1/e - eps) rounds-vs-ratio
   adversarial             Theorem 4 tightness
   memory_rounds           Lemma 2 / Lemma 6 memory + round counts
   distributed_baselines   vs RandGreeDi [2] and MZ core-sets [7]
@@ -32,7 +33,7 @@ import os
 import time
 import traceback
 
-MODULES = ("approx_ratio", "adversarial", "memory_rounds",
+MODULES = ("approx_ratio", "epoch_quality", "adversarial", "memory_rounds",
            "distributed_baselines", "selection_throughput", "selection_qps",
            "streaming", "selection_roofline", "roofline_report")
 

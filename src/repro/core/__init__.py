@@ -9,6 +9,7 @@ from repro.core.functions import (AdversarialThreshold, ExemplarClustering,
                                   make_adversarial_instance)
 from repro.core.mapreduce import (MRConfig, QueryBatch, SelectionResult,
                                   dense_two_round_sim, make_query_batch,
+                                  multi_epoch_mesh, multi_epoch_sim,
                                   multi_threshold_mesh,
                                   multi_threshold_sim, sparse_two_round_sim,
                                   two_round_batch_mesh, two_round_batch_sim,
@@ -27,7 +28,8 @@ __all__ = [
     "SubmodularOracle", "WeightedCoverage", "bind_query",
     "make_adversarial_instance",
     "MRConfig", "QueryBatch", "SelectionResult", "dense_two_round_sim",
-    "make_query_batch", "multi_threshold_mesh", "multi_threshold_sim",
+    "make_query_batch", "multi_epoch_mesh", "multi_epoch_sim",
+    "multi_threshold_mesh", "multi_threshold_sim",
     "sparse_two_round_sim", "two_round_batch_mesh", "two_round_batch_sim",
     "two_round_known_opt_mesh", "two_round_known_opt_sim", "two_round_sim",
     "ORACLE_NAMES", "DistributedSelector", "SelectorSpec", "make_oracle",

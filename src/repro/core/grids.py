@@ -57,6 +57,65 @@ def tau_grid_from_v(v, k, eps: float, n_points: int):
 
 
 # ---------------------------------------------------------------------------
+# epoch schedules (the multi-epoch drivers' descending threshold sequences)
+# ---------------------------------------------------------------------------
+
+#: Descending-threshold schedule families understood by the epoch engine:
+#: "paper"     — Algorithm 5's alpha_l = (1 - 1/(E+1))^l * OPT/k, the schedule
+#:               behind the 1 - (1 - 1/(E+1))^E >= 1 - 1/e - eps guarantee;
+#: "geometric" — tau_0 (1-eps)^l, plain descending threshold greedy (no
+#:               matching lower bound, occasionally better in practice).
+SCHEDULE_KINDS = ("paper", "geometric")
+
+
+def validate_schedule_kind(kind: str, where: str = "epoch_schedule") -> None:
+    if kind not in SCHEDULE_KINDS:
+        raise ValueError(f"{where}: unknown schedule kind {kind!r}; "
+                         f"registered: {SCHEDULE_KINDS}")
+
+
+def epochs_for_eps(eps: float, epochs=None) -> int:
+    """Epoch count for a target shortfall eps below 1 - 1/e.
+
+    The paper-schedule guarantee 1 - (1 - 1/(E+1))^E approaches 1 - 1/e
+    from below with gap < 1/(E+1), so E = ceil(1/eps) epochs suffice for
+    value >= (1 - 1/e - eps) OPT.  An explicit ``epochs`` wins."""
+    if epochs:
+        return int(epochs)
+    return max(1, int(math.ceil(1.0 / eps)))
+
+
+def epoch_schedule(tau0, epochs: int, eps: float, kind: str = "paper"):
+    """Descending threshold schedule from the level-1 threshold guess
+    ``tau0`` = OPT_guess/2k (a scalar, or a (G,) grid of guesses — the
+    unknown-OPT drivers pass the whole tau grid and every guess runs its
+    own schedule in a vmapped lane).
+
+    Returns a list of ``epochs`` per-level thresholds (same shape as
+    ``tau0`` each).  The 1-epoch schedule of either kind is exactly
+    ``[tau0]`` bit-for-bit (the 2.0*0.5 and (1-eps)^0 scalings are exact
+    float operations), which is what makes the one-epoch instantiation
+    reproduce the two-round drivers."""
+    validate_schedule_kind(kind)
+    if kind == "geometric":
+        return [tau0 * float((1.0 - eps) ** l) for l in range(epochs)]
+    # "paper": alpha_l = (1 - 1/(E+1))^l * OPT/k with OPT = 2k tau0
+    return [2.0 * tau0 * float((1.0 - 1.0 / (epochs + 1)) ** l)
+            for l in range(1, epochs + 1)]
+
+
+def alg5_schedule(opt, k: int, epochs: int):
+    """Algorithm 5's exact known-OPT schedule alpha_l = (1-1/(E+1))^l OPT/k.
+
+    Kept as its own builder (not epoch_schedule(opt/2k, ...)) because the
+    multiplication order here reproduces the historical multi-threshold
+    drivers' float rounding bit-for-bit; ``opt`` may be a python float (sim)
+    or a traced f32 scalar (mesh)."""
+    return [(1.0 - 1.0 / (epochs + 1)) ** ell * opt / k
+            for ell in range(1, epochs + 1)]
+
+
+# ---------------------------------------------------------------------------
 # geometric threshold lanes (the streaming sieve's online form of the grid)
 # ---------------------------------------------------------------------------
 

@@ -1,15 +1,24 @@
-"""The paper's MapReduce algorithms (Algorithms 3–7, Theorem 8), on JAX.
+"""The paper's MapReduce algorithms (Algorithms 3–7, Theorem 8, and the
+multi-epoch (1 - 1/e - eps) driver), on JAX.
 
-Two execution substrates share the same per-round local functions:
+Every driver here is an instantiation of the epoch engine in
+``repro.core.rounds``: a descending threshold schedule executed on a
+round-primitives backend (``SimRounds`` — machines as a vmap axis, the
+executable MRC model; ``MeshRounds`` — machines as device-mesh axes under
+shard_map, the production path).  One epoch = one threshold level = two
+MapReduce rounds (sample gather + survivor gather):
 
-* **sim** drivers — the m machines are a leading vmap axis on one device.
-  This is a faithful executable model of MRC (used by tests/benchmarks to
-  measure approximation ratios, round counts and message volumes without
-  needing a multi-device runtime).
-* **mesh** drivers — the m machines are the (pod×)data axes of a real device
-  mesh; each round's "send to central machine" is a `lax.all_gather`, and the
-  central phase runs redundantly-replicated on every device (see DESIGN.md §2
-  for why that is the right TPU adaptation).
+* ``two_round_known_opt_{sim,mesh}`` — Algorithm 4: 1 epoch at OPT/2k.
+* ``multi_threshold_{sim,mesh}``     — Algorithm 5: t epochs at the
+  known-OPT schedule alpha_l = (1 - 1/(t+1))^l OPT/k.
+* ``two_round_{sim,mesh}``           — Theorem 8: 1 epoch vmapped over the
+  unknown-OPT tau grid (Alg. 6) with the sparse top-singleton path
+  (Alg. 7) riding the same two rounds; best of all lanes.
+* ``multi_epoch_{sim,mesh}``         — the (1 - 1/e - eps) result: E =
+  ceil(1/eps) epochs of the same grid drivers, carrying the solution
+  across epochs; epochs/schedule kind from MRConfig or per call.
+* ``two_round_batch_{sim,mesh}``     — Theorem 8 for Q queries sharing one
+  corpus partition and one sample round (the query axis).
 
 Static-shape discipline: every MRC message becomes a fixed-capacity packed
 buffer (`threshold.pack_by_mask`) with a validity mask + overflow counter.
@@ -22,19 +31,17 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
 from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core import grids
+from repro.core import grids, rounds
 from repro.core.functions import bind_query, consumes_query_params
-from repro.core.rounds import RoundLog, buffer_bytes
-from repro.core.threshold import (DEFAULT_CHUNK, exclude_ids, pack_by_mask,
-                                  threshold_filter, threshold_greedy,
-                                  validate_engine)
+from repro.core.rounds import (MeshRounds, RoundLog, SimRounds, buffer_bytes,
+                               run_epochs)
+from repro.core.threshold import DEFAULT_CHUNK, validate_engine
 
 
 class SelectionResult(NamedTuple):
@@ -97,11 +104,15 @@ class MRConfig:
     engine: str = "dense"                 # ThresholdGreedy engine:
     #                                       "dense" | "lazy" | "fused"
     chunk: int = DEFAULT_CHUNK            # lazy/fused-engine chunk size
+    epochs: Optional[int] = None          # multi-epoch threshold levels;
+    #                                       None derives ceil(1/eps)
+    schedule_kind: str = "paper"          # grids.SCHEDULE_KINDS
 
     def __post_init__(self):
         # trace-time knob validation with the config as the call site —
         # a typo'd engine fails here, not deep inside a vmapped driver
         validate_engine(self.engine, self.accept, where="MRConfig")
+        grids.validate_schedule_kind(self.schedule_kind, where="MRConfig")
 
     @property
     def filter_chunk(self) -> Optional[int]:
@@ -120,6 +131,12 @@ class MRConfig:
         # shard has ceil(n/m) elements, and the expected-sample/survivor
         # caps must be sized from that, not the floored undercount.
         return -(-self.n_total // self.n_machines)
+
+    def n_epochs(self, epochs=None) -> int:
+        """Resolve the multi-epoch level count: explicit argument, then
+        the config's ``epochs``, then the eps -> ceil(1/eps) derivation."""
+        return grids.epochs_for_eps(
+            self.eps, epochs if epochs is not None else self.epochs)
 
     def require_even_shards(self, where: str = "sim reshape") -> None:
         """The sim drivers' (m, n/m, d) reshape and the mesh data sharding
@@ -145,60 +162,22 @@ class MRConfig:
         return grids.grid_size(self.k, self.eps, self.n_grid)
 
 
+# Thin aliases: the drivers' central/local pieces live in repro.core.rounds
+# now; these keep historical call sites and white-box tests stable.
 def _empty_solution(oracle, k):
-    return (oracle.init_state(),
-            jnp.full((k,), -1, jnp.int32),
-            jnp.zeros((), jnp.int32))
+    return rounds.empty_solution(oracle, k)
 
 
 def _greedy(oracle, st, sol, size, feats, ids, valid, tau, k, cfg: MRConfig,
             k_dyn=None):
-    valid = exclude_ids(ids, valid & (ids >= 0), sol)
-    return threshold_greedy(oracle, st, sol, size, feats, ids, valid, tau, k,
-                            accept=cfg.accept, engine=cfg.engine,
-                            chunk=cfg.chunk, k_dyn=k_dyn)
+    return rounds.greedy_step(oracle, (st, sol, size), (feats, ids, valid),
+                              tau, k, cfg, k_dyn=k_dyn)
 
 
-# ---------------------------------------------------------------------------
-# shared local-round pieces (used by both substrates)
-# ---------------------------------------------------------------------------
-
-def _local_sample(oracle, key, feats, ids, valid, p, cap):
-    """Algorithm 3 local half: Bernoulli(p) sample, packed."""
-    mask = (jax.random.uniform(key, ids.shape) < p) & valid
-    return pack_by_mask(feats, ids, mask, cap)
-
-
-def _local_filter(oracle, st, sol, feats, ids, valid, tau, cap, size=None,
-                  k=None, chunk=None):
-    """Algorithm 2 local half: survivors of ThresholdFilter, packed.
-    ``chunk`` (from MRConfig.filter_chunk) tiles the marginal sweep so the
-    filter never materializes a full-block prep aux.
-
-    Lemma 2's escape hatch: if the partial greedy solution already has k
-    elements, the algorithm is done and the machines send *nothing* to the
-    central machine ("In that case, we are done and do not send anything").
-    Without this, low thresholds in the unknown-OPT grid overflow their
-    whp-sized survivor buffers."""
-    v = exclude_ids(ids, valid, sol)
-    mask = threshold_filter(oracle, st, feats, v, tau, chunk=chunk)
-    if size is not None and k is not None:
-        mask = mask & (size < k)
-    return pack_by_mask(feats, ids, mask, cap)
-
-
-def _local_top(oracle, feats, ids, valid, cap):
-    """Algorithm 7 local half: top-`cap` elements by singleton value.
-
-    Truncation to the O(k) largest is the algorithm's *intended* behaviour
-    ("send the O(k) largest elements on each machine"), not a buffer
-    overflow — so n_dropped is reported as 0 here.  The sparse-path
-    guarantee (Lemma 7) rests on the balls-and-bins argument that all
-    globally-large elements survive this cut whp."""
-    st0 = oracle.init_state()
-    gains = oracle.marginals(st0, oracle.prep(st0, feats))
-    f, i, v, _ = pack_by_mask(feats, ids, valid, cap, priority=gains)
-    return f, i, v, jnp.zeros((), jnp.int32)
+_local_sample = rounds.local_sample
+_local_filter = rounds.local_filter
+_local_top = rounds.local_top
+_max_singleton = grids.max_singleton
 
 
 def _tau_grid(oracle, cfg, s_feats, s_ids, s_valid, k=None):
@@ -213,12 +192,6 @@ def _tau_grid(oracle, cfg, s_feats, s_ids, s_valid, k=None):
     return _tau_grid_from_v(cfg, v, cfg.k if k is None else k)
 
 
-# Shared with the streaming subsystem (repro.core.grids defines the grid
-# geometry once); the underscore aliases keep the drivers' call sites and
-# the white-box tests stable.
-_max_singleton = grids.max_singleton
-
-
 def _tau_grid_from_v(cfg, v, k):
     """Scale the sampled max singleton v into the (J,) threshold grid for
     budget ``k`` (traced-friendly), applying the degenerate guard."""
@@ -226,93 +199,103 @@ def _tau_grid_from_v(cfg, v, k):
 
 
 # ---------------------------------------------------------------------------
+# substrate-independent driver bodies (sim and mesh share these)
+# ---------------------------------------------------------------------------
+
+def _known_opt_select(oracle, rr, cfg: MRConfig, schedule,
+                      epoch_keys) -> SelectionResult:
+    """Known-OPT epoch driver: run the scalar schedule, report the carried
+    solution (Algorithms 4 and 5)."""
+    (st, sol, size), drops = run_epochs(oracle, rr, schedule, epoch_keys, cfg)
+    return SelectionResult(sol, size, oracle.value(st),
+                           rr.finalize_drops(drops), jnp.zeros((), jnp.int32))
+
+
+def _epoch_select(oracle, rr, cfg: MRConfig, epoch_keys, epochs: int,
+                  kind: str, with_sparse: bool = True) -> SelectionResult:
+    """Unknown-OPT epoch driver: derive the tau grid from epoch 1's sample,
+    run every guess's descending schedule as a vmapped engine lane, ride
+    the Algorithm-7 sparse path through the same rounds (its guesses sweep
+    the same schedule centrally over the top-singleton pool), and keep the
+    best lane.  At epochs=1 this IS Theorem 8, bit-for-bit."""
+    k = cfg.k
+    s_cap, f_cap, t_cap = cfg.caps()
+
+    S1, sdrop1 = rr.sample(epoch_keys[0], cfg.sample_p, s_cap)
+    taus, fb_d = _tau_grid(oracle, cfg, *S1)
+    sched = grids.epoch_schedule(taus, epochs, cfg.eps, kind)
+    (st_j, sol_j, size_j), drops = run_epochs(oracle, rr, sched, epoch_keys,
+                                              cfg, first_sample=(S1, sdrop1))
+    dval = jax.vmap(oracle.value)(st_j)
+
+    if with_sparse:
+        Ltop, _tdrop = rr.tops(oracle, t_cap)
+        taus_s, fb_s = _tau_grid(oracle, cfg, *Ltop)
+        sched_s = grids.epoch_schedule(taus_s, epochs, cfg.eps, kind)
+        ssol, ssize, sval = rounds.sparse_sweep(oracle, Ltop, sched_s, cfg)
+        sols = jnp.concatenate([sol_j, ssol], axis=0)
+        sizes = jnp.concatenate([size_j, ssize], axis=0)
+        vals = jnp.concatenate([dval, sval], axis=0)
+        fb = fb_d + fb_s
+    else:
+        sols, sizes, vals, fb = sol_j, size_j, dval, fb_d
+    best = jnp.argmax(vals)
+    return SelectionResult(sols[best], sizes[best], vals[best],
+                           rr.finalize_drops(drops), fb)
+
+
+def _epoch_keys_split(key, epochs: int):
+    """Per-epoch sample keys for the unknown-OPT drivers: one epoch uses
+    the key itself (preserving two_round's bit-exact sampling), more split
+    it E ways."""
+    return [key] if epochs == 1 else list(jax.random.split(key, epochs))
+
+
+# ---------------------------------------------------------------------------
 # sim drivers — machines as a vmap axis (executable MRC model)
 # ---------------------------------------------------------------------------
 
-def two_round_known_opt_sim(oracle, feats_mk, ids_mk, valid_mk, opt, cfg: MRConfig,
-                            key) -> Tuple[SelectionResult, RoundLog]:
-    """Algorithm 4: 2 rounds, 1/2-approx, OPT known."""
-    m, n_loc, d = feats_mk.shape
-    k, tau = cfg.k, opt / (2.0 * cfg.k)
-    s_cap, f_cap, _ = cfg.caps()
-    log = RoundLog()
+def two_round_known_opt_sim(oracle, feats_mk, ids_mk, valid_mk, opt,
+                            cfg: MRConfig, key
+                            ) -> Tuple[SelectionResult, RoundLog]:
+    """Algorithm 4: 2 rounds, 1/2-approx, OPT known — the 1-epoch scalar
+    instantiation at tau = OPT/2k."""
+    m, _, d = feats_mk.shape
+    rr = SimRounds(oracle, feats_mk, ids_mk, valid_mk)
+    log = rounds.epoch_round_log(cfg, m, d, 1)
+    res = _known_opt_select(oracle, rr, cfg, [opt / (2.0 * cfg.k)], [key])
+    return res, log
 
-    keys = jax.random.split(key, m)
-    sf, si, sv, sdrop = jax.vmap(
-        lambda ky, f, i, v: _local_sample(oracle, ky, f, i, v, cfg.sample_p, s_cap)
-    )(keys, feats_mk, ids_mk, valid_mk)
-    S = (sf.reshape(m * s_cap, d), si.reshape(-1), sv.reshape(-1))
-    log.add("gather-sample", buffer_bytes(s_cap, d),
-            buffer_bytes(m * s_cap, d), f"|S|cap={m*s_cap} p={cfg.sample_p:.4f}")
 
-    st, sol, size = _empty_solution(oracle, k)
-    st, sol, size = _greedy(oracle, st, sol, size, *S, tau, k, cfg)
+def multi_threshold_sim(oracle, feats_mk, ids_mk, valid_mk, opt, t: int,
+                        cfg: MRConfig, key, schedule=None
+                        ) -> Tuple[SelectionResult, RoundLog]:
+    """Algorithm 5: 2t rounds, 1 - (1 - 1/(t+1))^t approx, OPT known —
+    t epochs at the schedule alpha_l = (1 - 1/(t+1))^l OPT/k.
 
-    rf, ri, rv, rdrop = jax.vmap(
-        lambda f, i, v: _local_filter(oracle, st, sol, f, i, v, tau, f_cap,
-                                      size, k, cfg.filter_chunk)
-    )(feats_mk, ids_mk, valid_mk)
-    R = (rf.reshape(m * f_cap, d), ri.reshape(-1), rv.reshape(-1))
-    log.add("gather-survivors", buffer_bytes(f_cap, d),
-            buffer_bytes(m * f_cap, d), f"|R|cap={m*f_cap} tau={float(tau):.4g}")
-
-    st, sol, size = _greedy(oracle, st, sol, size, *R, tau, k, cfg)
-    res = SelectionResult(sol, size, oracle.value(st),
-                          jnp.sum(sdrop) + jnp.sum(rdrop),
-                          jnp.zeros((), jnp.int32))
+    ``schedule`` optionally overrides the thresholds (absolute values,
+    descending) — used by the Theorem-4 adversarial benchmark, which needs
+    control over the boundary between element values and thresholds."""
+    m, _, d = feats_mk.shape
+    rr = SimRounds(oracle, feats_mk, ids_mk, valid_mk)
+    sched = (list(schedule) if schedule is not None
+             else grids.alg5_schedule(opt, cfg.k, t))
+    log = rounds.epoch_round_log(cfg, m, d, t, level_suffix=True)
+    res = _known_opt_select(oracle, rr, cfg, sched,
+                            rounds.chain_keys(key, t))
     return res, log
 
 
 def dense_two_round_sim(oracle, feats_mk, ids_mk, valid_mk, cfg: MRConfig,
                         key) -> Tuple[SelectionResult, RoundLog]:
     """Algorithm 6: 2 rounds, (1/2 - eps)-approx for 'dense' inputs.
-    Runs the Algorithm-4 pipeline for every tau_j in the grid (a vmapped
-    axis — the paper's '1/eps log k parallel copies')."""
-    m, n_loc, d = feats_mk.shape
-    k = cfg.k
-    s_cap, f_cap, _ = cfg.caps()
-    J = cfg.grid_size()
-    log = RoundLog()
-
-    keys = jax.random.split(key, m)
-    sf, si, sv, sdrop = jax.vmap(
-        lambda ky, f, i, v: _local_sample(oracle, ky, f, i, v, cfg.sample_p, s_cap)
-    )(keys, feats_mk, ids_mk, valid_mk)
-    S = (sf.reshape(m * s_cap, d), si.reshape(-1), sv.reshape(-1))
-    log.add("gather-sample", buffer_bytes(s_cap, d), buffer_bytes(m * s_cap, d))
-
-    taus, tau_fb = _tau_grid(oracle, cfg, *S)
-
-    def per_tau_phase1(tau):
-        st, sol, size = _empty_solution(oracle, k)
-        return _greedy(oracle, st, sol, size, *S, tau, k, cfg)
-
-    st_j, sol_j, size_j = jax.vmap(per_tau_phase1)(taus)
-
-    def local_filter_all(f, i, v):
-        return jax.vmap(
-            lambda st, sol, size, tau: _local_filter(oracle, st, sol, f, i, v,
-                                                     tau, f_cap, size, k,
-                                                     cfg.filter_chunk)
-        )(st_j, sol_j, size_j, taus)
-
-    rf, ri, rv, rdrop = jax.vmap(local_filter_all)(feats_mk, ids_mk, valid_mk)
-    # (m, J, cap, d) -> (J, m*cap, d)
-    rf = rf.transpose(1, 0, 2, 3).reshape(J, m * f_cap, d)
-    ri = ri.transpose(1, 0, 2).reshape(J, m * f_cap)
-    rv = rv.transpose(1, 0, 2).reshape(J, m * f_cap)
-    log.add("gather-survivors", J * buffer_bytes(f_cap, d),
-            J * buffer_bytes(m * f_cap, d), f"grid J={J}")
-
-    def per_tau_phase2(st, sol, size, f, i, v, tau):
-        st, sol, size = _greedy(oracle, st, sol, size, f, i, v, tau, k, cfg)
-        return st, sol, size, oracle.value(st)
-
-    st_j, sol_j, size_j, val_j = jax.vmap(per_tau_phase2)(
-        st_j, sol_j, size_j, rf, ri, rv, taus)
-    best = jnp.argmax(val_j)
-    res = SelectionResult(sol_j[best], size_j[best], val_j[best],
-                          jnp.sum(sdrop) + jnp.sum(rdrop), tau_fb)
+    One grid epoch: the Algorithm-4 pipeline for every tau_j in the grid
+    (a vmapped engine lane — the paper's '1/eps log k parallel copies')."""
+    m, _, d = feats_mk.shape
+    rr = SimRounds(oracle, feats_mk, ids_mk, valid_mk)
+    log = rounds.epoch_round_log(cfg, m, d, 1, with_grid=True)
+    res = _epoch_select(oracle, rr, cfg, [key], 1, cfg.schedule_kind,
+                        with_sparse=False)
     return res, log
 
 
@@ -321,31 +304,53 @@ def sparse_two_round_sim(oracle, feats_mk, ids_mk, valid_mk, cfg: MRConfig,
     """Algorithm 7: 2 rounds, (1/2 - eps)-approx for 'sparse' inputs.
     Each machine ships its O(k) largest singletons to the central machine,
     which tries the threshold grid sequentially."""
-    m, n_loc, d = feats_mk.shape
-    k = cfg.k
+    m, _, d = feats_mk.shape
     _, _, t_cap = cfg.caps()
+    rr = SimRounds(oracle, feats_mk, ids_mk, valid_mk)
     log = RoundLog()
-
-    tf, ti, tv, tdrop = jax.vmap(
-        lambda f, i, v: _local_top(oracle, f, i, v, t_cap)
-    )(feats_mk, ids_mk, valid_mk)
-    L = (tf.reshape(m * t_cap, d), ti.reshape(-1), tv.reshape(-1))
-    log.add("gather-top-singletons", buffer_bytes(t_cap, d),
-            buffer_bytes(m * t_cap, d), f"top {t_cap}/machine")
-
+    rounds.log_gather(log, "gather-top-singletons", t_cap, m, d,
+                      f"top {t_cap}/machine")
+    L, tdrop = rr.tops(oracle, t_cap)
     taus, tau_fb = _tau_grid(oracle, cfg, *L)
-
-    def per_tau(tau):
-        st, sol, size = _empty_solution(oracle, k)
-        st, sol, size = _greedy(oracle, st, sol, size, *L, tau, k, cfg)
-        return sol, size, oracle.value(st)
-
-    sol_j, size_j, val_j = jax.vmap(per_tau)(taus)
-    log.add("broadcast-result", buffer_bytes(k, 0), buffer_bytes(k, 0),
+    sol_j, size_j, val_j = rounds.sparse_sweep(oracle, L, [taus], cfg)
+    log.add("broadcast-result", buffer_bytes(cfg.k, 0), buffer_bytes(cfg.k, 0),
             "central solution out")
     best = jnp.argmax(val_j)
-    res = SelectionResult(sol_j[best], size_j[best], val_j[best],
-                          jnp.sum(tdrop), tau_fb)
+    res = SelectionResult(sol_j[best], size_j[best], val_j[best], tdrop,
+                          tau_fb)
+    return res, log
+
+
+def multi_epoch_sim(oracle, feats_mk, ids_mk, valid_mk, cfg: MRConfig, key,
+                    epochs: Optional[int] = None,
+                    schedule_kind: Optional[str] = None, opt=None
+                    ) -> Tuple[SelectionResult, RoundLog]:
+    """The paper's multi-epoch driver: E epochs (2E rounds) of descending
+    thresholds, value >= (1 - (1 - 1/(E+1))^E) OPT >= (1 - 1/e - eps) OPT
+    for E = ceil(1/eps) (derived from cfg.eps when ``epochs`` is None).
+
+    OPT unknown by default: every tau-grid guess runs its own schedule as
+    a vmapped engine lane, the Algorithm-7 sparse path rides the same
+    rounds, best lane wins — so ``epochs=1`` IS two_round_sim, bit-for-bit.
+    With ``opt`` given, runs the exact Algorithm-5 schedule instead (one
+    sequential lane, the tight guarantee with no grid slack)."""
+    E = cfg.n_epochs(epochs)
+    kind = schedule_kind or cfg.schedule_kind
+    m, _, d = feats_mk.shape
+    rr = SimRounds(oracle, feats_mk, ids_mk, valid_mk)
+    if opt is not None:
+        sched = (grids.alg5_schedule(opt, cfg.k, E) if kind == "paper"
+                 else grids.epoch_schedule(opt / (2.0 * cfg.k), E, cfg.eps,
+                                           kind))
+        log = rounds.epoch_round_log(cfg, m, d, E)
+        # chained keys = multi_threshold_sim's derivation, so the known-OPT
+        # paper-schedule instantiation IS Algorithm 5 bit-for-bit
+        res = _known_opt_select(oracle, rr, cfg, sched,
+                                rounds.chain_keys(key, E))
+        return res, log
+    kd, _ks = jax.random.split(key)
+    log = rounds.epoch_round_log(cfg, m, d, E, with_grid=True, with_top=True)
+    res = _epoch_select(oracle, rr, cfg, _epoch_keys_split(kd, E), E, kind)
     return res, log
 
 
@@ -353,23 +358,10 @@ def two_round_sim(oracle, feats_mk, ids_mk, valid_mk, cfg: MRConfig,
                   key) -> Tuple[SelectionResult, RoundLog]:
     """Theorem 8: Algorithms 6 and 7 in parallel (same two rounds), best of
     the two solutions.  This is the paper's headline (1/2 - eps) result with
-    no knowledge of OPT and no dataset duplication."""
-    kd, ks = jax.random.split(key)
-    dense, log_d = dense_two_round_sim(oracle, feats_mk, ids_mk, valid_mk, cfg, kd)
-    sparse, log_s = sparse_two_round_sim(oracle, feats_mk, ids_mk, valid_mk, cfg, ks)
-    pick_dense = dense.value >= sparse.value
-    res = SelectionResult(
-        jnp.where(pick_dense, dense.sol_ids, sparse.sol_ids),
-        jnp.where(pick_dense, dense.sol_size, sparse.sol_size),
-        jnp.maximum(dense.value, sparse.value),
-        dense.n_dropped + sparse.n_dropped,
-        dense.tau_fallback + sparse.tau_fallback)
-    log = RoundLog()
-    for a, b in zip(log_d.records, log_s.records):
-        log.add(f"{a.name}||{b.name}",
-                a.bytes_per_machine + b.bytes_per_machine,
-                a.bytes_total + b.bytes_total, "dense || sparse")
-    return res, log
+    no knowledge of OPT and no dataset duplication — and exactly the
+    1-epoch instantiation of multi_epoch_sim."""
+    return multi_epoch_sim(oracle, feats_mk, ids_mk, valid_mk, cfg, key,
+                           epochs=1)
 
 
 def two_round_batch_sim(oracle, feats_mk, ids_mk, valid_mk, qb: QueryBatch,
@@ -390,31 +382,18 @@ def two_round_batch_sim(oracle, feats_mk, ids_mk, valid_mk, qb: QueryBatch,
     Returns a SelectionResult whose every field carries a leading (Q,)
     axis, and a RoundLog with shared-vs-per-query bytes broken out.
     """
-    m, n_loc, d = feats_mk.shape
+    m, _, d = feats_mk.shape
     K = cfg.k
     s_cap, f_cap, t_cap = cfg.caps()
     J = cfg.grid_size()
     Q = qb.n_queries
-    n_tops = 1 if not consumes_query_params(oracle) else Q
-    log = RoundLog()
+    shared_stats = not consumes_query_params(oracle)
+    log = _batch_round_log(cfg, m, d, Q, shared_stats)
+    rr = SimRounds(oracle, feats_mk, ids_mk, valid_mk)
 
     # shared round 1a: one Bernoulli sample serves all Q queries
     kd, _ks = jax.random.split(key)
-    keys = jax.random.split(kd, m)
-    sf, si, sv, sdrop = jax.vmap(
-        lambda ky, f, i, v: _local_sample(oracle, ky, f, i, v, cfg.sample_p,
-                                          s_cap)
-    )(keys, feats_mk, ids_mk, valid_mk)
-    S = (sf.reshape(m * s_cap, d), si.reshape(-1), sv.reshape(-1))
-    log.add("gather-sample||top[Q]",
-            buffer_bytes(s_cap, d) + n_tops * buffer_bytes(t_cap, d),
-            buffer_bytes(m * s_cap, d) + n_tops * buffer_bytes(m * t_cap, d),
-            f"Q={Q}: shared sample {buffer_bytes(m * s_cap, d)}B + "
-            f"{'shared' if n_tops == 1 else 'per-query'} top "
-            f"{buffer_bytes(m * t_cap, d)}B")
-    log.add("gather-survivors[QxJ]", Q * J * buffer_bytes(f_cap, d),
-            Q * J * buffer_bytes(m * f_cap, d),
-            f"per-query {J * buffer_bytes(m * f_cap, d)}B grid J={J}")
+    S, sdrop = rr.sample(kd, cfg.sample_p, s_cap)
 
     # Query-invariant statistics are hoisted OUT of the per-query vmap when
     # the oracle consumes no per-query hyper-parameters: the max-singleton
@@ -422,130 +401,93 @@ def two_round_batch_sim(oracle, feats_mk, ids_mk, valid_mk, qb: QueryBatch,
     # corpus, so Q queries pay for them once (per-query budgets only
     # rescale the threshold grid, which is O(J) arithmetic).  The per-lane
     # math is bit-identical either way.
-    shared_stats = not consumes_query_params(oracle)
     if shared_stats:
         v_dense = _max_singleton(oracle, S[0], S[2])
-        tf0, ti0, tv0, _ = jax.vmap(
-            lambda f, i, v: _local_top(oracle, f, i, v, t_cap)
-        )(feats_mk, ids_mk, valid_mk)
-        L_shared = (tf0.reshape(m * t_cap, d), ti0.reshape(-1),
-                    tv0.reshape(-1))
+        L_shared, _ = rr.tops(oracle, t_cap)
         v_sparse = _max_singleton(oracle, L_shared[0], L_shared[2])
 
     def one_query(kq, lam, alpha):
         orc = bind_query(oracle, lam, alpha)
-
-        # ---- dense path over the shared sample --------------------------
+        taus, fb_d, carry = _query_grid_a(
+            orc, cfg, S, K, kq, v_dense if shared_stats else None)
+        R, rdrop = rr.filter_grid(orc, *carry, taus, f_cap, kq,
+                                  cfg.filter_chunk)
         if shared_stats:
-            taus, fb_d = _tau_grid_from_v(cfg, v_dense, kq)
+            L, v_s = L_shared, v_sparse
         else:
-            taus, fb_d = _tau_grid(orc, cfg, *S, k=kq)
-
-        def phase1(tau):
-            st, sol, size = _empty_solution(orc, K)
-            return _greedy(orc, st, sol, size, *S, tau, K, cfg, k_dyn=kq)
-
-        st_j, sol_j, size_j = jax.vmap(phase1)(taus)
-
-        def local_filter_all(f, i, v):
-            return jax.vmap(
-                lambda st, sol, size, tau: _local_filter(
-                    orc, st, sol, f, i, v, tau, f_cap, size, kq,
-                    cfg.filter_chunk)
-            )(st_j, sol_j, size_j, taus)
-
-        rf, ri, rv, rdrop = jax.vmap(local_filter_all)(feats_mk, ids_mk,
-                                                       valid_mk)
-        rf = rf.transpose(1, 0, 2, 3).reshape(J, m * f_cap, d)
-        ri = ri.transpose(1, 0, 2).reshape(J, m * f_cap)
-        rv = rv.transpose(1, 0, 2).reshape(J, m * f_cap)
-
-        def phase2(st, sol, size, f, i, v, tau):
-            st, sol, size = _greedy(orc, st, sol, size, f, i, v, tau, K, cfg,
-                                    k_dyn=kq)
-            return sol, size, orc.value(st)
-
-        dsol, dsize, dval = jax.vmap(phase2)(st_j, sol_j, size_j,
-                                             rf, ri, rv, taus)
-
-        # ---- sparse path: tops are shared when query-invariant, else
-        # per-query (singletons depend on the query's hyper-parameters) --
-        if shared_stats:
-            L = L_shared
-            taus_s, fb_s = _tau_grid_from_v(cfg, v_sparse, kq)
-        else:
-            tf, ti, tv, _ = jax.vmap(
-                lambda f, i, v: _local_top(orc, f, i, v, t_cap)
-            )(feats_mk, ids_mk, valid_mk)
-            L = (tf.reshape(m * t_cap, d), ti.reshape(-1), tv.reshape(-1))
-            taus_s, fb_s = _tau_grid(orc, cfg, *L, k=kq)
-
-        def sparse_tau(tau):
-            st, sol, size = _empty_solution(orc, K)
-            st, sol, size = _greedy(orc, st, sol, size, *L, tau, K, cfg,
-                                    k_dyn=kq)
-            return sol, size, orc.value(st)
-
-        ssol, ssize, sval = jax.vmap(sparse_tau)(taus_s)
-
-        sols = jnp.concatenate([dsol, ssol], axis=0)
-        sizes = jnp.concatenate([dsize, ssize], axis=0)
-        vals = jnp.concatenate([dval, sval], axis=0)
-        best = jnp.argmax(vals)
-        return (sols[best], sizes[best], vals[best], jnp.sum(rdrop),
-                fb_d + fb_s)
+            L, _ = rr.tops(orc, t_cap)
+            v_s = None
+        sol, size, val, fb_s = _query_grid_b(orc, cfg, K, kq, taus, carry,
+                                             R, L, v_s)
+        return sol, size, val, rdrop, fb_d + fb_s
 
     sols, sizes, vals, rdrops, fbs = jax.vmap(one_query)(
         qb.k, qb.graph_cut_lam, qb.logdet_alpha)
-    res = SelectionResult(sols, sizes, vals, jnp.sum(sdrop) + rdrops, fbs)
+    res = SelectionResult(sols, sizes, vals, sdrop + rdrops, fbs)
     return res, log
 
 
-def multi_threshold_sim(oracle, feats_mk, ids_mk, valid_mk, opt, t: int,
-                        cfg: MRConfig, key, schedule=None
-                        ) -> Tuple[SelectionResult, RoundLog]:
-    """Algorithm 5: 2t rounds, 1 - (1 - 1/(t+1))^t approx, OPT known.
-    Threshold schedule alpha_l = (1 - 1/(t+1))^l OPT/k; each level runs a
-    sample-greedy round then a filter+central-completion round.
+# ---------------------------------------------------------------------------
+# per-query central phases (shared by the sim and mesh batch drivers)
+# ---------------------------------------------------------------------------
 
-    ``schedule`` optionally overrides the thresholds (absolute values,
-    descending) — used by the Theorem-4 adversarial benchmark, which needs
-    control over the boundary between element values and thresholds."""
-    m, n_loc, d = feats_mk.shape
-    k = cfg.k
-    s_cap, f_cap, _ = cfg.caps()
+def _batch_round_log(cfg, m, feat_dim, n_queries: int,
+                     shared_stats: bool) -> RoundLog:
+    s_cap, f_cap, t_cap = cfg.caps()
+    J = cfg.grid_size()
+    Q = n_queries
+    n_tops = 1 if shared_stats else Q
     log = RoundLog()
+    log.add("gather-sample||top[Q]",
+            buffer_bytes(s_cap, feat_dim)
+            + n_tops * buffer_bytes(t_cap, feat_dim),
+            buffer_bytes(m * s_cap, feat_dim)
+            + n_tops * buffer_bytes(m * t_cap, feat_dim),
+            f"Q={Q}: shared sample {buffer_bytes(m * s_cap, feat_dim)}B "
+            f"+ {'shared' if n_tops == 1 else 'per-query'} top "
+            f"{buffer_bytes(m * t_cap, feat_dim)}B")
+    log.add("gather-survivors[QxJ]",
+            Q * J * buffer_bytes(f_cap, feat_dim),
+            Q * J * buffer_bytes(m * f_cap, feat_dim),
+            f"per-query {J * buffer_bytes(m * f_cap, feat_dim)}B "
+            f"grid J={J}")
+    return log
 
-    st, sol, size = _empty_solution(oracle, k)
-    drops = jnp.zeros((), jnp.int32)
-    for ell in range(1, t + 1):
-        if schedule is not None:
-            alpha = schedule[ell - 1]
-        else:
-            alpha = (1.0 - 1.0 / (t + 1)) ** ell * opt / k
-        key, ks = jax.random.split(key)
-        keys = jax.random.split(ks, m)
-        sf, si, sv, sdrop = jax.vmap(
-            lambda ky, f, i, v: _local_sample(oracle, ky, f, i, v,
-                                              cfg.sample_p, s_cap)
-        )(keys, feats_mk, ids_mk, valid_mk)
-        S = (sf.reshape(m * s_cap, d), si.reshape(-1), sv.reshape(-1))
-        log.add(f"gather-sample-l{ell}", buffer_bytes(s_cap, d),
-                buffer_bytes(m * s_cap, d), f"alpha={alpha:.4g}")
-        st, sol, size = _greedy(oracle, st, sol, size, *S, alpha, k, cfg)
 
-        rf, ri, rv, rdrop = jax.vmap(
-            lambda f, i, v: _local_filter(oracle, st, sol, f, i, v, alpha, f_cap,
-                                          size, k, cfg.filter_chunk)
-        )(feats_mk, ids_mk, valid_mk)
-        R = (rf.reshape(m * f_cap, d), ri.reshape(-1), rv.reshape(-1))
-        log.add(f"gather-survivors-l{ell}", buffer_bytes(f_cap, d),
-                buffer_bytes(m * f_cap, d))
-        st, sol, size = _greedy(oracle, st, sol, size, *R, alpha, k, cfg)
-        drops = drops + jnp.sum(sdrop) + jnp.sum(rdrop)
+def _query_grid_a(orc, cfg, S, K, kq, v_dense=None):
+    """One query's dense phase 1: the tau grid (from the shared max-
+    singleton estimate when available) and the per-tau empty-start greedy
+    over the shared sample."""
+    if v_dense is not None:
+        taus, fb_d = _tau_grid_from_v(cfg, v_dense, kq)
+    else:
+        taus, fb_d = _tau_grid(orc, cfg, *S, k=kq)
+    carry = rounds.grid_phase1(orc, S, taus, K, cfg, k_dyn=kq)
+    return taus, fb_d, carry
 
-    return SelectionResult(sol, size, oracle.value(st), drops,
-                           jnp.zeros((), jnp.int32)), log
+
+def _query_grid_b(orc, cfg, K, kq, taus, carry, R, L, v_sparse=None):
+    """One query's phase 2 + sparse path + best-of: complete every grid
+    lane on its gathered survivors, sweep the sparse grid over the
+    top-singleton pool, keep the best lane."""
+    st_j, sol_j, size_j = carry
+
+    def p2(st, sol, size, f, i, v, tau):
+        st, sol, size = rounds.greedy_step(orc, (st, sol, size), (f, i, v),
+                                           tau, K, cfg, k_dyn=kq)
+        return sol, size, orc.value(st)
+
+    dsol, dsize, dval = jax.vmap(p2)(st_j, sol_j, size_j, *R, taus)
+    if v_sparse is not None:
+        taus_s, fb_s = _tau_grid_from_v(cfg, v_sparse, kq)
+    else:
+        taus_s, fb_s = _tau_grid(orc, cfg, *L, k=kq)
+    ssol, ssize, sval = rounds.sparse_sweep(orc, L, [taus_s], cfg, k_dyn=kq)
+    sols = jnp.concatenate([dsol, ssol], axis=0)
+    sizes = jnp.concatenate([dsize, ssize], axis=0)
+    vals = jnp.concatenate([dval, sval], axis=0)
+    best = jnp.argmax(vals)
+    return sols[best], sizes[best], vals[best], fb_s
 
 
 # ---------------------------------------------------------------------------
@@ -556,72 +498,29 @@ def _machine_axes_size(mesh: Mesh, axes) -> int:
     return math.prod(mesh.shape[a] for a in axes)
 
 
-def _gather_packed(x, gather_axes, lead: int = 0):
-    """all_gather a packed message buffer inside a shard_map body,
-    concatenating the per-machine buffers on the capacity axis.  ``lead``
-    leading batch axes (e.g. a threshold-grid axis, or (query, grid) in
-    the batched driver) are kept in place — the whole stack moves in one
-    collective."""
-    if lead == 0:
-        return jax.lax.all_gather(x, gather_axes, tiled=True)
-    g = jax.lax.all_gather(x, gather_axes)   # (m, *lead, cap, ...)
-    g = jnp.moveaxis(g, 0, lead)             # (*lead, m, cap, ...)
-    return g.reshape(g.shape[:lead]
-                     + (g.shape[lead] * g.shape[lead + 1],)
-                     + g.shape[lead + 2:])
+def _mesh_setup(mesh: Mesh, axes, data_spec):
+    m = _machine_axes_size(mesh, axes)
+    gather_axes = axes if len(axes) > 1 else axes[0]
+    data_spec = data_spec or P(axes if len(axes) > 1 else axes[0])
+    ids_spec = P(data_spec[0])
+    return m, gather_axes, data_spec, ids_spec
 
 
 def two_round_known_opt_mesh(oracle, cfg: MRConfig, mesh: Mesh,
                              axes=("data",), data_spec=None):
     """Algorithm 4 on a device mesh.  Returns a jit-able fn
-    (feats_global, ids_global, key) -> SelectionResult, plus a RoundLog.
-
-    feats_global: (n, d) sharded over `axes` on dim 0.  The two all_gathers
-    inside the shard_map body *are* the two MapReduce rounds.
-    """
-    m = _machine_axes_size(mesh, axes)
-    k = cfg.k
-    s_cap, f_cap, _ = cfg.caps()
-    gather_axes = axes if len(axes) > 1 else axes[0]
-    data_spec = data_spec or P(axes if len(axes) > 1 else axes[0])
-    ids_spec = P(data_spec[0])
-
+    (feats_global, ids_global, opt, key) -> SelectionResult, plus a
+    RoundLog.  feats_global: (n, d) sharded over `axes` on dim 0.  The two
+    all_gathers inside the shard_map body *are* the two MapReduce rounds."""
+    m, gather_axes, data_spec, ids_spec = _mesh_setup(mesh, axes, data_spec)
     # Message rows carry the oracle's feature width (for TPOracle that is
     # the per-device shard width — exactly what each machine sends).
-    feat_dim = oracle.feat_dim
-    log = RoundLog()
-    log.add("gather-sample", buffer_bytes(s_cap, feat_dim),
-            buffer_bytes(m * s_cap, feat_dim))
-    log.add("gather-survivors", buffer_bytes(f_cap, feat_dim),
-            buffer_bytes(m * f_cap, feat_dim))
+    log = rounds.epoch_round_log(cfg, m, oracle.feat_dim, 1)
 
     def body(feats, ids, opt, key):
-        d = feats.shape[-1]
-        tau = opt / (2.0 * k)
-        midx = jax.lax.axis_index(gather_axes)
-        ky = jax.random.fold_in(key, midx)
-        valid = ids >= 0
-
-        sf, si, sv, sdrop = _local_sample(oracle, ky, feats, ids, valid,
-                                          cfg.sample_p, s_cap)
-        S = (jax.lax.all_gather(sf, gather_axes, tiled=True),
-             jax.lax.all_gather(si, gather_axes, tiled=True),
-             jax.lax.all_gather(sv, gather_axes, tiled=True))
-
-        st, sol, size = _empty_solution(oracle, k)
-        st, sol, size = _greedy(oracle, st, sol, size, *S, tau, k, cfg)
-
-        rf, ri, rv, rdrop = _local_filter(oracle, st, sol, feats, ids, valid,
-                                          tau, f_cap, size, k,
-                                          cfg.filter_chunk)
-        R = (jax.lax.all_gather(rf, gather_axes, tiled=True),
-             jax.lax.all_gather(ri, gather_axes, tiled=True),
-             jax.lax.all_gather(rv, gather_axes, tiled=True))
-
-        st, sol, size = _greedy(oracle, st, sol, size, *R, tau, k, cfg)
-        drops = jax.lax.psum(sdrop + rdrop, gather_axes)
-        return SelectionResult(sol, size, oracle.value(st), drops,
-                               jnp.zeros((), jnp.int32))
+        rr = MeshRounds(oracle, feats, ids, ids >= 0, gather_axes)
+        return _known_opt_select(oracle, rr, cfg, [opt / (2.0 * cfg.k)],
+                                 [key])
 
     from jax.experimental.shard_map import shard_map
     fn = shard_map(body, mesh=mesh,
@@ -636,90 +535,51 @@ def two_round_known_opt_mesh(oracle, cfg: MRConfig, mesh: Mesh,
     return run, log
 
 
-def two_round_mesh(oracle, cfg: MRConfig, mesh: Mesh,
-                   axes=("data",), data_spec=None):
-    """Theorem 8 on a device mesh: the dense grid (Alg. 6) and sparse
-    top-singletons path (Alg. 7) share the same two all_gather rounds; the
-    best solution over all thresholds/paths wins.  OPT is NOT an input —
-    this is the paper's headline no-duplication 2-round (1/2-eps) result,
-    and the production default of DistributedSelector.
+def multi_threshold_mesh(oracle, cfg: MRConfig, t: int, mesh: Mesh,
+                         axes=("data",), data_spec=None):
+    """Algorithm 5 on a device mesh: t epochs (2t all_gather phases) in one
+    program at the known-OPT schedule."""
+    m, gather_axes, data_spec, ids_spec = _mesh_setup(mesh, axes, data_spec)
+    log = rounds.epoch_round_log(cfg, m, oracle.feat_dim, t,
+                                 level_suffix=True)
 
-    Returns a jit-able (feats_global, ids_global, key) -> SelectionResult
-    (the ids/opt argument order of the known-OPT driver is kept by
-    accepting and ignoring an `opt` argument when provided via wrapper)."""
-    m = _machine_axes_size(mesh, axes)
-    k = cfg.k
-    s_cap, f_cap, t_cap = cfg.caps()
-    J = cfg.grid_size()
-    gather_axes = axes if len(axes) > 1 else axes[0]
-    data_spec = data_spec or P(axes if len(axes) > 1 else axes[0])
-    ids_spec = P(data_spec[0])
+    def body(feats, ids, opt, key):
+        rr = MeshRounds(oracle, feats, ids, ids >= 0, gather_axes)
+        return _known_opt_select(oracle, rr, cfg,
+                                 grids.alg5_schedule(opt, cfg.k, t),
+                                 rounds.chain_keys(key, t))
 
-    feat_dim = oracle.feat_dim
-    log = RoundLog()
-    log.add("gather-sample||top", buffer_bytes(s_cap + t_cap, feat_dim),
-            buffer_bytes(m * (s_cap + t_cap), feat_dim),
-            "dense || sparse round 1")
-    log.add("gather-survivors[grid]", J * buffer_bytes(f_cap, feat_dim),
-            J * buffer_bytes(m * f_cap, feat_dim), f"grid J={J}")
+    from jax.experimental.shard_map import shard_map
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(data_spec, ids_spec, P(), P()),
+                   out_specs=P(),
+                   check_rep=False)
+
+    def run(feats_global, ids_global, opt, key):
+        out = fn(feats_global, ids_global, jnp.asarray(opt, jnp.float32), key)
+        return SelectionResult(*out)
+
+    return run, log
+
+
+def multi_epoch_mesh(oracle, cfg: MRConfig, mesh: Mesh, axes=("data",),
+                     data_spec=None, epochs: Optional[int] = None,
+                     schedule_kind: Optional[str] = None):
+    """The multi-epoch (1 - 1/e - eps) driver on a device mesh: E epochs
+    of the unknown-OPT grid engine (2E all_gather phases), sparse path
+    riding the same rounds.  ``epochs=1`` reproduces two_round_mesh
+    bit-for-bit.  Returns a jit-able (feats_global, ids_global, key) ->
+    SelectionResult plus the RoundLog."""
+    E = cfg.n_epochs(epochs)
+    kind = schedule_kind or cfg.schedule_kind
+    m, gather_axes, data_spec, ids_spec = _mesh_setup(mesh, axes, data_spec)
+    log = rounds.epoch_round_log(cfg, m, oracle.feat_dim, E, with_grid=True,
+                                 with_top=True)
 
     def body(feats, ids, key):
-        midx = jax.lax.axis_index(gather_axes)
-        ky = jax.random.fold_in(key, midx)
-        valid = ids >= 0
-
-        # ---- round 1: sample (dense) and top singletons (sparse) --------
-        sf, si, sv, sdrop = _local_sample(oracle, ky, feats, ids, valid,
-                                          cfg.sample_p, s_cap)
-        S = tuple(jax.lax.all_gather(x, gather_axes, tiled=True)
-                  for x in (sf, si, sv))
-        tf, ti, tv, _ = _local_top(oracle, feats, ids, valid, t_cap)
-        Ltop = tuple(jax.lax.all_gather(x, gather_axes, tiled=True)
-                     for x in (tf, ti, tv))
-
-        # ---- dense path: per-tau greedy on the replicated sample --------
-        taus, tau_fb_d = _tau_grid(oracle, cfg, *S)
-
-        def phase1(tau):
-            st, sol, size = _empty_solution(oracle, k)
-            return _greedy(oracle, st, sol, size, *S, tau, k, cfg)
-
-        st_j, sol_j, size_j = jax.vmap(phase1)(taus)
-
-        # ---- round 2: per-tau survivors of the local shard ---------------
-        rf, ri, rv, rdrop = jax.vmap(
-            lambda st, sol, size, tau: _local_filter(
-                oracle, st, sol, feats, ids, valid, tau, f_cap, size, k,
-                cfg.filter_chunk)
-        )(st_j, sol_j, size_j, taus)
-        Rf = _gather_packed(rf, gather_axes, lead=1)
-        Ri = _gather_packed(ri, gather_axes, lead=1)
-        Rv = _gather_packed(rv, gather_axes, lead=1)
-
-        def phase2(st, sol, size, f, i, v, tau):
-            st, sol, size = _greedy(oracle, st, sol, size, f, i, v, tau, k, cfg)
-            return sol, size, oracle.value(st)
-
-        dsol, dsize, dval = jax.vmap(phase2)(st_j, sol_j, size_j,
-                                             Rf, Ri, Rv, taus)
-
-        # ---- sparse path: per-tau greedy on the top singletons ----------
-        taus_s, tau_fb_s = _tau_grid(oracle, cfg, *Ltop)
-
-        def sparse_tau(tau):
-            st, sol, size = _empty_solution(oracle, k)
-            st, sol, size = _greedy(oracle, st, sol, size, *Ltop, tau, k, cfg)
-            return sol, size, oracle.value(st)
-
-        ssol, ssize, sval = jax.vmap(sparse_tau)(taus_s)
-
-        sols = jnp.concatenate([dsol, ssol], axis=0)
-        sizes = jnp.concatenate([dsize, ssize], axis=0)
-        vals = jnp.concatenate([dval, sval], axis=0)
-        best = jnp.argmax(vals)
-        drops = jax.lax.psum(sdrop + jnp.sum(rdrop), gather_axes)
-        return SelectionResult(sols[best], sizes[best], vals[best], drops,
-                               tau_fb_d + tau_fb_s)
+        rr = MeshRounds(oracle, feats, ids, ids >= 0, gather_axes)
+        return _epoch_select(oracle, rr, cfg, _epoch_keys_split(key, E), E,
+                             kind)
 
     from jax.experimental.shard_map import shard_map
     fn = shard_map(body, mesh=mesh,
@@ -732,6 +592,18 @@ def two_round_mesh(oracle, cfg: MRConfig, mesh: Mesh,
         return SelectionResult(*out)
 
     return run, log
+
+
+def two_round_mesh(oracle, cfg: MRConfig, mesh: Mesh,
+                   axes=("data",), data_spec=None):
+    """Theorem 8 on a device mesh: the dense grid (Alg. 6) and sparse
+    top-singletons path (Alg. 7) share the same two all_gather rounds; the
+    best solution over all thresholds/paths wins.  OPT is NOT an input —
+    this is the paper's headline no-duplication 2-round (1/2-eps) result,
+    the production default of DistributedSelector, and exactly the 1-epoch
+    instantiation of multi_epoch_mesh."""
+    return multi_epoch_mesh(oracle, cfg, mesh, axes, data_spec=data_spec,
+                            epochs=1)
 
 
 def two_round_batch_mesh(oracle, cfg: MRConfig, mesh: Mesh,
@@ -754,84 +626,48 @@ def two_round_batch_mesh(oracle, cfg: MRConfig, mesh: Mesh,
     RoundLog parameterized by ``n_queries``.  The jitted fn specializes on
     Q (a shape), so a service should pin its slot count.
     """
-    m = _machine_axes_size(mesh, axes)
+    m, gather_axes, data_spec, ids_spec = _mesh_setup(mesh, axes, data_spec)
     K = cfg.k
     s_cap, f_cap, t_cap = cfg.caps()
-    J = cfg.grid_size()
-    gather_axes = axes if len(axes) > 1 else axes[0]
-    data_spec = data_spec or P(axes if len(axes) > 1 else axes[0])
-    ids_spec = P(data_spec[0])
     feat_dim = oracle.feat_dim
-
     shared_stats = not consumes_query_params(oracle)
 
     def round_log(n_queries: int) -> RoundLog:
-        Q = n_queries
-        n_tops = 1 if shared_stats else Q
-        log = RoundLog()
-        log.add("gather-sample||top[Q]",
-                buffer_bytes(s_cap, feat_dim)
-                + n_tops * buffer_bytes(t_cap, feat_dim),
-                buffer_bytes(m * s_cap, feat_dim)
-                + n_tops * buffer_bytes(m * t_cap, feat_dim),
-                f"Q={Q}: shared sample {buffer_bytes(m * s_cap, feat_dim)}B "
-                f"+ {'shared' if n_tops == 1 else 'per-query'} top "
-                f"{buffer_bytes(m * t_cap, feat_dim)}B")
-        log.add("gather-survivors[QxJ]",
-                Q * J * buffer_bytes(f_cap, feat_dim),
-                Q * J * buffer_bytes(m * f_cap, feat_dim),
-                f"per-query {J * buffer_bytes(m * f_cap, feat_dim)}B "
-                f"grid J={J}")
-        return log
+        return _batch_round_log(cfg, m, feat_dim, n_queries, shared_stats)
 
     def body(feats, ids, qk, qlam, qalpha, key):
-        midx = jax.lax.axis_index(gather_axes)
         valid = ids >= 0
+        rr = MeshRounds(oracle, feats, ids, valid, gather_axes)
 
         # ---- round 1: shared sample + per-query tops, one gather --------
         # (same key derivation as two_round_mesh, so a Q=1 batch with
         # k=cfg.k and default hyper-parameters reproduces it exactly)
-        ky = jax.random.fold_in(key, midx)
-        sf, si, sv, sdrop = _local_sample(oracle, ky, feats, ids, valid,
-                                          cfg.sample_p, s_cap)
-        S = tuple(jax.lax.all_gather(x, gather_axes, tiled=True)
-                  for x in (sf, si, sv))
+        S, sdrop = rr.sample(key, cfg.sample_p, s_cap)
         if shared_stats:
             # query-invariant oracle: ONE top-singleton message + ONE max-
             # singleton estimate serve the whole batch (budgets only
             # rescale the grid); the round-1 gather shrinks accordingly
-            tf, ti, tv, _ = _local_top(oracle, feats, ids, valid, t_cap)
-            Ltf = _gather_packed(tf, gather_axes)            # (m*t_cap, d)
-            Lti = _gather_packed(ti, gather_axes)
-            Ltv = _gather_packed(tv, gather_axes)
+            (Ltf, Lti, Ltv), _ = rr.tops(oracle, t_cap)
             v_dense = _max_singleton(oracle, S[0], S[2])
             v_sparse = _max_singleton(oracle, Ltf, Ltv)
             top_axis = None
         else:
             tf, ti, tv, _ = jax.vmap(
-                lambda lam, alpha: _local_top(bind_query(oracle, lam, alpha),
-                                              feats, ids, valid, t_cap)
+                lambda lam, alpha: rounds.local_top(
+                    bind_query(oracle, lam, alpha), feats, ids, valid, t_cap)
             )(qlam, qalpha)
-            Ltf = _gather_packed(tf, gather_axes, lead=1)            # (Q, m*t_cap, d)
-            Lti = _gather_packed(ti, gather_axes, lead=1)
-            Ltv = _gather_packed(tv, gather_axes, lead=1)
+            Ltf = rounds.gather_packed(tf, gather_axes, lead=1)  # (Q, m*t_cap, d)
+            Lti = rounds.gather_packed(ti, gather_axes, lead=1)
+            Ltv = rounds.gather_packed(tv, gather_axes, lead=1)
             top_axis = 0
 
         # ---- central phase 1 + local survivor filter, per query ---------
         def phase_a(kq, lam, alpha):
             orc = bind_query(oracle, lam, alpha)
-            if shared_stats:
-                taus, fb_d = _tau_grid_from_v(cfg, v_dense, kq)
-            else:
-                taus, fb_d = _tau_grid(orc, cfg, *S, k=kq)
-
-            def p1(tau):
-                st, sol, size = _empty_solution(orc, K)
-                return _greedy(orc, st, sol, size, *S, tau, K, cfg, k_dyn=kq)
-
-            st_j, sol_j, size_j = jax.vmap(p1)(taus)
+            taus, fb_d, (st_j, sol_j, size_j) = _query_grid_a(
+                orc, cfg, S, K, kq, v_dense if shared_stats else None)
             rf, ri, rv, rdrop = jax.vmap(
-                lambda st, sol, size, tau: _local_filter(
+                lambda st, sol, size, tau: rounds.local_filter(
                     orc, st, sol, feats, ids, valid, tau, f_cap, size, kq,
                     cfg.filter_chunk)
             )(st_j, sol_j, size_j, taus)
@@ -842,46 +678,25 @@ def two_round_batch_mesh(oracle, cfg: MRConfig, mesh: Mesh,
          rdrop_q) = jax.vmap(phase_a)(qk, qlam, qalpha)
 
         # ---- round 2: ONE gather of the (Q, J, cap) survivor stack ------
-        Rf = _gather_packed(rf, gather_axes, lead=2)                 # (Q, J, m*f_cap, d)
-        Ri = _gather_packed(ri, gather_axes, lead=2)
-        Rv = _gather_packed(rv, gather_axes, lead=2)
+        Rf = rounds.gather_packed(rf, gather_axes, lead=2)  # (Q, J, m*f_cap, d)
+        Ri = rounds.gather_packed(ri, gather_axes, lead=2)
+        Rv = rounds.gather_packed(rv, gather_axes, lead=2)
 
         # ---- central phase 2 + sparse path, per query -------------------
         def phase_b(kq, lam, alpha, taus, st_j, sol_j, size_j, f_j, i_j, v_j,
                     ltf, lti, ltv):
             orc = bind_query(oracle, lam, alpha)
-
-            def p2(st, sol, size, f, i, v, tau):
-                st, sol, size = _greedy(orc, st, sol, size, f, i, v, tau, K,
-                                        cfg, k_dyn=kq)
-                return sol, size, orc.value(st)
-
-            dsol, dsize, dval = jax.vmap(p2)(st_j, sol_j, size_j,
-                                             f_j, i_j, v_j, taus)
-            if shared_stats:
-                taus_s, fb_s = _tau_grid_from_v(cfg, v_sparse, kq)
-            else:
-                taus_s, fb_s = _tau_grid(orc, cfg, ltf, lti, ltv, k=kq)
-
-            def sp(tau):
-                st, sol, size = _empty_solution(orc, K)
-                st, sol, size = _greedy(orc, st, sol, size, ltf, lti, ltv,
-                                        tau, K, cfg, k_dyn=kq)
-                return sol, size, orc.value(st)
-
-            ssol, ssize, sval = jax.vmap(sp)(taus_s)
-            sols = jnp.concatenate([dsol, ssol], axis=0)
-            sizes = jnp.concatenate([dsize, ssize], axis=0)
-            vals = jnp.concatenate([dval, sval], axis=0)
-            best = jnp.argmax(vals)
-            return sols[best], sizes[best], vals[best], fb_s
+            return _query_grid_b(orc, cfg, K, kq, taus,
+                                 (st_j, sol_j, size_j), (f_j, i_j, v_j),
+                                 (ltf, lti, ltv),
+                                 v_sparse if shared_stats else None)
 
         sol_b, size_b, val_b, fb_s_q = jax.vmap(
             phase_b,
             in_axes=(0,) * 10 + (top_axis,) * 3)(
             qk, qlam, qalpha, taus_q, st_q, sol_q, size_q, Rf, Ri, Rv,
             Ltf, Lti, Ltv)
-        drops = jax.lax.psum(sdrop + rdrop_q, gather_axes)
+        drops = rr.finalize_drops(sdrop + rdrop_q)
         return SelectionResult(sol_b, size_b, val_b, drops,
                                fb_d_q + fb_s_q)
 
@@ -897,59 +712,3 @@ def two_round_batch_mesh(oracle, cfg: MRConfig, mesh: Mesh,
         return SelectionResult(*out)
 
     return run, round_log
-
-
-def multi_threshold_mesh(oracle, cfg: MRConfig, t: int, mesh: Mesh,
-                         axes=("data",), data_spec=None):
-    """Algorithm 5 on a device mesh: 2t all_gather phases in one program."""
-    m = _machine_axes_size(mesh, axes)
-    k = cfg.k
-    s_cap, f_cap, _ = cfg.caps()
-    gather_axes = axes if len(axes) > 1 else axes[0]
-    data_spec = data_spec or P(axes if len(axes) > 1 else axes[0])
-    ids_spec = P(data_spec[0])
-
-    feat_dim = oracle.feat_dim
-    log = RoundLog()
-    for ell in range(1, t + 1):
-        log.add(f"gather-sample-l{ell}", buffer_bytes(s_cap, feat_dim),
-                buffer_bytes(m * s_cap, feat_dim))
-        log.add(f"gather-survivors-l{ell}", buffer_bytes(f_cap, feat_dim),
-                buffer_bytes(m * f_cap, feat_dim))
-
-    def body(feats, ids, opt, key):
-        midx = jax.lax.axis_index(gather_axes)
-        valid = ids >= 0
-        st, sol, size = _empty_solution(oracle, k)
-        drops = jnp.zeros((), jnp.int32)
-        for ell in range(1, t + 1):
-            alpha = (1.0 - 1.0 / (t + 1)) ** ell * opt / k
-            key, ks = jax.random.split(key)
-            ky = jax.random.fold_in(ks, midx)
-            sf, si, sv, sdrop = _local_sample(oracle, ky, feats, ids, valid,
-                                              cfg.sample_p, s_cap)
-            S = tuple(jax.lax.all_gather(x, gather_axes, tiled=True)
-                      for x in (sf, si, sv))
-            st, sol, size = _greedy(oracle, st, sol, size, *S, alpha, k, cfg)
-            rf, ri, rv, rdrop = _local_filter(oracle, st, sol, feats, ids,
-                                              valid, alpha, f_cap, size, k,
-                                              cfg.filter_chunk)
-            R = tuple(jax.lax.all_gather(x, gather_axes, tiled=True)
-                      for x in (rf, ri, rv))
-            st, sol, size = _greedy(oracle, st, sol, size, *R, alpha, k, cfg)
-            drops = drops + sdrop + rdrop
-        drops = jax.lax.psum(drops, gather_axes)
-        return SelectionResult(sol, size, oracle.value(st), drops,
-                               jnp.zeros((), jnp.int32))
-
-    from jax.experimental.shard_map import shard_map
-    fn = shard_map(body, mesh=mesh,
-                   in_specs=(data_spec, ids_spec, P(), P()),
-                   out_specs=P(),
-                   check_rep=False)
-
-    def run(feats_global, ids_global, opt, key):
-        out = fn(feats_global, ids_global, jnp.asarray(opt, jnp.float32), key)
-        return SelectionResult(*out)
-
-    return run, log

@@ -1,9 +1,31 @@
-"""Round & communication accounting for the MapReduce drivers.
+"""The round-primitives layer: backend-parameterized MapReduce building
+blocks, the epoch engine, and round/communication accounting.
+
+Every driver in ``mapreduce.py`` is some composition of the same five
+moves — Bernoulli-sample locally, filter locally at a threshold, ship the
+top-O(k) singletons, gather the packed messages, accept centrally with
+``threshold_greedy`` — repeated per threshold level.  This module defines
+those moves ONCE, behind two interchangeable backends:
+
+* ``SimRounds``  — the m machines are a leading vmap axis on one device
+  (the executable MRC model used by tests/benchmarks);
+* ``MeshRounds`` — the m machines are mesh axes inside a ``shard_map``
+  body; a gather is a ``lax.all_gather`` and overflow counts finalize
+  with a ``lax.psum``.
+
+``run_epochs`` executes a descending threshold schedule tau_0 > tau_1 > ...
+on either backend, carrying the partial solution across epochs: each epoch
+is one (sample -> central accept -> filter -> gather -> central accept)
+level, i.e. two MapReduce rounds.  Algorithm 4 is the 1-epoch scalar
+instantiation, Algorithm 5 is the t-epoch known-OPT schedule, Algorithm 6
+is 1 epoch vmapped over the unknown-OPT tau grid, and the paper's
+(1 - 1/e - eps) multi-epoch driver is E = ceil(1/eps) epochs over the
+same grid.
 
 The paper's complexity measure is the number of synchronous communication
 rounds (and the per-machine message volume).  On a TPU pod a "round" is a
-collective phase; the drivers in ``mapreduce.py`` construct a RoundLog from
-their *static* buffer shapes, so the claimed "2 rounds" / "2t rounds" and the
+collective phase; the drivers construct a RoundLog from their *static*
+buffer shapes, so the claimed "2 rounds" / "2t rounds" and the
 Lemma-2/Lemma-6 memory bounds are checkable quantities, not comments.
 """
 
@@ -11,6 +33,12 @@ from __future__ import annotations
 
 import dataclasses
 from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.threshold import (exclude_ids, pack_by_mask, threshold_filter,
+                                  threshold_greedy)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,3 +98,323 @@ class RoundLog:
 def buffer_bytes(cap: int, feat_dim: int, itemsize: int = 4) -> int:
     """Bytes of one packed message buffer: features + ids + validity."""
     return cap * (feat_dim * itemsize + 4 + 1)
+
+
+def log_gather(log: RoundLog, name: str, cap: int, m: int, feat_dim: int,
+               detail: str = "") -> None:
+    """Record one gather round of an m-machine packed message of ``cap``
+    rows — the per-machine/total byte-accounting idiom every driver (and
+    the streaming sieve) repeats."""
+    log.add(name, buffer_bytes(cap, feat_dim), buffer_bytes(m * cap, feat_dim),
+            detail)
+
+
+def epoch_round_log(cfg, m: int, feat_dim: int, epochs: int,
+                    with_grid: bool = False, with_top: bool = False,
+                    level_suffix=None) -> RoundLog:
+    """The static RoundLog of an epoch-engine driver: 2 records per epoch
+    (sample gather, survivor gather), identical for both backends by
+    construction.  ``with_grid`` multiplies the survivor round by the
+    unknown-OPT tau-grid width; ``with_top`` rides the Algorithm-7
+    top-singleton message along with the first sample gather (the sparse
+    path shares the same rounds).  ``level_suffix`` forces/suppresses the
+    per-level ``-l{e}`` name suffix (default: only when epochs > 1)."""
+    s_cap, f_cap, t_cap = cfg.caps()
+    J = cfg.grid_size() if with_grid else 1
+    levels = (epochs > 1) if level_suffix is None else level_suffix
+    log = RoundLog()
+    for e in range(1, epochs + 1):
+        sfx = f"-l{e}" if levels else ""
+        if with_top and e == 1:
+            log_gather(log, f"gather-sample||top{sfx}", s_cap + t_cap, m,
+                       feat_dim, "dense || sparse round 1")
+        else:
+            log_gather(log, f"gather-sample{sfx}", s_cap, m, feat_dim)
+        if with_grid:
+            log.add(f"gather-survivors[grid]{sfx}",
+                    J * buffer_bytes(f_cap, feat_dim),
+                    J * buffer_bytes(m * f_cap, feat_dim), f"grid J={J}")
+        else:
+            log_gather(log, f"gather-survivors{sfx}", f_cap, m, feat_dim)
+    return log
+
+
+# ---------------------------------------------------------------------------
+# local round halves (what one machine computes before a gather)
+# ---------------------------------------------------------------------------
+
+def local_sample(oracle, key, feats, ids, valid, p, cap):
+    """Algorithm 3 local half: Bernoulli(p) sample, packed."""
+    mask = (jax.random.uniform(key, ids.shape) < p) & valid
+    return pack_by_mask(feats, ids, mask, cap)
+
+
+def local_filter(oracle, st, sol, feats, ids, valid, tau, cap, size=None,
+                 k=None, chunk=None):
+    """Algorithm 2 local half: survivors of ThresholdFilter, packed.
+    ``chunk`` (from MRConfig.filter_chunk) tiles the marginal sweep so the
+    filter never materializes a full-block prep aux.
+
+    Lemma 2's escape hatch: if the partial greedy solution already has k
+    elements, the algorithm is done and the machines send *nothing* to the
+    central machine ("In that case, we are done and do not send anything").
+    Without this, low thresholds in the unknown-OPT grid overflow their
+    whp-sized survivor buffers."""
+    v = exclude_ids(ids, valid, sol)
+    mask = threshold_filter(oracle, st, feats, v, tau, chunk=chunk)
+    if size is not None and k is not None:
+        mask = mask & (size < k)
+    return pack_by_mask(feats, ids, mask, cap)
+
+
+def local_top(oracle, feats, ids, valid, cap):
+    """Algorithm 7 local half: top-`cap` elements by singleton value.
+
+    Truncation to the O(k) largest is the algorithm's *intended* behaviour
+    ("send the O(k) largest elements on each machine"), not a buffer
+    overflow — so n_dropped is reported as 0 here.  The sparse-path
+    guarantee (Lemma 7) rests on the balls-and-bins argument that all
+    globally-large elements survive this cut whp."""
+    st0 = oracle.init_state()
+    gains = oracle.marginals(st0, oracle.prep(st0, feats))
+    f, i, v, _ = pack_by_mask(feats, ids, valid, cap, priority=gains)
+    return f, i, v, jnp.zeros((), jnp.int32)
+
+
+def gather_packed(x, gather_axes, lead: int = 0):
+    """all_gather a packed message buffer inside a shard_map body,
+    concatenating the per-machine buffers on the capacity axis.  ``lead``
+    leading batch axes (e.g. a threshold-grid axis, or (query, grid) in
+    the batched driver) are kept in place — the whole stack moves in one
+    collective."""
+    if lead == 0:
+        return jax.lax.all_gather(x, gather_axes, tiled=True)
+    g = jax.lax.all_gather(x, gather_axes)   # (m, *lead, cap, ...)
+    g = jnp.moveaxis(g, 0, lead)             # (*lead, m, cap, ...)
+    return g.reshape(g.shape[:lead]
+                     + (g.shape[lead] * g.shape[lead + 1],)
+                     + g.shape[lead + 2:])
+
+
+# ---------------------------------------------------------------------------
+# backends: the same round primitives on the sim and mesh substrates
+# ---------------------------------------------------------------------------
+
+class SimRounds:
+    """Round primitives with the m machines as a leading vmap axis.
+
+    Holds the (m, n/m, ...) sharded ground set; every primitive returns the
+    *gathered* message triple (feats, ids, valid) with the machine axis
+    flattened into the capacity axis — exactly what the central machine
+    sees — plus the summed overflow count."""
+
+    def __init__(self, oracle, feats_mk, ids_mk, valid_mk):
+        self.oracle = oracle
+        self.feats_mk, self.ids_mk, self.valid_mk = feats_mk, ids_mk, valid_mk
+        self.m, self.n_local, self.feat_dim = feats_mk.shape
+
+    def sample(self, key, p, cap):
+        m, d = self.m, self.feat_dim
+        keys = jax.random.split(key, m)
+        sf, si, sv, sdrop = jax.vmap(
+            lambda ky, f, i, v: local_sample(self.oracle, ky, f, i, v, p, cap)
+        )(keys, self.feats_mk, self.ids_mk, self.valid_mk)
+        return ((sf.reshape(m * cap, d), si.reshape(-1), sv.reshape(-1)),
+                jnp.sum(sdrop))
+
+    def tops(self, oracle, cap):
+        m, d = self.m, self.feat_dim
+        tf, ti, tv, tdrop = jax.vmap(
+            lambda f, i, v: local_top(oracle, f, i, v, cap)
+        )(self.feats_mk, self.ids_mk, self.valid_mk)
+        return ((tf.reshape(m * cap, d), ti.reshape(-1), tv.reshape(-1)),
+                jnp.sum(tdrop))
+
+    def filter(self, oracle, st, sol, size, tau, cap, k, chunk):
+        m, d = self.m, self.feat_dim
+        rf, ri, rv, rdrop = jax.vmap(
+            lambda f, i, v: local_filter(oracle, st, sol, f, i, v, tau, cap,
+                                         size, k, chunk)
+        )(self.feats_mk, self.ids_mk, self.valid_mk)
+        return ((rf.reshape(m * cap, d), ri.reshape(-1), rv.reshape(-1)),
+                jnp.sum(rdrop))
+
+    def filter_grid(self, oracle, st_j, sol_j, size_j, taus, cap, k, chunk):
+        """Per-tau survivor filter for a (J,)-stacked grid of partial
+        solutions; machines outer, taus inner, then transposed so each
+        grid lane sees its own (m*cap,) gathered message."""
+        m, d = self.m, self.feat_dim
+        J = taus.shape[0]
+
+        def local_all(f, i, v):
+            return jax.vmap(
+                lambda st, sol, size, tau: local_filter(
+                    oracle, st, sol, f, i, v, tau, cap, size, k, chunk)
+            )(st_j, sol_j, size_j, taus)
+
+        rf, ri, rv, rdrop = jax.vmap(local_all)(self.feats_mk, self.ids_mk,
+                                                self.valid_mk)
+        # (m, J, cap, d) -> (J, m*cap, d)
+        rf = rf.transpose(1, 0, 2, 3).reshape(J, m * cap, d)
+        ri = ri.transpose(1, 0, 2).reshape(J, m * cap)
+        rv = rv.transpose(1, 0, 2).reshape(J, m * cap)
+        return (rf, ri, rv), jnp.sum(rdrop)
+
+    def finalize_drops(self, drops):
+        return drops
+
+
+class MeshRounds:
+    """Round primitives inside a shard_map body: this device IS one
+    machine, a gather is a lax.all_gather over the mesh axes, and overflow
+    counts stay machine-local until ``finalize_drops`` psums them once."""
+
+    def __init__(self, oracle, feats, ids, valid, gather_axes):
+        self.oracle = oracle
+        self.feats, self.ids, self.valid = feats, ids, valid
+        self.gather_axes = gather_axes
+        self.machine_index = jax.lax.axis_index(gather_axes)
+
+    def _gather3(self, f, i, v, lead: int = 0):
+        return tuple(gather_packed(x, self.gather_axes, lead=lead)
+                     for x in (f, i, v))
+
+    def sample(self, key, p, cap):
+        ky = jax.random.fold_in(key, self.machine_index)
+        sf, si, sv, sdrop = local_sample(self.oracle, ky, self.feats,
+                                         self.ids, self.valid, p, cap)
+        return self._gather3(sf, si, sv), sdrop
+
+    def tops(self, oracle, cap):
+        tf, ti, tv, tdrop = local_top(oracle, self.feats, self.ids,
+                                      self.valid, cap)
+        return self._gather3(tf, ti, tv), tdrop
+
+    def filter(self, oracle, st, sol, size, tau, cap, k, chunk):
+        rf, ri, rv, rdrop = local_filter(oracle, st, sol, self.feats,
+                                         self.ids, self.valid, tau, cap,
+                                         size, k, chunk)
+        return self._gather3(rf, ri, rv), rdrop
+
+    def filter_grid(self, oracle, st_j, sol_j, size_j, taus, cap, k, chunk):
+        rf, ri, rv, rdrop = jax.vmap(
+            lambda st, sol, size, tau: local_filter(
+                oracle, st, sol, self.feats, self.ids, self.valid, tau, cap,
+                size, k, chunk)
+        )(st_j, sol_j, size_j, taus)
+        return self._gather3(rf, ri, rv, lead=1), jnp.sum(rdrop)
+
+    def finalize_drops(self, drops):
+        return jax.lax.psum(drops, self.gather_axes)
+
+
+# ---------------------------------------------------------------------------
+# central-phase pieces and the epoch engine
+# ---------------------------------------------------------------------------
+
+def empty_solution(oracle, k):
+    return (oracle.init_state(),
+            jnp.full((k,), -1, jnp.int32),
+            jnp.zeros((), jnp.int32))
+
+
+def greedy_step(oracle, carry, cands, tau, k, cfg, k_dyn=None):
+    """One central accept: extend the carried (state, sol, size) with the
+    gathered candidate triple at threshold tau via ThresholdGreedy
+    (engine/accept/chunk from cfg), excluding already-selected ids."""
+    st, sol, size = carry
+    feats, ids, valid = cands
+    valid = exclude_ids(ids, valid & (ids >= 0), sol)
+    return threshold_greedy(oracle, st, sol, size, feats, ids, valid, tau, k,
+                            accept=cfg.accept, engine=cfg.engine,
+                            chunk=cfg.chunk, k_dyn=k_dyn)
+
+
+def grid_phase1(oracle, S, taus, k, cfg, k_dyn=None):
+    """First central accept of a grid epoch: an independent empty-start
+    greedy per threshold guess (the paper's parallel tau copies)."""
+    def p1(tau):
+        return greedy_step(oracle, empty_solution(oracle, k), S, tau, k, cfg,
+                           k_dyn)
+    return jax.vmap(p1)(taus)
+
+
+def sparse_sweep(oracle, L, schedule, cfg, k_dyn=None):
+    """Algorithm 7's central half, generalized to a schedule: each guess
+    lane runs its full descending threshold sequence over the gathered
+    top-singleton pool — purely central, no extra rounds.  ``schedule`` is
+    a list of per-level (G,) threshold columns.  Returns per-lane
+    (sol (G, k), size (G,), value (G,))."""
+    k = cfg.k
+
+    def per_guess(*taus):
+        carry = empty_solution(oracle, k)
+        for tau in taus:
+            carry = greedy_step(oracle, carry, L, tau, k, cfg, k_dyn)
+        st, sol, size = carry
+        return sol, size, oracle.value(st)
+
+    return jax.vmap(per_guess)(*schedule)
+
+
+def chain_keys(key, n: int):
+    """The historical multi-threshold key chain: split once per level and
+    use the second half, preserving the drivers' bit-exact sampling."""
+    ks = []
+    for _ in range(n):
+        key, k2 = jax.random.split(key)
+        ks.append(k2)
+    return ks
+
+
+def run_epochs(oracle, rounds, schedule, epoch_keys, cfg, k_dyn=None,
+               first_sample=None):
+    """The epoch engine: execute a descending threshold schedule on a
+    round-primitives backend, carrying the partial solution across epochs.
+
+    Each epoch (= 2 MapReduce rounds) at level threshold tau_e:
+      sample -> central accept at tau_e -> local filter at tau_e
+             -> gather survivors -> central accept at tau_e.
+
+    ``schedule`` is a list of per-epoch thresholds, each either a scalar
+    (one sequential solution — Algorithms 4/5) or a (G,) column of guesses
+    (G vmapped lanes sharing every epoch's sample — Algorithm 6 and the
+    unknown-OPT multi-epoch driver; the grid axis leads the carry).
+    ``first_sample`` optionally injects epoch 1's already-gathered sample
+    (the unknown-OPT drivers derive the tau grid from it before the first
+    accept).  Returns ((state, sol, size), drops); drops are summed but
+    NOT finalized — callers pass them through rounds.finalize_drops once.
+    """
+    k = cfg.k
+    s_cap, f_cap, _ = cfg.caps()
+    keff = k if k_dyn is None else k_dyn
+    grid = jnp.ndim(schedule[0]) == 1
+    carry = None
+    drops = jnp.zeros((), jnp.int32)
+    for e, taus in enumerate(schedule):
+        if e == 0 and first_sample is not None:
+            S, sdrop = first_sample
+        else:
+            S, sdrop = rounds.sample(epoch_keys[e], cfg.sample_p, s_cap)
+        if grid:
+            if carry is None:
+                carry = grid_phase1(oracle, S, taus, k, cfg, k_dyn)
+            else:
+                carry = jax.vmap(
+                    lambda c, t: greedy_step(oracle, c, S, t, k, cfg, k_dyn)
+                )(carry, taus)
+            R, rdrop = rounds.filter_grid(oracle, *carry, taus, f_cap, keff,
+                                          cfg.filter_chunk)
+            carry = jax.vmap(
+                lambda c, cand, t: greedy_step(oracle, c, cand, t, k, cfg,
+                                               k_dyn)
+            )(carry, R, taus)
+        else:
+            if carry is None:
+                carry = empty_solution(oracle, k)
+            carry = greedy_step(oracle, carry, S, taus, k, cfg, k_dyn)
+            R, rdrop = rounds.filter(oracle, *carry, taus, f_cap, keff,
+                                     cfg.filter_chunk)
+            carry = greedy_step(oracle, carry, R, taus, k, cfg, k_dyn)
+        drops = drops + sdrop + rdrop
+    return carry, drops

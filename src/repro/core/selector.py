@@ -22,9 +22,14 @@ from repro.core import mapreduce as mr
 class SelectorSpec:
     k: int
     oracle: str = "feature_coverage"   # see ORACLE_NAMES for the full zoo
-    algorithm: str = "two_round"       # | multi_threshold | two_round_known_opt
+    algorithm: str = "two_round"       # | multi_epoch | multi_threshold
+    #                                    | two_round_known_opt
     t: int = 1                         # thresholds for multi_threshold
     eps: float = 0.15
+    epochs: Optional[int] = None       # multi_epoch levels; None derives
+    #                                    ceil(1/eps) (the 1-1/e-eps setting)
+    schedule_kind: str = "paper"       # epoch schedule family, see
+    #                                    grids.SCHEDULE_KINDS
     accept: str = "first"
     engine: str = "dense"              # ThresholdGreedy engine:
     #                                    "dense" | "lazy" | "fused"
@@ -109,7 +114,9 @@ class DistributedSelector:
             m *= mesh.shape[a]
         self.cfg = mr.MRConfig(k=spec.k, n_total=n_total, n_machines=m,
                                eps=spec.eps, accept=spec.accept,
-                               engine=spec.engine, chunk=spec.chunk)
+                               engine=spec.engine, chunk=spec.chunk,
+                               epochs=spec.epochs,
+                               schedule_kind=spec.schedule_kind)
         self.cfg.require_even_shards(where="DistributedSelector data sharding")
         tp = mesh.shape.get("model", 1)
         self.tp = (spec.oracle_tp and tp > 1 and feat_dim % tp == 0 and
@@ -123,7 +130,14 @@ class DistributedSelector:
             self.oracle = make_oracle(spec, feat_dim, reference, total)
             self._data_spec = P(self.axes if len(self.axes) > 1
                                 else self.axes[0])
-        if spec.algorithm == "multi_threshold":
+        if spec.algorithm == "multi_epoch":
+            # the (1-1/e-eps) driver: OPT-free like two_round, of which it
+            # is the E-epoch generalization (E=1 IS two_round, bit-for-bit)
+            self._run, self.round_log = mr.multi_epoch_mesh(
+                self.oracle, self.cfg, mesh, self.axes,
+                data_spec=self._data_spec)
+            self._needs_opt = False
+        elif spec.algorithm == "multi_threshold":
             self._run, self.round_log = mr.multi_threshold_mesh(
                 self.oracle, self.cfg, spec.t, mesh, self.axes,
                 data_spec=self._data_spec)
@@ -174,12 +188,14 @@ class DistributedSelector:
         (queries.k <= spec.k) and oracle hyper-parameters.  Returns a
         SelectionResult whose fields carry a leading (Q,) axis.
 
-        Only the OPT-free two_round algorithm batches (the known-OPT
-        variants would need a per-query opt estimate round of their own).
-        The compiled program specializes on Q — a serving loop should pin
-        its slot count and mask unused slots with k=0."""
-        assert self.spec.algorithm == "two_round", \
-            "select_batch requires algorithm='two_round'"
+        Only the OPT-free epoch drivers batch (the known-OPT variants
+        would need a per-query opt estimate round of their own); the batch
+        path always runs the 1-epoch (two_round) pipeline.  The compiled
+        program specializes on Q — a serving loop should pin its slot
+        count and mask unused slots with k=0."""
+        assert self.spec.algorithm in ("two_round", "multi_epoch"), \
+            "select_batch requires an OPT-free algorithm " \
+            "(two_round or multi_epoch)"
         k_max = int(jnp.max(queries.k))
         assert k_max <= self.spec.k, \
             (f"select_batch: per-query budget {k_max} exceeds the slot "

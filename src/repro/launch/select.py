@@ -30,7 +30,7 @@ def main() -> None:
                              "weighted_coverage", "saturated_coverage",
                              "graph_cut", "log_det", "exemplar"])
     ap.add_argument("--algorithm", default="two_round",
-                    choices=["two_round", "multi_threshold"])
+                    choices=["two_round", "multi_epoch", "multi_threshold"])
     ap.add_argument("--engine", default="dense",
                     choices=["dense", "lazy", "fused"],
                     help="ThresholdGreedy engine for the central phases")
@@ -40,6 +40,15 @@ def main() -> None:
                     help="route oracle marginals/accepts through the "
                          "Pallas kernels (interpret mode off-TPU)")
     ap.add_argument("--t", type=int, default=3)
+    ap.add_argument("--epochs", type=int, default=None,
+                    help="multi_epoch threshold levels (2 rounds each); "
+                         "default derives ceil(1/eps) from --eps")
+    ap.add_argument("--eps", type=float, default=0.15,
+                    help="approximation slack: grid resolution, and the "
+                         "multi_epoch shortfall below 1-1/e")
+    ap.add_argument("--schedule", default="paper",
+                    choices=["paper", "geometric"],
+                    help="multi_epoch descending-threshold schedule family")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -56,6 +65,8 @@ def main() -> None:
 
     spec = SelectorSpec(k=args.k, oracle=args.oracle,
                         algorithm=args.algorithm, t=args.t,
+                        eps=args.eps, epochs=args.epochs,
+                        schedule_kind=args.schedule,
                         engine=args.engine, chunk=args.chunk,
                         use_kernel=args.use_kernel)
     sel = DistributedSelector(spec, mesh, n_total=args.n, feat_dim=args.d,
@@ -63,7 +74,9 @@ def main() -> None:
     with mesh:
         emb = jax.device_put(emb, sel.data_sharding())
         t0 = time.time()
-        if args.algorithm == "two_round":
+        if args.algorithm in ("two_round", "multi_epoch"):
+            # the OPT-free drivers: multi_epoch is E descending-threshold
+            # epochs of the same grid engine (E=1 == two_round)
             res = sel.select(emb, key=ks)
         else:
             # the paper's unknown-OPT handling for Alg. 5: an initial round

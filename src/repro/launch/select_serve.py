@@ -189,6 +189,17 @@ def main() -> None:
                     choices=list(ORACLE_NAMES))
     ap.add_argument("--engine", default="dense",
                     choices=["dense", "lazy", "fused"])
+    ap.add_argument("--algorithm", default="two_round",
+                    choices=["two_round", "multi_epoch"],
+                    help="OPT-free selection driver backing the service "
+                         "(the batch path always runs the 1-epoch pipeline; "
+                         "multi_epoch upgrades warm/cold single selects)")
+    ap.add_argument("--epochs", type=int, default=None,
+                    help="multi_epoch threshold levels; None derives "
+                         "ceil(1/eps)")
+    ap.add_argument("--schedule", default="paper",
+                    choices=["paper", "geometric"],
+                    help="multi_epoch descending-threshold schedule family")
     ap.add_argument("--ingest-docs", type=int, default=0,
                     help="admit this many new docs between serve steps "
                          "(0 = static corpus)")
@@ -206,8 +217,9 @@ def main() -> None:
 
     # ---- per-CORPUS statistics: computed once, cached for every request --
     t0 = time.time()
-    spec = SelectorSpec(k=args.k, oracle=args.oracle, algorithm="two_round",
-                        engine=args.engine)
+    spec = SelectorSpec(k=args.k, oracle=args.oracle,
+                        algorithm=args.algorithm, epochs=args.epochs,
+                        schedule_kind=args.schedule, engine=args.engine)
     svc = SelectionService(spec, mesh, emb, stream_chunk=args.stream_chunk)
     svc.materialize()
     t_prep = time.time() - t0

@@ -31,7 +31,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.mapreduce import SelectionResult
-from repro.core.rounds import RoundLog, buffer_bytes
+from repro.core.rounds import RoundLog, gather_packed, log_gather
 from repro.core.threshold import pack_by_mask
 from repro.streaming.sieve import (SieveSpec, merge_pool, sieve_best,
                                    sieve_chunks, sieve_init, sieve_update)
@@ -87,9 +87,9 @@ def sieve_and_merge_sim(oracle, feats_mk, ids_mk, valid_mk, spec: SieveSpec,
     pf, pi, pv, dropped, v_loc, b_sol, b_size, b_val = jax.vmap(
         lambda f, i, v: _local_sieve(oracle, spec, f, i, v, chunk_elems, cap)
     )(feats_mk, ids_mk, valid_mk)
-    log.add("gather-sieve-survivors", buffer_bytes(msg, d),
-            buffer_bytes(m * msg, d),
-            f"L={spec.lanes} lanes, pool cap={cap}+top {spec.tops}/machine")
+    log_gather(log, "gather-sieve-survivors", msg, m, d,
+               f"L={spec.lanes} lanes, pool cap={cap}+top "
+               f"{spec.tops}/machine")
 
     # central completion on the gathered pool; the best local lane solution
     # rides along so merge never returns less than the best machine
@@ -118,19 +118,18 @@ def sieve_and_merge_mesh(oracle, spec: SieveSpec, mesh: Mesh,
     ids_spec = P(data_spec[0])
 
     msg = cap + spec.tops
-    d_msg = oracle.feat_dim
     log = RoundLog()
-    log.add("gather-sieve-survivors", buffer_bytes(msg, d_msg),
-            buffer_bytes(m * msg, d_msg),
-            f"L={spec.lanes} lanes, pool cap={cap}+top {spec.tops}/machine")
+    log_gather(log, "gather-sieve-survivors", msg, m, oracle.feat_dim,
+               f"L={spec.lanes} lanes, pool cap={cap}+top "
+               f"{spec.tops}/machine")
 
     def body(feats, ids):
         valid = ids >= 0
         pf, pi, pv, dropped, v_loc, b_sol, b_size, b_val = _local_sieve(
             oracle, spec, feats, ids, valid, chunk_elems, cap)
-        Pf = jax.lax.all_gather(pf, gather_axes, tiled=True)
-        Pi = jax.lax.all_gather(pi, gather_axes, tiled=True)
-        Pv = jax.lax.all_gather(pv, gather_axes, tiled=True)
+        Pf = gather_packed(pf, gather_axes)
+        Pi = gather_packed(pi, gather_axes)
+        Pv = gather_packed(pv, gather_axes)
         v_max = jax.lax.pmax(v_loc, gather_axes)
         # replicate every machine's best-lane candidate, keep the argmax
         b_vals = jax.lax.all_gather(jnp.where(b_size > 0, b_val, -jnp.inf),

@@ -1,4 +1,5 @@
-"""Test-session config: deterministic hypothesis profiles.
+"""Test-session config: deterministic hypothesis profiles + jit-cache
+hygiene.
 
 Property tests must be reproducible on CI's CPU runners — a flaky random
 draw that only fails on one runner is worse than no property test.  Two
@@ -14,6 +15,22 @@ without it this conftest is a no-op and the property tests skip.
 """
 
 import os
+
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _drop_jit_caches_between_modules():
+    # Modules don't share jitted shapes, but their compiled executables all
+    # stay alive for the whole session; with XLA:CPU the accumulated
+    # compiler state can segfault a later module's compile (the full-suite
+    # run dies inside backend_compile on a while_loop that compiles fine
+    # when its module runs alone).  Dropping the caches at module teardown
+    # keeps each module's compile environment like a fresh process.
+    yield
+    import jax
+
+    jax.clear_caches()
 
 try:
     from hypothesis import HealthCheck, settings

@@ -1,0 +1,313 @@
+"""Epoch-engine regressions (the multi-epoch (1 - 1/e - eps) driver and
+the round-primitives refactor): the multi-epoch guarantee vs brute-force
+OPT across the oracle zoo, bit-parity of the 1-epoch instantiation with
+the historical two-round drivers on both substrates, schedule-builder
+semantics, per-epoch sim-vs-mesh byte-accounting parity, and engine
+parity (dense/lazy/fused) inside the epoch accept step."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (FeatureCoverage, MRConfig, make_oracle,
+                        multi_epoch_sim, multi_threshold_sim, two_round_sim)
+from repro.core import grids
+from repro.core import mapreduce as mr
+from repro.core.selector import DistributedSelector, SelectorSpec
+from repro.core.sequential import brute_force
+from repro.launch.mesh import make_mesh_for
+
+jax.config.update("jax_platform_name", "cpu")
+
+ZOO = ["graph_cut", "log_det", "exemplar"]
+
+
+def _instance(name, seed=0, n=16, d=5, k=3):
+    rng = np.random.default_rng(seed)
+    reference = total = None
+    if name == "log_det":
+        X = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+    else:
+        X = jnp.asarray((rng.random((n, d)).astype(np.float32)) ** 2)
+    if name == "graph_cut":
+        total = jnp.sum(X, axis=0)
+    if name == "exemplar":
+        reference = jnp.asarray(rng.random((max(4, n // 2), d))
+                                .astype(np.float32))
+    spec = SelectorSpec(k=k, oracle=name)
+    oracle = make_oracle(spec, d, reference=reference, total=total)
+    return spec, oracle, X, reference, total
+
+
+def _sharded(X, m):
+    n, d = X.shape
+    return (X.reshape(m, n // m, d),
+            jnp.arange(n, dtype=jnp.int32).reshape(m, n // m),
+            jnp.ones((m, n // m), bool))
+
+
+_OPT_CACHE = {}
+
+
+def _opt_of(name):
+    if name not in _OPT_CACHE:
+        _, oracle, X, _, _ = _instance(name)
+        _, opt = brute_force(oracle, np.asarray(X), 3)
+        _OPT_CACHE[name] = opt
+    return _OPT_CACHE[name]
+
+
+def _bound(E):
+    """The paper schedule's guarantee after E epochs."""
+    return 1.0 - (1.0 - 1.0 / (E + 1)) ** E
+
+
+# ---------------------------------------------------------------------------
+# schedule builders
+# ---------------------------------------------------------------------------
+
+def test_epochs_for_eps_derivation():
+    assert grids.epochs_for_eps(0.5) == 2
+    assert grids.epochs_for_eps(0.2) == 5
+    assert grids.epochs_for_eps(0.15) == 7
+    # an explicit epoch count always wins over the derivation
+    assert grids.epochs_for_eps(0.15, epochs=3) == 3
+    # the derived count actually delivers the 1 - 1/e - eps floor
+    for eps in (0.5, 0.25, 0.1):
+        E = grids.epochs_for_eps(eps)
+        assert _bound(E) >= 1.0 - 1.0 / math.e - eps
+
+
+def test_epoch_schedule_one_epoch_is_tau0_bitwise():
+    """The 1-epoch schedule of every kind is exactly [tau0] bit-for-bit
+    (2*tau0*0.5 and tau0*(1-eps)^0 are exact float scalings) — the
+    invariant that makes the 1-epoch instantiation reproduce the two-round
+    drivers; geometric keeps level 1 == tau0 at every E, and every
+    schedule is strictly descending."""
+    taus = jnp.asarray([0.3, 1.7, 42.0], jnp.float32)
+    for kind in grids.SCHEDULE_KINDS:
+        sched = grids.epoch_schedule(taus, 1, eps=0.2, kind=kind)
+        assert len(sched) == 1
+        np.testing.assert_array_equal(np.asarray(sched[0]), np.asarray(taus))
+        for E in (2, 5):
+            sched = grids.epoch_schedule(taus, E, eps=0.2, kind=kind)
+            assert len(sched) == E
+            if kind == "geometric":
+                np.testing.assert_array_equal(np.asarray(sched[0]),
+                                              np.asarray(taus))
+            # strictly descending
+            for lo, hi in zip(sched[1:], sched):
+                assert bool(jnp.all(lo < hi))
+
+
+def test_alg5_schedule_matches_formula_and_kind_validation():
+    opt, k, E = 9.0, 8, 4
+    sched = grids.alg5_schedule(opt, k, E)
+    want = [(1 - 1 / (E + 1)) ** ell * opt / k for ell in range(1, E + 1)]
+    assert sched == pytest.approx(want)
+    with pytest.raises(ValueError, match="unknown schedule kind"):
+        grids.epoch_schedule(1.0, 2, 0.2, kind="linear")
+    with pytest.raises(ValueError, match="MRConfig: unknown schedule kind"):
+        MRConfig(k=4, n_total=32, n_machines=2, schedule_kind="linaer")
+
+
+# ---------------------------------------------------------------------------
+# 1-epoch bit-parity with the historical two-round drivers
+# ---------------------------------------------------------------------------
+
+def test_one_epoch_is_two_round_sim_bitwise():
+    rng = np.random.default_rng(11)
+    n, d, k, m = 256, 8, 8, 4
+    X = jnp.asarray((rng.random((n, d)).astype(np.float32)) ** 2)
+    oracle = FeatureCoverage(feat_dim=d)
+    fm, im, vm = _sharded(X, m)
+    cfg = MRConfig(k=k, n_total=n, n_machines=m)
+    key = jax.random.PRNGKey(5)
+    r2, log2 = two_round_sim(oracle, fm, im, vm, cfg, key)
+    r1, log1 = multi_epoch_sim(oracle, fm, im, vm, cfg, key, epochs=1)
+    np.testing.assert_array_equal(np.asarray(r1.sol_ids),
+                                  np.asarray(r2.sol_ids))
+    np.testing.assert_array_equal(np.asarray(r1.value), np.asarray(r2.value))
+    assert log1.n_rounds == log2.n_rounds == 2
+    # cfg.epochs=1 through the config (not the argument) is the same driver
+    cfg1 = MRConfig(k=k, n_total=n, n_machines=m, epochs=1)
+    r1c, _ = multi_epoch_sim(oracle, fm, im, vm, cfg1, key)
+    np.testing.assert_array_equal(np.asarray(r1c.sol_ids),
+                                  np.asarray(r2.sol_ids))
+
+
+def test_one_epoch_is_two_round_mesh_bitwise():
+    rng = np.random.default_rng(12)
+    n, d, k = 256, 8, 8
+    X = jnp.asarray((rng.random((n, d)).astype(np.float32)) ** 2)
+    mesh = make_mesh_for(len(jax.devices()), model_parallel=1)
+    out = {}
+    for algo, extra in (("two_round", {}),
+                        ("multi_epoch", {"epochs": 1})):
+        sel = DistributedSelector(
+            SelectorSpec(k=k, algorithm=algo, **extra), mesh,
+            n_total=n, feat_dim=d)
+        out[algo] = sel.select(X, key=jax.random.PRNGKey(11))
+        assert sel.round_log.n_rounds == 2
+    np.testing.assert_array_equal(np.asarray(out["two_round"].sol_ids),
+                                  np.asarray(out["multi_epoch"].sol_ids))
+    np.testing.assert_array_equal(np.asarray(out["two_round"].value),
+                                  np.asarray(out["multi_epoch"].value))
+
+
+def test_multi_threshold_explicit_schedule_parity():
+    """multi_threshold_sim is now an epoch-engine instantiation: passing
+    its own default schedule explicitly reproduces the default run exactly
+    (the schedule override and the alg5 builder are the same path)."""
+    rng = np.random.default_rng(13)
+    n, d, k, m, t, opt = 256, 8, 8, 4, 3, 9.0
+    X = jnp.asarray((rng.random((n, d)).astype(np.float32)) ** 2)
+    oracle = FeatureCoverage(feat_dim=d)
+    fm, im, vm = _sharded(X, m)
+    cfg = MRConfig(k=k, n_total=n, n_machines=m)
+    key = jax.random.PRNGKey(9)
+    r_def, log = multi_threshold_sim(oracle, fm, im, vm, opt, t, cfg, key)
+    r_exp, _ = multi_threshold_sim(oracle, fm, im, vm, opt, t, cfg, key,
+                                   schedule=grids.alg5_schedule(opt, k, t))
+    np.testing.assert_array_equal(np.asarray(r_def.sol_ids),
+                                  np.asarray(r_exp.sol_ids))
+    assert log.n_rounds == 2 * t
+    # known-OPT multi_epoch at the paper schedule IS Algorithm 5 (same
+    # schedule builder AND the same chained key derivation)
+    r_me, _ = multi_epoch_sim(oracle, fm, im, vm, cfg, key, epochs=t,
+                              opt=opt)
+    np.testing.assert_array_equal(np.asarray(r_me.sol_ids),
+                                  np.asarray(r_def.sol_ids))
+    np.testing.assert_array_equal(np.asarray(r_me.value),
+                                  np.asarray(r_def.value))
+
+
+# ---------------------------------------------------------------------------
+# the (1 - 1/e - eps) guarantee vs brute-force OPT
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ZOO)
+def test_multi_epoch_ratio_vs_bruteforce(name):
+    """Acceptance: multi_epoch_sim >= (1 - 1/e - eps - tol) OPT on the
+    brute-force-checkable zoo instances — known OPT (the tight Algorithm-5
+    schedule) and unknown OPT (tau-grid lanes) both clear the bar, and the
+    known-OPT ratios clear each E's own bound 1 - (1 - 1/(E+1))^E."""
+    n, k, m = 16, 3, 4
+    spec, oracle, X, _, _ = _instance(name, n=n, k=k)
+    opt = _opt_of(name)
+    fm, im, vm = _sharded(X, m)
+    # lossless caps + sample_p == 1 at this scale: deterministic guarantee
+    cfg = MRConfig(k=k, n_total=n, n_machines=m, sample_cap=n // m,
+                   survivor_cap=n // m, eps=0.2)
+    assert cfg.sample_p == 1.0
+    for E in (2, 3, 6):
+        res, log = multi_epoch_sim(oracle, fm, im, vm, cfg,
+                                   jax.random.PRNGKey(2), epochs=E, opt=opt)
+        assert log.n_rounds == 2 * E
+        assert float(res.value) >= _bound(E) * opt - 1e-5, \
+            f"{name}: E={E} ratio {float(res.value) / opt:.3f} < {_bound(E):.3f}"
+    floor = 1.0 - 1.0 / math.e - cfg.eps
+    # eps -> E derivation: cfg.eps=0.2 gives E=5, bound 0.598 > 1-1/e-0.2
+    res, log = multi_epoch_sim(oracle, fm, im, vm, cfg, jax.random.PRNGKey(2),
+                               opt=opt)
+    assert log.n_rounds == 2 * grids.epochs_for_eps(cfg.eps)
+    assert float(res.value) >= floor * opt - 1e-5
+    # unknown OPT: grid lanes + sparse path, same floor (tol covers the
+    # grid's (1+eps) quantization of the threshold)
+    res_u, _ = multi_epoch_sim(oracle, fm, im, vm, cfg, jax.random.PRNGKey(2))
+    assert float(res_u.value) >= (floor - 0.05) * opt - 1e-5, \
+        f"{name}: unknown-OPT ratio {float(res_u.value) / opt:.3f}"
+
+
+@pytest.mark.parametrize("name", ZOO)
+def test_multi_epoch_monotone_in_epochs(name):
+    """More epochs never hurt: under the geometric kind the E-epoch
+    schedule is a prefix of the (E+1)-epoch schedule and greedy only adds
+    elements, so with the deterministic p=1 sample the value is exactly
+    non-decreasing in E."""
+    n, k, m = 16, 3, 4
+    spec, oracle, X, _, _ = _instance(name, n=n, k=k)
+    fm, im, vm = _sharded(X, m)
+    cfg = MRConfig(k=k, n_total=n, n_machines=m, sample_cap=n // m,
+                   survivor_cap=n // m, eps=0.2, schedule_kind="geometric")
+    assert cfg.sample_p == 1.0
+    key = jax.random.PRNGKey(4)
+    vals = []
+    for E in (1, 2, 3, 5):
+        res, _ = multi_epoch_sim(oracle, fm, im, vm, cfg, key, epochs=E)
+        vals.append(float(res.value))
+    assert all(b >= a - 1e-6 for a, b in zip(vals, vals[1:])), \
+        f"{name}: values not monotone in epochs: {vals}"
+
+
+# ---------------------------------------------------------------------------
+# per-epoch accounting parity and engine parity
+# ---------------------------------------------------------------------------
+
+def test_multi_epoch_sim_vs_mesh_accounting_parity():
+    """Per-epoch RoundLog parity across substrates at E=3: 6 rounds, and
+    every record agrees on name / per-machine bytes / total bytes (the
+    Lemma-2/Lemma-6 capacity formulas)."""
+    n, d, k, E = 128, 5, 4, 3
+    oracle = FeatureCoverage(feat_dim=d)
+    mesh = make_mesh_for(len(jax.devices()), model_parallel=1)
+    m = mesh.shape["data"] * mesh.shape.get("pod", 1)
+    cfg = MRConfig(k=k, n_total=n, n_machines=m, epochs=E)
+    rng = np.random.default_rng(6)
+    X = jnp.asarray((rng.random((n, d)).astype(np.float32)) ** 2)
+    fm, im, vm = _sharded(X, m)
+
+    _, sim_log = multi_epoch_sim(oracle, fm, im, vm, cfg,
+                                 jax.random.PRNGKey(0))
+    _, mesh_log = mr.multi_epoch_mesh(oracle, cfg, mesh)
+    assert sim_log.n_rounds == mesh_log.n_rounds == 2 * E
+    for s_rec, m_rec in zip(sim_log.records, mesh_log.records):
+        assert (s_rec.name, s_rec.bytes_per_machine, s_rec.bytes_total) == \
+            (m_rec.name, m_rec.bytes_per_machine, m_rec.bytes_total)
+    # per-epoch structure: sample and survivor gathers alternate, with the
+    # level suffix distinguishing epochs
+    names = [r.name for r in sim_log.records]
+    assert names[0].startswith("gather-sample||top")
+    assert all("-l%d" % (i // 2 + 1) in nm for i, nm in enumerate(names))
+    assert all("survivors" in nm for nm in names[1::2])
+
+
+def test_multi_epoch_engine_parity_dense_lazy_fused():
+    """The epoch accept step is the same ThresholdGreedy under every
+    engine: dense / lazy / fused produce identical selections across a
+    3-epoch run (accept='first', same keys)."""
+    rng = np.random.default_rng(21)
+    n, d, k, m, E = 256, 8, 6, 4, 3
+    X = jnp.asarray((rng.random((n, d)).astype(np.float32)) ** 2)
+    oracle = FeatureCoverage(feat_dim=d)
+    fm, im, vm = _sharded(X, m)
+    out = {}
+    for engine in ("dense", "lazy", "fused"):
+        cfg = MRConfig(k=k, n_total=n, n_machines=m, engine=engine,
+                       chunk=32, epochs=E)
+        res, _ = multi_epoch_sim(oracle, fm, im, vm, cfg,
+                                 jax.random.PRNGKey(7))
+        assert int(res.n_dropped) == 0
+        out[engine] = np.asarray(res.sol_ids)
+    np.testing.assert_array_equal(out["dense"], out["lazy"])
+    np.testing.assert_array_equal(out["dense"], out["fused"])
+
+
+def test_multi_epoch_selector_batch_path():
+    """A multi_epoch selector still serves the batched query path (it is
+    OPT-free), answering per-query budgets against one corpus."""
+    rng = np.random.default_rng(8)
+    n, d, k = 256, 8, 8
+    X = jnp.asarray((rng.random((n, d)).astype(np.float32)) ** 2)
+    mesh = make_mesh_for(len(jax.devices()), model_parallel=1)
+    sel = DistributedSelector(
+        SelectorSpec(k=k, algorithm="multi_epoch", epochs=2), mesh,
+        n_total=n, feat_dim=d)
+    qb = mr.make_query_batch([4, 8, 2])
+    res = sel.select_batch(X, qb, key=jax.random.PRNGKey(5))
+    assert res.sol_ids.shape == (3, k)
+    for q, kq in enumerate([4, 8, 2]):
+        assert 0 < int(res.sol_size[q]) <= kq
