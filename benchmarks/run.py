@@ -7,6 +7,7 @@
   distributed_baselines   vs RandGreeDi [2] and MZ core-sets [7]
   selection_throughput    engine throughput + Pallas kernel check
   selection_qps           batched multi-query vs sequential queries/sec
+  selection_slo           sustained p50/p99 latency SLO + kill/restore parity
   streaming               one-pass sieve throughput, value ratios, warm-start
   selection_roofline      §Perf pair-3 report (paper technique on the pod)
   roofline_report         aggregates results/dryrun into §Roofline rows
@@ -35,7 +36,8 @@ import traceback
 
 MODULES = ("approx_ratio", "epoch_quality", "adversarial", "memory_rounds",
            "distributed_baselines", "selection_throughput", "selection_qps",
-           "streaming", "selection_roofline", "roofline_report")
+           "selection_slo", "streaming", "selection_roofline",
+           "roofline_report")
 
 
 def _missing_outputs(mod, name: str, t0: float) -> list:

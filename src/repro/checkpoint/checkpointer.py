@@ -47,6 +47,14 @@ class Checkpointer:
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        # a crashed save leaves its write-to-tmp directory behind; the
+        # atomic-rename protocol means anything still named .tmp_step_* is
+        # garbage (never renamed => never a valid checkpoint), so reclaim
+        # the disk here rather than accreting orphans across restarts
+        for d in os.listdir(directory):
+            if d.startswith(".tmp_step_"):
+                shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
 
     # -- save ----------------------------------------------------------------
     def save(self, step: int, state: Dict[str, Any], blocking: bool = True):
@@ -72,7 +80,15 @@ class Checkpointer:
         if blocking:
             write()
         else:
-            self._thread = threading.Thread(target=write, daemon=True)
+            def worker():
+                # a failed async save must not be silent: stash the
+                # exception and re-raise it from wait()/the next save()
+                try:
+                    write()
+                except BaseException as e:      # noqa: BLE001
+                    self._error = e
+
+            self._thread = threading.Thread(target=worker, daemon=True)
             self._thread.start()
 
     def async_save(self, step: int, state: Dict[str, Any]):
@@ -82,6 +98,11 @@ class Checkpointer:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(
+                "async checkpoint save failed (the checkpoint was NOT "
+                "written)") from err
 
     def _rotate(self):
         steps = self.all_steps()

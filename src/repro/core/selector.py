@@ -221,6 +221,19 @@ class DistributedSelector:
         self.round_log_batch.note("n_dropped", jnp.sum(res.n_dropped))
         return res
 
+    def runtime_events(self) -> dict:
+        """Realized runtime counters (tau_fallback, n_dropped, ...) summed
+        across every select()/select_batch() this selector served — the
+        single-query round log plus every slot-width batch log.  This is
+        the one place the lazy device scalars are forced to ints, so
+        serving stats/SLO dashboards read one dict instead of reaching
+        into per-Q RoundLogs."""
+        out: dict = {}
+        for log in (self.round_log, *self._batch_logs.values()):
+            for name, v in log.events.items():
+                out[name] = out.get(name, 0) + int(v)
+        return out
+
     def opt_upper_bound(self, embeddings) -> jax.Array:
         """k * (max singleton value) >= OPT >= max singleton — the standard
         first-round estimate (paper §2.2: 'an extra initial round').

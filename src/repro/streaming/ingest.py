@@ -40,13 +40,27 @@ class HostCorpus:
 
     Rows get global ids in arrival order.  `chunks(start)` yields
     (feats (B, d) np, ids (B,) np, valid (B,) np) with the tail chunk
-    zero-padded and masked invalid."""
+    zero-padded and masked invalid.
 
-    def __init__(self, feat_dim: int, chunk_elems: int = 512):
+    Chunk assembly is O(log P + rows copied) in the number of appended
+    parts P: a cumulative-offset index (`np.searchsorted` over the parts'
+    global start ids) locates the overlapping parts directly, so a
+    long-lived service ingesting many small batches stays linear overall
+    instead of going quadratic in the number of appends.
+
+    ``base`` is the global id of the first row still held: `prune(upto)`
+    releases whole parts the (one-pass) consumer has finished with, and a
+    checkpoint-restored corpus is rebuilt from only the un-streamed tail
+    with ``base`` = the stream cursor, so ids keep their arrival-order
+    meaning across restarts."""
+
+    def __init__(self, feat_dim: int, chunk_elems: int = 512, base: int = 0):
         self.feat_dim = int(feat_dim)
         self.chunk_elems = int(chunk_elems)
+        self.base = int(base)
         self._parts: List[np.ndarray] = []
-        self.n_total = 0
+        self._starts = np.empty((8,), np.int64)  # global id of part i's row 0
+        self.n_total = int(base)
 
     def append(self, feats) -> int:
         """Add rows (host numpy / anything np.asarray-able); returns the
@@ -55,20 +69,51 @@ class HostCorpus:
         assert feats.ndim == 2 and feats.shape[1] == self.feat_dim, \
             f"expected (m, {self.feat_dim}) rows, got {feats.shape}"
         first = self.n_total
+        if len(self._parts) == self._starts.shape[0]:   # amortized doubling
+            self._starts = np.concatenate(
+                [self._starts, np.empty_like(self._starts)])
+        self._starts[len(self._parts)] = first
         self._parts.append(feats)
         self.n_total += feats.shape[0]
         return first
 
+    def _part_range(self, start: int, stop: int) -> tuple:
+        """[i0, i1) indices of the parts overlapping global rows
+        [start, stop) — the searchsorted index lookup."""
+        starts = self._starts[: len(self._parts)]
+        i0 = int(np.searchsorted(starts, start, side="right")) - 1
+        i1 = int(np.searchsorted(starts, stop, side="left"))
+        return max(i0, 0), i1
+
     def _rows(self, start: int, stop: int) -> np.ndarray:
+        assert start >= self.base, \
+            (f"rows [{start}, {stop}) reach below base={self.base}: they "
+             f"were pruned after the one-pass stream consumed them")
         out = np.empty((stop - start, self.feat_dim), np.float32)
-        lo = 0
-        for p in self._parts:
+        i0, i1 = self._part_range(start, stop)
+        for idx in range(i0, i1):
+            p = self._parts[idx]
+            lo = int(self._starts[idx])
             hi = lo + p.shape[0]
             a, b = max(start, lo), min(stop, hi)
             if a < b:
                 out[a - start:b - start] = p[a - lo:b - lo]
-            lo = hi
         return out
+
+    def prune(self, upto: int) -> int:
+        """Release whole parts entirely below global id ``upto`` (rows a
+        one-pass consumer will never read again); returns #parts dropped.
+        Partial parts straddling ``upto`` are kept whole."""
+        drop = 0
+        while drop < len(self._parts) and \
+                int(self._starts[drop]) + self._parts[drop].shape[0] <= upto:
+            drop += 1
+        if drop:
+            self._parts = self._parts[drop:]
+            n = len(self._parts)
+            self._starts[:n] = self._starts[drop: drop + n]
+            self.base = int(self._starts[0]) if n else self.n_total
+        return drop
 
     def chunks(self, start: int, stop: Optional[int] = None,
                full_only: bool = False) -> Iterator[tuple]:
@@ -119,12 +164,18 @@ class StreamingSelector:
     """
 
     def __init__(self, oracle, spec: SieveSpec, feat_dim: int,
-                 chunk_elems: int = 512):
+                 chunk_elems: int = 512, retain_streamed: bool = False):
         self.oracle = oracle
         self.spec = spec
         self.corpus = HostCorpus(feat_dim, chunk_elems)
         self.state = sieve_init(oracle, spec, feat_dim)
         self.n_streamed = 0      # rows already absorbed by the sieve
+        # the sieve is one-pass (each row streamed exactly once, ever), so
+        # by default fully-consumed host parts are pruned after streaming —
+        # a long-lived service holds O(unstreamed tail), not O(history);
+        # retain_streamed=True keeps the whole corpus for callers that
+        # still want to read old rows out of `corpus`
+        self.retain_streamed = retain_streamed
         self._update = jax.jit(
             lambda st, f, i, v: sieve_update(oracle, spec, st, f, i, v))
         self._finish = jax.jit(
@@ -145,6 +196,8 @@ class StreamingSelector:
             self.state = self._update(self.state, f, i, v)
             self.n_streamed += f.shape[0]
             n_chunks += 1
+        if not self.retain_streamed:
+            self.corpus.prune(self.n_streamed)
         return {"first_id": first, "n_total": self.n_total,
                 "streamed": self.n_streamed, "chunks": n_chunks}
 
@@ -154,6 +207,8 @@ class StreamingSelector:
             self.state = self._update(self.state, f, i, v)
             self.n_streamed = min(self.n_streamed + f.shape[0],
                                   self.n_total)
+        if not self.retain_streamed:
+            self.corpus.prune(self.n_streamed)
 
     def select(self, budget: Optional[int] = None) -> SelectionResult:
         """Warm selection from the live sieve state (flushes the pending

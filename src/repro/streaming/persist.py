@@ -1,0 +1,98 @@
+"""State codec for the streaming/serving stack: serialize a live
+`StreamingSelector` (sieve state + host-corpus cursor) through
+`repro.checkpoint.Checkpointer` so a killed service restores mid-stream.
+
+The one-pass contract makes the format small: rows the sieve has already
+absorbed are never read again, so a snapshot carries only
+
+  * ``sieve``  — the full `SieveState` pytree (lane oracle states,
+    solution buffers + feature rows, exponent window, v_max, the
+    top-singleton reservoir);
+  * ``cursor`` — `n_streamed` / `n_total` / `chunk_elems` (the chunk size
+    is part of the replay: chunk boundaries are derived from the cursor,
+    so restoring under a different ``chunk_elems`` would change them);
+  * ``tail``   — the un-streamed host rows [n_streamed, n_total), i.e.
+    O(partial chunk), not O(history).
+
+Restore guarantee (tested in tests/test_serving_persist.py): with the
+same oracle/spec/chunk_elems, `restore_selector` followed by any sequence
+of ingest()/select() calls is **bit-identical** to the uninterrupted run
+executing the same sequence — the sieve is deterministic and fixed-shape,
+the cursor pins the chunk boundaries, and the tail rows re-enter the
+stream exactly where the snapshot left them.
+
+These are plain pytree-of-arrays codecs: `snapshot_selector` produces the
+dict `Checkpointer.save` persists, `selector_template` the matching
+restore template (leaf paths identical; shapes flow from the file, so the
+tail length does not need to be known up front).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.streaming.ingest import HostCorpus, StreamingSelector
+
+
+def snapshot_selector(sel: StreamingSelector) -> dict:
+    """Checkpointable snapshot of a live selector (read-only: does not
+    flush the tail or otherwise advance the stream)."""
+    n_streamed, n_total = sel.n_streamed, sel.corpus.n_total
+    tail = (sel.corpus._rows(n_streamed, n_total)
+            if n_total > n_streamed
+            else np.zeros((0, sel.corpus.feat_dim), np.float32))
+    return {
+        "sieve": sel.state,
+        "cursor": {
+            "n_streamed": np.asarray(n_streamed, np.int64),
+            "n_total": np.asarray(n_total, np.int64),
+            "chunk_elems": np.asarray(sel.corpus.chunk_elems, np.int64),
+        },
+        "tail": tail,
+    }
+
+
+def selector_template(sel: StreamingSelector) -> dict:
+    """Restore template for `Checkpointer.restore`: same leaf paths as
+    `snapshot_selector` on any selector built from the same spec (the
+    tail's stored shape wins, so a fresh selector's empty tail is fine)."""
+    return snapshot_selector(sel)
+
+
+def restore_selector(sel: StreamingSelector, snap: dict) -> None:
+    """Overwrite ``sel``'s live state with a snapshot.  ``sel`` must be
+    freshly built from the same oracle/spec/feat_dim/chunk_elems; shape or
+    chunk-size mismatches fail loudly (a silent mismatch would corrupt the
+    stream, not just this selection)."""
+    cur = snap["cursor"]
+    chunk_elems = int(cur["chunk_elems"])
+    if chunk_elems != sel.corpus.chunk_elems:
+        raise ValueError(
+            f"restore_selector: checkpoint streamed with chunk_elems="
+            f"{chunk_elems} but this selector uses "
+            f"{sel.corpus.chunk_elems}; chunk boundaries are part of the "
+            f"replay, so restoring across chunk sizes breaks bit-identity")
+    fresh, incoming = jax.tree.leaves(sel.state), jax.tree.leaves(
+        snap["sieve"])
+    if len(fresh) != len(incoming):
+        raise ValueError("restore_selector: sieve-state tree mismatch "
+                         "(different spec?)")
+    for a, b in zip(fresh, incoming):
+        if tuple(a.shape) != tuple(b.shape) or a.dtype != np.dtype(b.dtype):
+            raise ValueError(
+                f"restore_selector: sieve leaf mismatch {a.shape}/{a.dtype}"
+                f" vs checkpoint {b.shape}/{b.dtype} — the selector must "
+                f"be built from the spec that produced the checkpoint")
+    sel.state = jax.tree.unflatten(jax.tree.structure(sel.state),
+                                   [jax.numpy.asarray(v) for v in incoming])
+    n_streamed, n_total = int(cur["n_streamed"]), int(cur["n_total"])
+    corpus = HostCorpus(sel.corpus.feat_dim, chunk_elems, base=n_streamed)
+    tail = np.asarray(snap["tail"], np.float32)
+    if tail.shape[0]:
+        corpus.append(tail)
+    assert corpus.n_total == n_total, \
+        f"tail rows {tail.shape[0]} inconsistent with cursor " \
+        f"[{n_streamed}, {n_total})"
+    sel.corpus = corpus
+    sel.n_streamed = n_streamed

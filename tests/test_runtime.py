@@ -79,6 +79,75 @@ def test_async_checkpoint_completes():
         assert ck.latest_step() == 7
 
 
+def test_async_checkpoint_error_surfaces(monkeypatch):
+    """An exception in the async_save worker thread must re-raise from
+    wait() (and from the next save(), which waits first) — a failed save
+    that loses the checkpoint silently is the bug."""
+    with tempfile.TemporaryDirectory() as tmp:
+        ck = Checkpointer(tmp)
+        ck.save(1, {"x": jnp.ones(4)})            # a good checkpoint first
+
+        def boom(*a, **kw):
+            raise OSError("disk full")
+
+        monkeypatch.setattr(np, "savez", boom)
+        ck.async_save(2, {"x": jnp.ones(4)})
+        with pytest.raises(RuntimeError, match="async checkpoint save"):
+            ck.wait()
+        # the error is cleared once raised; the previous checkpoint is
+        # intact and the next (working) save proceeds
+        monkeypatch.undo()
+        assert ck.latest_step() == 1
+        got, step = ck.restore({"x": jnp.zeros(4)})
+        assert step == 1
+        ck.async_save(3, {"x": jnp.full(4, 2.0)})
+        ck.wait()
+        assert ck.latest_step() == 3
+
+        # ...and the failure path re-raises from save() too
+        monkeypatch.setattr(np, "savez", boom)
+        ck.async_save(4, {"x": jnp.ones(4)})
+        with pytest.raises(RuntimeError, match="async checkpoint save"):
+            ck.save(5, {"x": jnp.ones(4)})
+
+
+def test_checkpointer_cleans_orphaned_tmp_dirs():
+    """A save that crashed mid-write leaves .tmp_step_* behind; __init__
+    reclaims them (they were never renamed, so never a valid checkpoint),
+    and all_steps()/restore() never see them."""
+    with tempfile.TemporaryDirectory() as tmp:
+        ck = Checkpointer(tmp)
+        ck.save(1, {"x": jnp.ones(2)})
+        orphan = os.path.join(tmp, ".tmp_step_9")
+        os.makedirs(orphan)
+        with open(os.path.join(orphan, "arrays.npz"), "w") as f:
+            f.write("partial garbage")
+        ck2 = Checkpointer(tmp)
+        assert not os.path.exists(orphan)
+        assert ck2.all_steps() == [1]             # the real one survived
+
+
+def test_checkpointer_rotation_keeps_latest_after_failure(monkeypatch):
+    """Rotation never deletes the newest checkpoint, even when a later
+    save fails: the latest durable state stays restorable."""
+    with tempfile.TemporaryDirectory() as tmp:
+        ck = Checkpointer(tmp, keep=2)
+        for s in (1, 2, 3):
+            ck.save(s, {"x": jnp.full(3, float(s))})
+        assert ck.all_steps() == [2, 3]
+
+        def boom(*a, **kw):
+            raise OSError("disk full")
+
+        monkeypatch.setattr(np, "savez", boom)
+        with pytest.raises(OSError):              # blocking save: raises
+            ck.save(4, {"x": jnp.ones(3)})
+        monkeypatch.undo()
+        got, step = ck.restore({"x": jnp.zeros(3)})
+        assert step == 3
+        np.testing.assert_array_equal(np.asarray(got["x"]), np.full(3, 3.0))
+
+
 def test_straggler_detection():
     recs = []
     with tempfile.TemporaryDirectory() as tmp:

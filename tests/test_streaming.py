@@ -209,6 +209,85 @@ def test_host_corpus_chunking():
                                                   2 * np.ones((2, 4))]))
 
 
+def test_host_corpus_many_small_appends():
+    """A long-lived service ingests many SMALL batches: chunk assembly
+    must touch only the parts overlapping the requested range (the
+    searchsorted offset index), not scan every part ever appended — the
+    old linear scan made assembly O(#appends), i.e. quadratic overall."""
+    d, P = 4, 600
+    rng = np.random.default_rng(0)
+    parts = [rng.random((int(rng.integers(1, 5)), d)).astype(np.float32)
+             for _ in range(P)]
+    hc = HostCorpus(feat_dim=d, chunk_elems=16)
+    for p in parts:
+        hc.append(p)
+    ref = np.concatenate(parts)
+    assert hc.n_total == ref.shape[0]
+    # correctness: arbitrary ranges reassemble exactly
+    for a, b in [(0, 7), (3, 64), (100, 101), (ref.shape[0] - 9,
+                                               ref.shape[0])]:
+        np.testing.assert_array_equal(hc._rows(a, b), ref[a:b])
+    # chunk iteration reassembles the whole corpus in order
+    got = np.concatenate([f[v] for f, _, v in hc.chunks(0)])
+    np.testing.assert_array_equal(got, ref)
+    # the index narrows the work: a 16-row window among 600 parts touches
+    # a handful of parts, not all of them (parts are 1-4 rows each)
+    i0, i1 = hc._part_range(128, 144)
+    assert i1 - i0 <= 17                # not ~600
+    assert int(hc._starts[i0]) <= 128
+    assert int(hc._starts[i1 - 1]) + parts[i1 - 1].shape[0] >= 144
+
+
+def test_host_corpus_prune_and_base():
+    """prune() releases fully consumed parts (one-pass discipline) while
+    keeping global ids stable; a base-offset corpus (the checkpoint
+    restore path) serves the same chunks as the original tail."""
+    d = 4
+    hc = HostCorpus(feat_dim=d, chunk_elems=8)
+    blocks = [np.full((6, d), i, np.float32) for i in range(5)]
+    for b in blocks:
+        hc.append(b)
+    ref = np.concatenate(blocks)
+    dropped = hc.prune(14)          # parts 0-1 end at 12 <= 14; part 2
+    assert dropped == 2             # straddles nothing (12 < 14 < 18): kept
+    assert hc.base == 12 and hc.n_total == 30
+    np.testing.assert_array_equal(hc._rows(14, 26), ref[14:26])
+    with pytest.raises(AssertionError, match="pruned"):
+        hc._rows(5, 10)
+    # a restored corpus built from only the tail at base=n_streamed
+    tail = hc._rows(14, 30)
+    rc = HostCorpus(feat_dim=d, chunk_elems=8, base=14)
+    rc.append(tail)
+    assert rc.n_total == 30
+    for (f1, i1_, v1), (f2, i2_, v2) in zip(hc.chunks(14), rc.chunks(14)):
+        np.testing.assert_array_equal(f1, f2)
+        np.testing.assert_array_equal(i1_, i2_)
+        np.testing.assert_array_equal(v1, v2)
+
+
+def test_streaming_selector_prunes_consumed_parts():
+    """The one-pass contract lets the selector drop streamed host parts:
+    memory holds O(unstreamed tail), and the selection is unaffected."""
+    n, d, k, B = 512, 8, 8, 64
+    oracle, X = _instance("feature_coverage", seed=12, n=n, d=d, k=k)
+    X_host = np.asarray(X)
+    spec = SieveSpec(k=k, eps=0.1)
+
+    pruner = StreamingSelector(oracle, spec, d, chunk_elems=B)
+    keeper = StreamingSelector(oracle, spec, d, chunk_elems=B,
+                               retain_streamed=True)
+    for sel in (pruner, keeper):
+        for at in range(0, n, 32):          # many small ingests
+            sel.ingest(X_host[at: at + 32])
+    held = sum(p.shape[0] for p in pruner.corpus._parts)
+    assert held <= B                        # only the unstreamed tail
+    assert sum(p.shape[0] for p in keeper.corpus._parts) == n
+    r1, r2 = pruner.select(), keeper.select()
+    np.testing.assert_array_equal(np.asarray(r1.sol_ids),
+                                  np.asarray(r2.sol_ids))
+    assert np.asarray(r1.value).tobytes() == np.asarray(r2.value).tobytes()
+
+
 @pytest.mark.parametrize("name", ["feature_coverage", "graph_cut"])
 def test_ingest_incremental_matches_one_shot(name):
     """Chunk-aligned incremental ingest is bit-identical to ingesting the
