@@ -1,0 +1,98 @@
+"""Precision-policy benchmark: bf16 storage vs the f32 default, across
+the oracle zoo (the tentpole's acceptance table).
+
+Three claims per oracle, one row each in results/bench/precision.json:
+
+* ``chunk_marginals`` throughput, f32 vs bf16 feature tiles.  Two
+  numbers: the **measured** wall-time ratio on this host, and the
+  **modeled** bandwidth-bound speedup — the feature-plane byte ratio
+  (d*4+4)/(d*2+4) from the roofline dtype table — which is what a
+  bandwidth-bound oracle realizes on hardware with native bf16 (TPU).
+  On CPU bf16 arithmetic is emulated, so the measured ratio understates
+  (and can invert) the modeled one; both are reported, neither inferred
+  from the other.
+
+* gather bytes: the same two_round_sim instance run under the f32 and
+  bf16 MRConfig policies; the RoundLog's Lemma-2/6 byte accounting now
+  tracks the storage itemsize, so the feature-plane bytes halve exactly
+  (ids/validity stay 4+1 bytes — the totals shrink by the feature share).
+
+* value ratio: f(S_bf16) / f(S_f32) for the full two-round driver —
+  the quality cost of storing features at bf16 while every accumulator
+  (state, gains, thresholds, values) stays f32.  Expected >= 0.99.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (INSTANCE_KINDS, instance, print_table, save,
+                               timed)
+
+
+def _throughput(oracle, X, repeats: int):
+    st0 = oracle.init_state()
+    fn = jax.jit(lambda x: oracle.chunk_marginals(st0, x))
+    _, t32 = timed(fn, X, repeats=repeats)
+    _, t16 = timed(fn, X.astype(jnp.bfloat16), repeats=repeats)
+    return t32, t16
+
+
+def run(quick: bool = False) -> list:
+    from repro.core.mapreduce import MRConfig, two_round_sim
+    from repro.roofline.analysis import dtype_bytes
+
+    n, d, m, k = (512, 32, 4, 16) if quick else (4096, 128, 8, 32)
+    repeats = 2 if quick else 5
+    key = jax.random.PRNGKey(0)
+    rows = []
+    for kind in INSTANCE_KINDS:
+        oracle, X, feats_mk, ids_mk, valid_mk = instance(
+            n=n, d=d, m=m, kind=kind, k=k)
+
+        t32, t16 = _throughput(oracle, X, repeats)
+        # bandwidth-bound model: time ~ feature bytes streamed; the (n,)
+        # f32 gains and the tiny state are charged to both sides alike
+        modeled = (d * dtype_bytes("f32") + 4) / (d * dtype_bytes("bf16") + 4)
+
+        res = {}
+        logs = {}
+        for prec in ("f32", "bf16"):
+            cfg = MRConfig(k=k, n_total=n, n_machines=m, precision=prec)
+            r, log = two_round_sim(oracle, feats_mk, ids_mk, valid_mk, cfg,
+                                   key)
+            res[prec] = float(r.value)
+            logs[prec] = int(log.total_bytes)
+        ratio = res["bf16"] / max(res["f32"], 1e-30)
+
+        rows.append({
+            "oracle": kind, "n": n, "d": d, "m": m, "k": k,
+            "t_marginals_f32_s": t32, "t_marginals_bf16_s": t16,
+            "measured_speedup": t32 / max(t16, 1e-12),
+            "modeled_bw_speedup": modeled,
+            "feature_bytes_ratio": dtype_bytes("f32") / dtype_bytes("bf16"),
+            "gather_bytes_f32": logs["f32"],
+            "gather_bytes_bf16": logs["bf16"],
+            "gather_bytes_ratio": logs["f32"] / max(logs["bf16"], 1),
+            "value_f32": res["f32"], "value_bf16": res["bf16"],
+            "value_ratio": ratio,
+        })
+
+    print_table("precision (bf16 storage vs f32, per oracle)", rows)
+    save("precision", rows)
+
+    worst = min(r["value_ratio"] for r in rows)
+    assert worst >= 0.99, \
+        f"bf16 storage lost more than 1% of f32 value (worst {worst:.4f})"
+    assert all(r["gather_bytes_bf16"] < r["gather_bytes_f32"]
+               for r in rows), "bf16 runs must report smaller gathers"
+    print(f"[precision] worst zoo value ratio {worst:.5f}; modeled "
+          f"bandwidth-bound marginals speedup "
+          f"{rows[0]['modeled_bw_speedup']:.2f}x at d={d}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

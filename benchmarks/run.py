@@ -9,6 +9,7 @@
   selection_qps           batched multi-query vs sequential queries/sec
   selection_slo           sustained p50/p99 latency SLO + kill/restore parity
   streaming               one-pass sieve throughput, value ratios, warm-start
+  precision               bf16 storage vs f32: throughput, bytes, value ratio
   selection_roofline      §Perf pair-3 report (paper technique on the pod)
   roofline_report         aggregates results/dryrun into §Roofline rows
 
@@ -36,7 +37,7 @@ import traceback
 
 MODULES = ("approx_ratio", "epoch_quality", "adversarial", "memory_rounds",
            "distributed_baselines", "selection_throughput", "selection_qps",
-           "selection_slo", "streaming", "selection_roofline",
+           "selection_slo", "streaming", "precision", "selection_roofline",
            "roofline_report")
 
 

@@ -29,11 +29,18 @@ def measure() -> list:
 
     mesh = make_production_mesh()
     rows = []
-    for tag, tp in (("baseline", False), ("tp_oracle", True)):
+    for tag, tp, prec in (("baseline", False, "f32"),
+                          ("tp_oracle", True, "f32"),
+                          ("bf16_storage", False, "bf16")):
         spec = SelectorSpec(k=K, oracle="feature_coverage",
-                            algorithm="two_round", oracle_tp=tp)
+                            algorithm="two_round", oracle_tp=tp,
+                            precision=prec)
         sel = DistributedSelector(spec, mesh, n_total=N, feat_dim=D)
-        feats = jax.ShapeDtypeStruct((N, D), jnp.float32)
+        # the corpus arrives at the policy's storage dtype — the HLO the
+        # roofline reads then carries 2-byte feature planes under bf16
+        # instead of a hardwired f32 assumption
+        feats = jax.ShapeDtypeStruct((N, D),
+                                     spec.precision_policy.storage)
         ids = jax.ShapeDtypeStruct((N,), jnp.int32)
         key = jax.ShapeDtypeStruct((2,), jnp.uint32)
         with mesh:
@@ -48,7 +55,8 @@ def measure() -> list:
                            peak_memory_bytes=float(
                                getattr(mem, "temp_size_in_bytes", 0)))
         rec = {"arch": "selection-two-round", "shape": f"n{N}_k{K}_d{D}",
-               "mesh": "pod16x16", "tag": tag, "chips": mesh.size,
+               "mesh": "pod16x16", "tag": tag, "precision": prec,
+               "chips": mesh.size,
                "skipped": False, "seconds_lower": 0.0,
                "seconds_compile": 0.0,
                "memory_analysis": {"temp_gb": float(

@@ -51,11 +51,21 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core.precision import accum32
+
 Array = jax.Array
 
 
 class SubmodularOracle:
     """Protocol (duck-typed) for batched submodular oracles.
+
+    Precision contract: feature rows (``cand_feats``, ``aux_row`` where prep
+    is the identity, and replicated reference sets) may arrive in the
+    Precision policy's *storage* dtype — f32 or bf16.  Every oracle lifts
+    them onto the f32 *accumulate* plane at its math boundary (``accum32``
+    casts, or ``preferred_element_type=f32`` on MXU matmuls), so gains,
+    state pytrees, and values are ALWAYS f32 regardless of storage.  The
+    casts are identities for f32 input — the default policy is bit-compat.
 
     feat_dim:     width of an element's feature row.
     init_state(): state pytree for S = {}.
@@ -194,8 +204,11 @@ class FacilityLocation(SubmodularOracle):
         return jnp.zeros((r,), jnp.float32)
 
     def prep(self, state, cand_feats):
-        # (C, r) similarities; nonneg similarities keep f monotone.
-        sims = cand_feats @ self.reference.T
+        # (C, r) similarities; nonneg similarities keep f monotone.  The
+        # matmul accepts storage-dtype (bf16) tiles but accumulates f32 —
+        # the native MXU mixed-precision contract, a no-op for f32 input.
+        sims = jnp.matmul(cand_feats, self.reference.T,
+                          preferred_element_type=jnp.float32)
         return jnp.maximum(sims, 0.0)
 
     def marginals(self, state, aux):
@@ -373,6 +386,7 @@ class GraphCut(SubmodularOracle):
             from repro.kernels import ops
 
             return ops.graph_cut_marginals(aux, self.total, state, self.lam)
+        aux = accum32(aux)
         lin = aux @ (self.total - 2.0 * self.lam * state)
         return lin - self.lam * jnp.sum(aux * aux, axis=-1)
 
@@ -442,6 +456,7 @@ class LogDetDiversity(SubmodularOracle):
             from repro.kernels import ops
 
             return ops.logdet_marginals(aux, U, self.alpha)
+        aux = accum32(aux)
         proj = aux @ U.T
         resid = 1.0 + self.alpha * jnp.sum(aux * aux, axis=-1) \
             - (self.alpha ** 2) * jnp.sum(proj * proj, axis=-1)
@@ -449,6 +464,7 @@ class LogDetDiversity(SubmodularOracle):
 
     def add(self, state, aux_row):
         U, logdet, size = state
+        aux_row = accum32(aux_row)
         v = self.alpha * (U @ aux_row)
         d2 = jnp.maximum(
             1.0 + self.alpha * jnp.sum(aux_row * aux_row) - jnp.sum(v * v),
@@ -489,10 +505,13 @@ class ExemplarClustering(SubmodularOracle):
         return self._m0()
 
     def prep(self, state, cand_feats):
-        # (C, r) squared distances, clamped at 0 against float cancellation
-        d2 = self._m0()[None, :] - 2.0 * (cand_feats @ self.reference.T) \
-            + jnp.sum(cand_feats * cand_feats, axis=-1, keepdims=True)
-        return jnp.maximum(d2, 0.0)
+        # (C, r) squared distances, clamped at 0 against float cancellation;
+        # bf16 tiles in, f32 accumulate (matmul via preferred_element_type,
+        # the row norms on the accumulate plane)
+        sims = jnp.matmul(cand_feats, self.reference.T,
+                          preferred_element_type=jnp.float32)
+        sq = jnp.sum(jnp.square(accum32(cand_feats)), axis=-1, keepdims=True)
+        return jnp.maximum(self._m0()[None, :] - 2.0 * sims + sq, 0.0)
 
     def marginals(self, state, aux):
         return jnp.sum(jnp.maximum(state[None, :] - aux, 0.0), axis=-1)
@@ -505,6 +524,18 @@ class ExemplarClustering(SubmodularOracle):
 
             return ops.exemplar_marginals(cand_feats, self.reference, state)
         return self.marginals(state, self.prep(state, cand_feats))
+
+    def chunk_accept(self, state, cand_feats, eligible, tau, budget):
+        # The fused engine's hot path: distance block + the whole accept
+        # loop in one kernel, the (B, r) distances and the min-distance
+        # vector living in VMEM scratch (same shape as facility_accept,
+        # with min-update instead of max).
+        if self.use_kernel:
+            from repro.kernels import ops
+
+            return ops.exemplar_accept(cand_feats, self.reference, state,
+                                       eligible, tau, budget)
+        return super().chunk_accept(state, cand_feats, eligible, tau, budget)
 
     def add(self, state, aux_row):
         return jnp.minimum(state, aux_row)

@@ -38,6 +38,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import grids, rounds
+from repro.core import precision as precision_mod
 from repro.core.functions import bind_query, consumes_query_params
 from repro.core.rounds import (MeshRounds, RoundLog, SimRounds, buffer_bytes,
                                run_epochs)
@@ -107,12 +108,22 @@ class MRConfig:
     epochs: Optional[int] = None          # multi-epoch threshold levels;
     #                                       None derives ceil(1/eps)
     schedule_kind: str = "paper"          # grids.SCHEDULE_KINDS
+    precision: str = "f32"                # dtype policy name; "f32" is the
+    #                                       bit-compat default, "bf16" stores
+    #                                       features half-width (f32 accum)
 
     def __post_init__(self):
         # trace-time knob validation with the config as the call site —
         # a typo'd engine fails here, not deep inside a vmapped driver
         validate_engine(self.engine, self.accept, where="MRConfig")
         grids.validate_schedule_kind(self.schedule_kind, where="MRConfig")
+        precision_mod.validate(self.precision, where="MRConfig")
+
+    @property
+    def precision_policy(self) -> precision_mod.Precision:
+        """The resolved Precision policy: storage dtype for feature planes
+        and gather messages (the Lemma-2/6 wire width), f32 accumulators."""
+        return precision_mod.resolve(self.precision)
 
     @property
     def filter_chunk(self) -> Optional[int]:
@@ -261,7 +272,8 @@ def two_round_known_opt_sim(oracle, feats_mk, ids_mk, valid_mk, opt,
     """Algorithm 4: 2 rounds, 1/2-approx, OPT known — the 1-epoch scalar
     instantiation at tau = OPT/2k."""
     m, _, d = feats_mk.shape
-    rr = SimRounds(oracle, feats_mk, ids_mk, valid_mk)
+    rr = SimRounds(oracle, feats_mk, ids_mk, valid_mk,
+                   precision=cfg.precision_policy)
     log = rounds.epoch_round_log(cfg, m, d, 1)
     res = _known_opt_select(oracle, rr, cfg, [opt / (2.0 * cfg.k)], [key])
     return res, log
@@ -277,7 +289,8 @@ def multi_threshold_sim(oracle, feats_mk, ids_mk, valid_mk, opt, t: int,
     descending) — used by the Theorem-4 adversarial benchmark, which needs
     control over the boundary between element values and thresholds."""
     m, _, d = feats_mk.shape
-    rr = SimRounds(oracle, feats_mk, ids_mk, valid_mk)
+    rr = SimRounds(oracle, feats_mk, ids_mk, valid_mk,
+                   precision=cfg.precision_policy)
     sched = (list(schedule) if schedule is not None
              else grids.alg5_schedule(opt, cfg.k, t))
     log = rounds.epoch_round_log(cfg, m, d, t, level_suffix=True)
@@ -292,7 +305,8 @@ def dense_two_round_sim(oracle, feats_mk, ids_mk, valid_mk, cfg: MRConfig,
     One grid epoch: the Algorithm-4 pipeline for every tau_j in the grid
     (a vmapped engine lane — the paper's '1/eps log k parallel copies')."""
     m, _, d = feats_mk.shape
-    rr = SimRounds(oracle, feats_mk, ids_mk, valid_mk)
+    rr = SimRounds(oracle, feats_mk, ids_mk, valid_mk,
+                   precision=cfg.precision_policy)
     log = rounds.epoch_round_log(cfg, m, d, 1, with_grid=True)
     res = _epoch_select(oracle, rr, cfg, [key], 1, cfg.schedule_kind,
                         with_sparse=False)
@@ -306,10 +320,12 @@ def sparse_two_round_sim(oracle, feats_mk, ids_mk, valid_mk, cfg: MRConfig,
     which tries the threshold grid sequentially."""
     m, _, d = feats_mk.shape
     _, _, t_cap = cfg.caps()
-    rr = SimRounds(oracle, feats_mk, ids_mk, valid_mk)
+    rr = SimRounds(oracle, feats_mk, ids_mk, valid_mk,
+                   precision=cfg.precision_policy)
     log = RoundLog()
     rounds.log_gather(log, "gather-top-singletons", t_cap, m, d,
-                      f"top {t_cap}/machine")
+                      f"top {t_cap}/machine",
+                      itemsize=cfg.precision_policy.storage_itemsize)
     L, tdrop = rr.tops(oracle, t_cap)
     taus, tau_fb = _tau_grid(oracle, cfg, *L)
     sol_j, size_j, val_j = rounds.sparse_sweep(oracle, L, [taus], cfg)
@@ -337,7 +353,8 @@ def multi_epoch_sim(oracle, feats_mk, ids_mk, valid_mk, cfg: MRConfig, key,
     E = cfg.n_epochs(epochs)
     kind = schedule_kind or cfg.schedule_kind
     m, _, d = feats_mk.shape
-    rr = SimRounds(oracle, feats_mk, ids_mk, valid_mk)
+    rr = SimRounds(oracle, feats_mk, ids_mk, valid_mk,
+                   precision=cfg.precision_policy)
     if opt is not None:
         sched = (grids.alg5_schedule(opt, cfg.k, E) if kind == "paper"
                  else grids.epoch_schedule(opt / (2.0 * cfg.k), E, cfg.eps,
@@ -389,7 +406,8 @@ def two_round_batch_sim(oracle, feats_mk, ids_mk, valid_mk, qb: QueryBatch,
     Q = qb.n_queries
     shared_stats = not consumes_query_params(oracle)
     log = _batch_round_log(cfg, m, d, Q, shared_stats)
-    rr = SimRounds(oracle, feats_mk, ids_mk, valid_mk)
+    rr = SimRounds(oracle, feats_mk, ids_mk, valid_mk,
+                   precision=cfg.precision_policy)
 
     # shared round 1a: one Bernoulli sample serves all Q queries
     kd, _ks = jax.random.split(key)
@@ -436,20 +454,21 @@ def _batch_round_log(cfg, m, feat_dim, n_queries: int,
     s_cap, f_cap, t_cap = cfg.caps()
     J = cfg.grid_size()
     Q = n_queries
+    isz = cfg.precision_policy.storage_itemsize
     n_tops = 1 if shared_stats else Q
     log = RoundLog()
     log.add("gather-sample||top[Q]",
-            buffer_bytes(s_cap, feat_dim)
-            + n_tops * buffer_bytes(t_cap, feat_dim),
-            buffer_bytes(m * s_cap, feat_dim)
-            + n_tops * buffer_bytes(m * t_cap, feat_dim),
-            f"Q={Q}: shared sample {buffer_bytes(m * s_cap, feat_dim)}B "
+            buffer_bytes(s_cap, feat_dim, isz)
+            + n_tops * buffer_bytes(t_cap, feat_dim, isz),
+            buffer_bytes(m * s_cap, feat_dim, isz)
+            + n_tops * buffer_bytes(m * t_cap, feat_dim, isz),
+            f"Q={Q}: shared sample {buffer_bytes(m * s_cap, feat_dim, isz)}B "
             f"+ {'shared' if n_tops == 1 else 'per-query'} top "
-            f"{buffer_bytes(m * t_cap, feat_dim)}B")
+            f"{buffer_bytes(m * t_cap, feat_dim, isz)}B")
     log.add("gather-survivors[QxJ]",
-            Q * J * buffer_bytes(f_cap, feat_dim),
-            Q * J * buffer_bytes(m * f_cap, feat_dim),
-            f"per-query {J * buffer_bytes(m * f_cap, feat_dim)}B "
+            Q * J * buffer_bytes(f_cap, feat_dim, isz),
+            Q * J * buffer_bytes(m * f_cap, feat_dim, isz),
+            f"per-query {J * buffer_bytes(m * f_cap, feat_dim, isz)}B "
             f"grid J={J}")
     return log
 
@@ -518,7 +537,8 @@ def two_round_known_opt_mesh(oracle, cfg: MRConfig, mesh: Mesh,
     log = rounds.epoch_round_log(cfg, m, oracle.feat_dim, 1)
 
     def body(feats, ids, opt, key):
-        rr = MeshRounds(oracle, feats, ids, ids >= 0, gather_axes)
+        rr = MeshRounds(oracle, feats, ids, ids >= 0, gather_axes,
+                        precision=cfg.precision_policy)
         return _known_opt_select(oracle, rr, cfg, [opt / (2.0 * cfg.k)],
                                  [key])
 
@@ -544,7 +564,8 @@ def multi_threshold_mesh(oracle, cfg: MRConfig, t: int, mesh: Mesh,
                                  level_suffix=True)
 
     def body(feats, ids, opt, key):
-        rr = MeshRounds(oracle, feats, ids, ids >= 0, gather_axes)
+        rr = MeshRounds(oracle, feats, ids, ids >= 0, gather_axes,
+                        precision=cfg.precision_policy)
         return _known_opt_select(oracle, rr, cfg,
                                  grids.alg5_schedule(opt, cfg.k, t),
                                  rounds.chain_keys(key, t))
@@ -577,7 +598,8 @@ def multi_epoch_mesh(oracle, cfg: MRConfig, mesh: Mesh, axes=("data",),
                                  with_top=True)
 
     def body(feats, ids, key):
-        rr = MeshRounds(oracle, feats, ids, ids >= 0, gather_axes)
+        rr = MeshRounds(oracle, feats, ids, ids >= 0, gather_axes,
+                        precision=cfg.precision_policy)
         return _epoch_select(oracle, rr, cfg, _epoch_keys_split(key, E), E,
                              kind)
 
@@ -637,7 +659,12 @@ def two_round_batch_mesh(oracle, cfg: MRConfig, mesh: Mesh,
 
     def body(feats, ids, qk, qlam, qalpha, key):
         valid = ids >= 0
-        rr = MeshRounds(oracle, feats, ids, valid, gather_axes)
+        # cast once at the shard boundary: the per-query tops/filter below
+        # read `feats` directly, so they must see the same storage plane
+        # the round backend gathers (identity under the default policy)
+        feats = cfg.precision_policy.cast_storage(feats)
+        rr = MeshRounds(oracle, feats, ids, valid, gather_axes,
+                        precision=cfg.precision_policy)
 
         # ---- round 1: shared sample + per-query tops, one gather --------
         # (same key derivation as two_round_mesh, so a Q=1 batch with

@@ -96,17 +96,21 @@ class RoundLog:
 
 
 def buffer_bytes(cap: int, feat_dim: int, itemsize: int = 4) -> int:
-    """Bytes of one packed message buffer: features + ids + validity."""
+    """Bytes of one packed message buffer: features + ids + validity.
+    ``itemsize`` is the feature element width on the wire — callers derive
+    it from the precision policy's storage dtype (2 for bf16, 4 for f32);
+    the Lemma-2/6 bounds are byte bounds, so the reported numbers must
+    track what the gather actually ships, not assume float32."""
     return cap * (feat_dim * itemsize + 4 + 1)
 
 
 def log_gather(log: RoundLog, name: str, cap: int, m: int, feat_dim: int,
-               detail: str = "") -> None:
+               detail: str = "", itemsize: int = 4) -> None:
     """Record one gather round of an m-machine packed message of ``cap``
     rows — the per-machine/total byte-accounting idiom every driver (and
     the streaming sieve) repeats."""
-    log.add(name, buffer_bytes(cap, feat_dim), buffer_bytes(m * cap, feat_dim),
-            detail)
+    log.add(name, buffer_bytes(cap, feat_dim, itemsize),
+            buffer_bytes(m * cap, feat_dim, itemsize), detail)
 
 
 def epoch_round_log(cfg, m: int, feat_dim: int, epochs: int,
@@ -121,21 +125,25 @@ def epoch_round_log(cfg, m: int, feat_dim: int, epochs: int,
     per-level ``-l{e}`` name suffix (default: only when epochs > 1)."""
     s_cap, f_cap, t_cap = cfg.caps()
     J = cfg.grid_size() if with_grid else 1
+    isz = cfg.precision_policy.storage_itemsize
     levels = (epochs > 1) if level_suffix is None else level_suffix
     log = RoundLog()
     for e in range(1, epochs + 1):
         sfx = f"-l{e}" if levels else ""
         if with_top and e == 1:
             log_gather(log, f"gather-sample||top{sfx}", s_cap + t_cap, m,
-                       feat_dim, "dense || sparse round 1")
+                       feat_dim, "dense || sparse round 1", itemsize=isz)
         else:
-            log_gather(log, f"gather-sample{sfx}", s_cap, m, feat_dim)
+            log_gather(log, f"gather-sample{sfx}", s_cap, m, feat_dim,
+                       itemsize=isz)
         if with_grid:
             log.add(f"gather-survivors[grid]{sfx}",
-                    J * buffer_bytes(f_cap, feat_dim),
-                    J * buffer_bytes(m * f_cap, feat_dim), f"grid J={J}")
+                    J * buffer_bytes(f_cap, feat_dim, isz),
+                    J * buffer_bytes(m * f_cap, feat_dim, isz),
+                    f"grid J={J}")
         else:
-            log_gather(log, f"gather-survivors{sfx}", f_cap, m, feat_dim)
+            log_gather(log, f"gather-survivors{sfx}", f_cap, m, feat_dim,
+                       itemsize=isz)
     return log
 
 
@@ -208,8 +216,10 @@ class SimRounds:
     flattened into the capacity axis — exactly what the central machine
     sees — plus the summed overflow count."""
 
-    def __init__(self, oracle, feats_mk, ids_mk, valid_mk):
+    def __init__(self, oracle, feats_mk, ids_mk, valid_mk, precision=None):
         self.oracle = oracle
+        if precision is not None:
+            feats_mk = precision.cast_storage(feats_mk)
         self.feats_mk, self.ids_mk, self.valid_mk = feats_mk, ids_mk, valid_mk
         self.m, self.n_local, self.feat_dim = feats_mk.shape
 
@@ -269,8 +279,11 @@ class MeshRounds:
     machine, a gather is a lax.all_gather over the mesh axes, and overflow
     counts stay machine-local until ``finalize_drops`` psums them once."""
 
-    def __init__(self, oracle, feats, ids, valid, gather_axes):
+    def __init__(self, oracle, feats, ids, valid, gather_axes,
+                 precision=None):
         self.oracle = oracle
+        if precision is not None:
+            feats = precision.cast_storage(feats)
         self.feats, self.ids, self.valid = feats, ids, valid
         self.gather_axes = gather_axes
         self.machine_index = jax.lax.axis_index(gather_axes)

@@ -16,6 +16,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import functions as F
 from repro.core import mapreduce as mr
+from repro.core import precision as precision_mod
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,6 +43,16 @@ class SelectorSpec:
     oracle_tp: bool = False            # shard the feature dim over "model"
     #                                    (TPOracle — the central phase's
     #                                    elementwise work / tp per device)
+    precision: str = "f32"             # storage/compute policy ("f32" |
+    #                                    "bf16"); accumulators stay f32 —
+    #                                    see repro.core.precision
+
+    def __post_init__(self):
+        precision_mod.validate(self.precision, where="SelectorSpec")
+
+    @property
+    def precision_policy(self):
+        return precision_mod.resolve(self.precision)
 
 
 #: every oracle make_oracle can build — benchmarks and the conformance
@@ -106,6 +117,11 @@ class DistributedSelector:
         # anything else that rebuilds a full-width oracle outside shard_map)
         # must thread these through make_oracle again, or the rebuild
         # asserts/mis-builds for facility_location / exemplar / graph_cut.
+        # The reference set is a feature plane — it rides at storage
+        # precision; ``total`` is an accumulator statistic and stays f32.
+        if reference is not None:
+            reference = spec.precision_policy.cast_storage(
+                jnp.asarray(reference))
         self.reference = reference
         self.total = total
         self.axes = tuple(a for a in axes if a in mesh.shape)
@@ -116,7 +132,8 @@ class DistributedSelector:
                                eps=spec.eps, accept=spec.accept,
                                engine=spec.engine, chunk=spec.chunk,
                                epochs=spec.epochs,
-                               schedule_kind=spec.schedule_kind)
+                               schedule_kind=spec.schedule_kind,
+                               precision=spec.precision)
         self.cfg.require_even_shards(where="DistributedSelector data sharding")
         tp = mesh.shape.get("model", 1)
         self.tp = (spec.oracle_tp and tp > 1 and feat_dim % tp == 0 and

@@ -38,6 +38,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._tiling import ceil_to as _ceil_to
+from repro.kernels._tiling import sublane as _sublane
 from repro.kernels._tiling import pad_axis as _pad_axis
 
 
@@ -93,7 +94,7 @@ def accept_call(step_from, x, state, extras, eligible, tau, budget, *,
     Returns ``(mask (B,) bool, state (d,) f32, gains (B,) f32)``.
     """
     B, d = x.shape
-    Bp, dp = _ceil_to(B, 8), _ceil_to(d, 128)
+    Bp, dp = _ceil_to(B, _sublane(x.dtype)), _ceil_to(d, 128)
     n_extras = len(extras)
 
     x_p = _pad_axis(_pad_axis(x, 0, Bp), 1, dp)

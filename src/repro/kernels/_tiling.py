@@ -16,6 +16,14 @@ def ceil_to(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+def sublane(dtype) -> int:
+    """Minimum second-to-last-dim tile multiple for ``dtype`` on TPU:
+    8 for f32, 16 for bf16, 32 for int8/fp8 (the lane dim is always 128).
+    The wrappers size their row padding with this so storage-dtype (bf16)
+    candidate tiles stay legal VMEM blocks."""
+    return max(8, 32 // jnp.dtype(dtype).itemsize)
+
+
 def pad_axis(x, axis: int, target: int, value=0.0):
     pad = target - x.shape[axis]
     if pad <= 0:

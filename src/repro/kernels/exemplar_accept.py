@@ -1,22 +1,25 @@
-"""Pallas TPU kernel: fused facility-location chunk-accept sweep.
+"""Pallas TPU kernel: fused exemplar-clustering chunk-accept sweep.
 
 One kernel = one MXU matmul + the whole ThresholdGreedy inner loop over
-the tile: the (B, r) similarity block
+the tile (the distance twin of kernels/facility_accept.py): the (B, r)
+squared-distance block
 
-    sims = max(cand @ ref.T, 0)
+    d2[i, j] = max(||ref_j||^2 - 2 <cand_i, ref_j> + ||cand_i||^2, 0)
 
-is computed once into VMEM scratch (it never exists in HBM — same
-roofline argument as kernels/facility_marginals.py), then the sweep walks
-its rows against the live cover vector ``st`` (second VMEM scratch):
+is expanded once into VMEM scratch (it never exists in HBM — same
+roofline argument as kernels/exemplar_marginals.py), then the sweep walks
+its rows against the live min-distance vector ``st`` (second VMEM
+scratch):
 
-    gain_i = sum_j max(sims[i, j] - st_j, 0)
-    accept: st = max(st, sims[i, :])        (O(r) elementwise, in scratch)
+    gain_i = sum_j max(st_j - d2[i, j], 0)
+    accept: st = min(st, d2[i, :])          (O(r) elementwise, in scratch)
 
 See kernels/_accept_common.py for the shared sweep and output contract
-(accepted-row mask, post-sweep cover vector, per-row fresh gains).
+(accepted-row mask, post-sweep min-distance vector, per-row fresh gains).
 
-Padding: reference columns pad with state=+inf (residual contributes 0
-and max(inf, sims) stays inert); candidate rows pad with eligibility 0.
+Padding: reference columns pad with refsq=0 (their distance is the finite
+||cand_i||^2) and state=-inf, so the residual max(-inf - d2, 0) is 0 and
+min(-inf, d2) stays inert; candidate rows pad with eligibility 0.
 """
 
 from __future__ import annotations
@@ -34,49 +37,54 @@ from repro.kernels._tiling import sublane as _sublane
 from repro.kernels._tiling import pad_axis as _pad_axis
 
 
-def _fa_kernel(cand_ref, refT_ref, state_ref, elig_ref, tau_ref, budget_ref,
-               mask_ref, state_out_ref, gains_ref, sims_scratch, st_scratch,
-               *, nrows):
-    # MXU: the (B, r) similarity block, rectified, lives only in scratch
-    sims = jnp.dot(cand_ref[...], refT_ref[...],
-                   preferred_element_type=jnp.float32)
-    sims_scratch[...] = jnp.maximum(sims, 0.0)
+def _ea_kernel(cand_ref, refT_ref, refsq_ref, state_ref, elig_ref, tau_ref,
+               budget_ref, mask_ref, state_out_ref, gains_ref, d2_scratch,
+               st_scratch, *, nrows):
+    # MXU: the (B, r) distance block, clamped at 0, lives only in scratch
+    x = cand_ref[...].astype(jnp.float32)
+    sims = jnp.dot(x, refT_ref[...], preferred_element_type=jnp.float32)
+    sq = jnp.sum(x * x, axis=-1, keepdims=True)           # (B, 1)
+    d2_scratch[...] = jnp.maximum(refsq_ref[...] - 2.0 * sims + sq, 0.0)
     st_scratch[...] = state_ref[...]
 
     def row(i):
-        return sims_scratch[i, :][None, :]
+        return d2_scratch[i, :][None, :]
 
-    def step(st, s):
-        gain = jnp.sum(jnp.maximum(s - st, 0.0))
-        return gain, jnp.maximum(st, s)
+    def step(st, d2r):
+        gain = jnp.sum(jnp.maximum(st - d2r, 0.0))
+        return gain, jnp.minimum(st, d2r)
 
     run_sweep(nrows, elig_ref, tau_ref, budget_ref, mask_ref,
               state_out_ref, gains_ref, st_scratch, row, step)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def facility_accept(cand, ref, state, eligible, tau, budget, *,
+def exemplar_accept(cand, ref, state, eligible, tau, budget, *,
                     interpret: bool = False):
     """(B, d), (r, d), (r,), (B,) bool, (), () -> (mask (B,) bool,
-    state (r,) f32, gains (B,) f32) — the facility-location accept sweep."""
+    state (r,) f32, gains (B,) f32) — the exemplar-clustering accept
+    sweep over the chunk's squared-distance block."""
     B, d = cand.shape
     r = ref.shape[0]
     Bp, rp = _ceil_to(B, _sublane(cand.dtype)), _ceil_to(r, 128)
 
     cand_p = _pad_axis(cand, 0, Bp)
-    refT_p = _pad_axis(ref.T, 1, rp)                        # (d, rp)
+    ref32 = ref.astype(jnp.float32)
+    refT_p = _pad_axis(ref32.T, 1, rp)                      # (d, rp)
+    refsq_p = _pad_axis(jnp.sum(ref32 * ref32, axis=-1), 0, rp)[None, :]
     state_p = _pad_axis(state.astype(jnp.float32), 0, rp,
-                        value=jnp.inf)[None, :]             # (1, rp)
+                        value=-jnp.inf)[None, :]            # (1, rp)
     elig_p = _pad_axis(eligible.astype(jnp.int32), 0, Bp)
     tau_b = jnp.asarray(tau, jnp.float32).reshape(1, 1)
     budget_b = jnp.asarray(budget, jnp.int32).reshape(1, 1)
 
     mask, state_out, gains = pl.pallas_call(
-        functools.partial(_fa_kernel, nrows=Bp),
+        functools.partial(_ea_kernel, nrows=Bp),
         grid=(1,),
         in_specs=[
             pl.BlockSpec((Bp, d), lambda i: (0, 0)),
             pl.BlockSpec((d, rp), lambda i: (0, 0)),
+            pl.BlockSpec((1, rp), lambda i: (0, 0)),
             pl.BlockSpec((1, rp), lambda i: (0, 0)),
             pl.BlockSpec((Bp,), lambda i: (0,)),
             pl.BlockSpec((1, 1), lambda i: (0, 0)),
@@ -97,5 +105,5 @@ def facility_accept(cand, ref, state, eligible, tau, budget, *,
             pltpu.VMEM((1, rp), jnp.float32),
         ],
         interpret=interpret,
-    )(cand_p, refT_p, state_p, elig_p, tau_b, budget_b)
+    )(cand_p, refT_p, refsq_p, state_p, elig_p, tau_b, budget_b)
     return mask[:B] != 0, state_out[0, :r], gains[:B]

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels._tiling import ceil_to as _ceil_to
+from repro.kernels._tiling import sublane as _sublane
 from repro.kernels._tiling import pad_axis as _pad_axis
 
 DEFAULT_BC = 256   # candidate rows per tile
@@ -56,7 +57,7 @@ def exemplar_marginals(cand, ref, state, *, block_c: int = DEFAULT_BC,
     """(C, d), (r, d), (r,) -> (C,) f32 exemplar-clustering marginal gains."""
     C, d = cand.shape
     r = ref.shape[0]
-    bc = min(block_c, _ceil_to(C, 8))
+    bc = min(block_c, _ceil_to(C, _sublane(cand.dtype)))
     br = min(block_r, _ceil_to(r, 128))
     Cp, rp = _ceil_to(C, bc), _ceil_to(r, br)
 

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels._tiling import ceil_to as _ceil_to
+from repro.kernels._tiling import sublane as _sublane
 from repro.kernels._tiling import pad_axis as _pad_axis
 
 DEFAULT_BC = 256   # candidate rows per tile
@@ -64,7 +65,7 @@ def facility_marginals(cand, ref, state, *, block_c: int = DEFAULT_BC,
     """
     C, d = cand.shape
     r = ref.shape[0]
-    bc = min(block_c, _ceil_to(C, 8))
+    bc = min(block_c, _ceil_to(C, _sublane(cand.dtype)))
     br = min(block_r, _ceil_to(r, 128))
     Cp, rp = _ceil_to(C, bc), _ceil_to(r, br)
 
@@ -113,7 +114,7 @@ def rectified_residual_sum(aux, state, *, block_c: int = DEFAULT_BC,
     `aux - state` intermediate.
     """
     C, r = aux.shape
-    bc = min(block_c, _ceil_to(C, 8))
+    bc = min(block_c, _ceil_to(C, _sublane(aux.dtype)))
     br = min(block_r, _ceil_to(r, 128))
     Cp, rp = _ceil_to(C, bc), _ceil_to(r, br)
     aux_p = _pad_axis(_pad_axis(aux, 0, Cp), 1, rp)

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels._tiling import ceil_to as _ceil_to
+from repro.kernels._tiling import sublane as _sublane
 from repro.kernels._tiling import pad_axis as _pad_axis
 
 DEFAULT_BC = 256
@@ -51,7 +52,7 @@ def graph_cut_marginals(x, total, state, lam: float = 0.5, *,
                         interpret: bool = False):
     """(C, d), (d,), (d,) -> (C,) f32 GraphCut marginal gains."""
     C, d = x.shape
-    bc = min(block_c, _ceil_to(C, 8))
+    bc = min(block_c, _ceil_to(C, _sublane(x.dtype)))
     bf = min(block_f, _ceil_to(d, 128))
     Cp, dp = _ceil_to(C, bc), _ceil_to(d, bf)
 

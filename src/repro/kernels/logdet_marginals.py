@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels._tiling import ceil_to as _ceil_to
+from repro.kernels._tiling import sublane as _sublane
 from repro.kernels._tiling import pad_axis as _pad_axis
 
 DEFAULT_BC = 256
@@ -49,7 +50,7 @@ def logdet_marginals(x, U, alpha: float = 1.0, eps: float = RESID_EPS, *,
     """(C, d), (k, d) -> (C,) f32 log-det diversity marginal gains."""
     C, d = x.shape
     k = U.shape[0]
-    bc = min(block_c, _ceil_to(C, 8))
+    bc = min(block_c, _ceil_to(C, _sublane(x.dtype)))
     Cp = _ceil_to(C, bc)
     kp = _ceil_to(max(k, 1), 8)
 

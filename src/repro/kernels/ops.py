@@ -12,6 +12,7 @@ import jax
 
 from repro.kernels import coverage_accept as _ca
 from repro.kernels import coverage_marginals as _cm
+from repro.kernels import exemplar_accept as _ea
 from repro.kernels import exemplar_marginals as _em
 from repro.kernels import facility_accept as _fa
 from repro.kernels import facility_marginals as _fm
@@ -137,6 +138,14 @@ def facility_accept(cand, ref, state, eligible, tau, budget):
     residual + accept loop in one kernel; the (B, r) similarity block
     never leaves VMEM."""
     return _fa.facility_accept(cand, ref, state, eligible, tau, budget,
+                               interpret=_interpret())
+
+
+def exemplar_accept(cand, ref, state, eligible, tau, budget):
+    """Fused exemplar-clustering chunk-accept sweep: matmul + distance
+    expansion + accept loop in one kernel; the (B, r) squared-distance
+    block never leaves VMEM."""
+    return _ea.exemplar_accept(cand, ref, state, eligible, tau, budget,
                                interpret=_interpret())
 
 

@@ -189,6 +189,22 @@ def facility_accept(cand, ref, state, eligible, tau, budget):
         sims, state, eligible, tau, budget)
 
 
+def exemplar_accept(cand, ref, state, eligible, tau, budget):
+    """Reference exemplar-clustering accept sweep: precomputed squared-
+    distance rows against the running min-distance vector (see
+    exemplar_marginals)."""
+    cand = cand.astype(jnp.float32)
+    ref = ref.astype(jnp.float32)
+    refsq = jnp.sum(ref * ref, axis=-1)
+    d2 = refsq[None, :] - 2.0 * (cand @ ref.T) \
+        + jnp.sum(cand * cand, axis=-1, keepdims=True)
+    d2 = jnp.maximum(d2, 0.0)
+    return _accept_scan(
+        lambda st, d2r: jnp.sum(jnp.maximum(st - d2r, 0.0)),
+        lambda st, d2r: jnp.minimum(st, d2r),
+        d2, state, eligible, tau, budget)
+
+
 def exemplar_marginals(cand, ref, state):
     """(C, d), (r, d), (r,) -> (C,): exemplar-clustering marginal gains.
 

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels._tiling import ceil_to as _ceil_to
+from repro.kernels._tiling import sublane as _sublane
 from repro.kernels._tiling import pad_axis as _pad_axis
 
 DEFAULT_BC = 256
@@ -50,7 +51,7 @@ def weighted_coverage_marginals(x, state, *, block_c: int = DEFAULT_BC,
                                 interpret: bool = False):
     """(C, U), (U,) -> (C,) f32 WeightedCoverage marginal gains."""
     C, U = x.shape
-    bc = min(block_c, _ceil_to(C, 8))
+    bc = min(block_c, _ceil_to(C, _sublane(x.dtype)))
     bu = min(block_u, _ceil_to(U, 128))
     Cp, Up = _ceil_to(C, bc), _ceil_to(U, bu)
 

@@ -39,6 +39,10 @@ def main() -> None:
     ap.add_argument("--use-kernel", action="store_true",
                     help="route oracle marginals/accepts through the "
                          "Pallas kernels (interpret mode off-TPU)")
+    ap.add_argument("--precision", default="f32", choices=["f32", "bf16"],
+                    help="storage/compute precision policy (accumulators "
+                         "stay f32); bf16 halves feature bytes at rest "
+                         "and on the wire")
     ap.add_argument("--t", type=int, default=3)
     ap.add_argument("--epochs", type=int, default=None,
                     help="multi_epoch threshold levels (2 rounds each); "
@@ -68,7 +72,8 @@ def main() -> None:
                         eps=args.eps, epochs=args.epochs,
                         schedule_kind=args.schedule,
                         engine=args.engine, chunk=args.chunk,
-                        use_kernel=args.use_kernel)
+                        use_kernel=args.use_kernel,
+                        precision=args.precision)
     sel = DistributedSelector(spec, mesh, n_total=args.n, feat_dim=args.d,
                               reference=reference, total=total)
     with mesh:
@@ -99,7 +104,8 @@ def main() -> None:
         dt = time.time() - t0
 
     print(f"[select] n={args.n} k={args.k} oracle={args.oracle} "
-          f"algo={args.algorithm} machines={sel.cfg.n_machines}")
+          f"algo={args.algorithm} machines={sel.cfg.n_machines} "
+          f"precision={args.precision}")
     print(sel.round_log.summary())
     print(f"[select] f(S)={float(res.value):.4f} |S|={int(res.sol_size)} "
           f"dropped={int(res.n_dropped)} wall={dt * 1e3:.0f}ms")

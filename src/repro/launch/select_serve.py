@@ -100,6 +100,9 @@ class SelectionService:
 
     def __init__(self, spec: SelectorSpec, mesh, init_corpus,
                  reference=None, total=None, stream_chunk: int = 512):
+        # corpus statistics are accumulate-plane quantities: compute them
+        # in f32, then hold the corpus itself at the policy's storage dtype
+        # (identity under the default f32 policy)
         init_corpus = np.asarray(init_corpus, np.float32)
         n0, d = init_corpus.shape
         self.spec, self.mesh, self.feat_dim = spec, mesh, d
@@ -111,6 +114,8 @@ class SelectionService:
                                              "saturated_coverage"):
             total = jnp.asarray(init_corpus.sum(axis=0))
         self.reference, self.total = reference, total
+        init_corpus = init_corpus.astype(spec.precision_policy.np_storage,
+                                         copy=False)
 
         self.selector = DistributedSelector(
             spec, mesh, n_total=n0, feat_dim=d, reference=reference,
@@ -123,7 +128,8 @@ class SelectionService:
         # (no --ingest-docs) never pays the sieve compile or the n-row scan
         oracle = make_oracle(spec, d, reference=reference, total=total)
         sieve_spec = SieveSpec(k=spec.k, eps=spec.eps, accept=spec.accept,
-                               engine=spec.engine, chunk=spec.chunk)
+                               engine=spec.engine, chunk=spec.chunk,
+                               precision=spec.precision)
         self.stream = StreamingSelector(oracle, sieve_spec, d,
                                         chunk_elems=stream_chunk)
         self._init_corpus = init_corpus
@@ -426,6 +432,10 @@ def main() -> None:
                     choices=list(ORACLE_NAMES))
     ap.add_argument("--engine", default="dense",
                     choices=["dense", "lazy", "fused"])
+    ap.add_argument("--precision", default="f32", choices=["f32", "bf16"],
+                    help="storage/compute precision policy for the corpus, "
+                         "gather messages and sieve pools (accumulators "
+                         "stay f32)")
     ap.add_argument("--algorithm", default="two_round",
                     choices=["two_round", "multi_epoch"],
                     help="OPT-free selection driver backing the service "
@@ -468,7 +478,8 @@ def main() -> None:
     t0 = time.time()
     spec = SelectorSpec(k=args.k, oracle=args.oracle,
                         algorithm=args.algorithm, epochs=args.epochs,
-                        schedule_kind=args.schedule, engine=args.engine)
+                        schedule_kind=args.schedule, engine=args.engine,
+                        precision=args.precision)
     svc = SelectionService(spec, mesh, emb, stream_chunk=args.stream_chunk)
     ckpt = Checkpointer(args.checkpoint_dir) if args.checkpoint_dir else None
     if args.restore:

@@ -32,6 +32,21 @@ _DTYPE_BYTES = {
     "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
 }
 
+def dtype_bytes(dtype) -> int:
+    """Bytes per element, accepting an HLO dtype name ("bf16", "f32"), a
+    repro.core.precision policy-name ("bf16"/"f32" share HLO spelling), or
+    anything jnp/np can make a dtype of.  Roofline consumers derive
+    feature-plane byte counts from the precision policy through this
+    instead of assuming 4 bytes/element."""
+    if isinstance(dtype, str):
+        if dtype in _DTYPE_BYTES:
+            return _DTYPE_BYTES[dtype]
+        raise ValueError(f"unknown dtype name {dtype!r}; "
+                         f"known: {sorted(_DTYPE_BYTES)}")
+    import numpy as np
+    return int(np.dtype(dtype).itemsize)
+
+
 # result shapes: one or a tuple of `dtype[d0,d1,...]`
 _SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
 _COLL_RE = re.compile(

@@ -89,7 +89,8 @@ def sieve_and_merge_sim(oracle, feats_mk, ids_mk, valid_mk, spec: SieveSpec,
     )(feats_mk, ids_mk, valid_mk)
     log_gather(log, "gather-sieve-survivors", msg, m, d,
                f"L={spec.lanes} lanes, pool cap={cap}+top "
-               f"{spec.tops}/machine")
+               f"{spec.tops}/machine",
+               itemsize=spec.precision_policy.storage_itemsize)
 
     # central completion on the gathered pool; the best local lane solution
     # rides along so merge never returns less than the best machine
@@ -121,7 +122,8 @@ def sieve_and_merge_mesh(oracle, spec: SieveSpec, mesh: Mesh,
     log = RoundLog()
     log_gather(log, "gather-sieve-survivors", msg, m, oracle.feat_dim,
                f"L={spec.lanes} lanes, pool cap={cap}+top "
-               f"{spec.tops}/machine")
+               f"{spec.tops}/machine",
+               itemsize=spec.precision_policy.storage_itemsize)
 
     def body(feats, ids):
         valid = ids >= 0

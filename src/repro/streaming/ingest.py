@@ -54,10 +54,15 @@ class HostCorpus:
     with ``base`` = the stream cursor, so ids keep their arrival-order
     meaning across restarts."""
 
-    def __init__(self, feat_dim: int, chunk_elems: int = 512, base: int = 0):
+    def __init__(self, feat_dim: int, chunk_elems: int = 512, base: int = 0,
+                 dtype=np.float32):
         self.feat_dim = int(feat_dim)
         self.chunk_elems = int(chunk_elems)
         self.base = int(base)
+        # storage dtype of the held rows (the precision policy's storage
+        # plane — np.float32 or ml_dtypes bfloat16); appended rows are cast
+        # on entry so every part is homogeneous
+        self.dtype = np.dtype(dtype)
         self._parts: List[np.ndarray] = []
         self._starts = np.empty((8,), np.int64)  # global id of part i's row 0
         self.n_total = int(base)
@@ -65,7 +70,7 @@ class HostCorpus:
     def append(self, feats) -> int:
         """Add rows (host numpy / anything np.asarray-able); returns the
         first global id of the appended block."""
-        feats = np.asarray(feats, np.float32)
+        feats = np.asarray(feats).astype(self.dtype, copy=False)
         assert feats.ndim == 2 and feats.shape[1] == self.feat_dim, \
             f"expected (m, {self.feat_dim}) rows, got {feats.shape}"
         first = self.n_total
@@ -89,7 +94,7 @@ class HostCorpus:
         assert start >= self.base, \
             (f"rows [{start}, {stop}) reach below base={self.base}: they "
              f"were pruned after the one-pass stream consumed them")
-        out = np.empty((stop - start, self.feat_dim), np.float32)
+        out = np.empty((stop - start, self.feat_dim), self.dtype)
         i0, i1 = self._part_range(start, stop)
         for idx in range(i0, i1):
             p = self._parts[idx]
@@ -167,7 +172,10 @@ class StreamingSelector:
                  chunk_elems: int = 512, retain_streamed: bool = False):
         self.oracle = oracle
         self.spec = spec
-        self.corpus = HostCorpus(feat_dim, chunk_elems)
+        # host chunks are held at the policy's storage dtype, so the bytes
+        # crossing host->device per chunk already reflect the policy
+        self.corpus = HostCorpus(feat_dim, chunk_elems,
+                                 dtype=spec.precision_policy.np_storage)
         self.state = sieve_init(oracle, spec, feat_dim)
         self.n_streamed = 0      # rows already absorbed by the sieve
         # the sieve is one-pass (each row streamed exactly once, ever), so

@@ -41,7 +41,7 @@ def snapshot_selector(sel: StreamingSelector) -> dict:
     n_streamed, n_total = sel.n_streamed, sel.corpus.n_total
     tail = (sel.corpus._rows(n_streamed, n_total)
             if n_total > n_streamed
-            else np.zeros((0, sel.corpus.feat_dim), np.float32))
+            else np.zeros((0, sel.corpus.feat_dim), sel.corpus.dtype))
     return {
         "sieve": sel.state,
         "cursor": {
@@ -87,8 +87,18 @@ def restore_selector(sel: StreamingSelector, snap: dict) -> None:
     sel.state = jax.tree.unflatten(jax.tree.structure(sel.state),
                                    [jax.numpy.asarray(v) for v in incoming])
     n_streamed, n_total = int(cur["n_streamed"]), int(cur["n_total"])
-    corpus = HostCorpus(sel.corpus.feat_dim, chunk_elems, base=n_streamed)
-    tail = np.asarray(snap["tail"], np.float32)
+    tail = np.asarray(snap["tail"])
+    # the storage dtype rides in the checkpoint arrays themselves (npz
+    # round-trips dtypes); a policy mismatch would silently re-quantize the
+    # tail and break replay bit-identity, so fail loudly instead
+    if tail.dtype != sel.corpus.dtype:
+        raise ValueError(
+            f"restore_selector: checkpoint tail is {tail.dtype} but this "
+            f"selector's precision policy stores {sel.corpus.dtype}; the "
+            f"selector must be built with the precision that produced the "
+            f"checkpoint")
+    corpus = HostCorpus(sel.corpus.feat_dim, chunk_elems, base=n_streamed,
+                        dtype=sel.corpus.dtype)
     if tail.shape[0]:
         corpus.append(tail)
     assert corpus.n_total == n_total, \

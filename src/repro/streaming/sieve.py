@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import grids
+from repro.core import precision as precision_mod
 from repro.core.mapreduce import SelectionResult
 from repro.core.sequential import greedy
 from repro.core.threshold import (DEFAULT_CHUNK, exclude_ids,
@@ -69,11 +70,21 @@ class SieveSpec:
     #                                   runs each lane's per-chunk accept
     #                                   loop through oracle.chunk_accept)
     chunk: int = DEFAULT_CHUNK        # lazy/fused-engine chunk size
+    precision: str = "f32"            # storage/compute policy ("f32" |
+    #                                   "bf16"): the carried feature pools
+    #                                   (sol_feats / top_feats) and host
+    #                                   chunks ride at storage precision;
+    #                                   oracle states / values stay f32
 
     def __post_init__(self):
         # shared trace-time knob validation (threshold.validate_engine) —
         # a typo'd engine fails at spec construction, naming the sieve
         validate_engine(self.engine, self.accept, where="SieveSpec")
+        precision_mod.validate(self.precision, where="SieveSpec")
+
+    @property
+    def precision_policy(self):
+        return precision_mod.resolve(self.precision)
 
     @property
     def lanes(self) -> int:
@@ -110,15 +121,16 @@ def _stacked_init(oracle, n_lanes: int):
 
 def sieve_init(oracle, spec: SieveSpec, feat_dim: int) -> SieveState:
     L, k, T = spec.lanes, spec.k, spec.tops
+    sdt = spec.precision_policy.storage   # carried feature rows only
     return SieveState(
         oracle_states=_stacked_init(oracle, L),
         sol_ids=jnp.full((L, k), -1, jnp.int32),
-        sol_feats=jnp.zeros((L, k, feat_dim), jnp.float32),
+        sol_feats=jnp.zeros((L, k, feat_dim), sdt),
         sol_sizes=jnp.zeros((L,), jnp.int32),
         exps=jnp.full((L,), EXP_UNSEEDED, jnp.int32),
         v_max=jnp.zeros((), jnp.float32),
         n_seen=jnp.zeros((), jnp.int32),
-        top_feats=jnp.zeros((T, feat_dim), jnp.float32),
+        top_feats=jnp.zeros((T, feat_dim), sdt),
         top_ids=jnp.full((T,), -1, jnp.int32),
         top_vals=jnp.full((T,), -jnp.inf, jnp.float32),
     )
@@ -130,6 +142,10 @@ def sieve_update(oracle, spec: SieveSpec, state: SieveState, feats, ids,
     on replay of the same chunk sequence."""
     L, k = spec.lanes, spec.k
     B = feats.shape[0]
+    # feature rows ride at storage precision (identity cast under the f32
+    # default — bit-compat); carried pools concatenate with these rows so
+    # the whole plane stays one dtype
+    feats = spec.precision_policy.cast_storage(feats)
 
     # ---- 1. lazy max-singleton tracker (fused kernel path) --------------
     singles = oracle.chunk_marginals(oracle.init_state(), feats)

@@ -1,0 +1,85 @@
+"""Golden f32 selection outputs for the precision-plane refactor.
+
+The default ``precision="f32"`` policy must be a bit-identical no-op: same
+solution ids and the same value *bytes* as the pre-refactor code, on both
+the sim and mesh drivers.  This module computes those outputs; the JSON in
+``tests/golden/precision_f32_golden.json`` was captured by running it as a
+script against the pre-refactor tree, and ``tests/test_precision.py``
+replays `compute_golden()` and compares against the stored file.
+
+Run ``PYTHONPATH=src:tests python -m golden_capture`` to (re)capture —
+only legitimate when an intentional algorithm change moves the outputs.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_platform_name", "cpu")
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
+                           "precision_f32_golden.json")
+
+N, D, M, K, REF = 512, 16, 4, 8, 64
+
+
+def _instance():
+    rng = np.random.default_rng(0)
+    X = jnp.asarray((rng.random((N, D)).astype(np.float32)) ** 2)
+    fm = X.reshape(M, N // M, D)
+    im = jnp.arange(N, dtype=jnp.int32).reshape(M, N // M)
+    vm = jnp.ones((M, N // M), bool)
+    return X, fm, im, vm
+
+
+def _pack(res) -> dict:
+    ids = np.asarray(res.sol_ids).tolist()
+    value = np.asarray(res.value, np.float32)
+    return {"sol_ids": ids, "value_hex": value.tobytes().hex()}
+
+
+def compute_golden() -> dict:
+    from repro.core import (FacilityLocation, FeatureCoverage, MRConfig,
+                            two_round_sim)
+    from repro.core.selector import DistributedSelector, SelectorSpec
+    from repro.launch.mesh import make_mesh_for
+
+    X, fm, im, vm = _instance()
+    ref = X[:REF]
+    out: dict = {}
+
+    for engine in ("dense", "lazy", "fused"):
+        cfg = MRConfig(k=K, n_total=N, n_machines=M, engine=engine)
+        res, _ = two_round_sim(FeatureCoverage(feat_dim=D), fm, im, vm, cfg,
+                               jax.random.PRNGKey(0))
+        out[f"sim/{engine}/feature_coverage"] = _pack(res)
+
+    cfg = MRConfig(k=K, n_total=N, n_machines=M)
+    res, _ = two_round_sim(FacilityLocation(feat_dim=D, reference=ref),
+                           fm, im, vm, cfg, jax.random.PRNGKey(0))
+    out["sim/dense/facility_location"] = _pack(res)
+
+    mesh = make_mesh_for(len(jax.devices()), model_parallel=1)
+    for oracle in ("feature_coverage", "facility_location"):
+        sel = DistributedSelector(
+            SelectorSpec(k=K, oracle=oracle), mesh, n_total=N, feat_dim=D,
+            reference=None if oracle == "feature_coverage" else ref)
+        res = sel.select(X, key=jax.random.PRNGKey(11))
+        out[f"mesh/dense/{oracle}"] = _pack(res)
+    return out
+
+
+def main() -> None:
+    os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(compute_golden(), f, indent=1, sort_keys=True)
+    print(f"wrote {GOLDEN_PATH}")
+
+
+if __name__ == "__main__":
+    main()

@@ -517,6 +517,83 @@ def test_facility_accept_matches_ref(B, r, d):
     _assert_accept_matches(got, want, d, jnp.float32, "facility_accept")
 
 
+@pytest.mark.parametrize("B,r,d", [(32, 128, 64), (13, 20, 8), (1, 1, 1),
+                                   (64, 300, 16), (100, 257, 33)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_exemplar_accept_matches_ref(B, r, d, dtype):
+    from repro.kernels.exemplar_accept import exemplar_accept
+
+    k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(B * 5 + r), 4)
+    cand = _rand(k1, (B, d), dtype)
+    refs = _rand(k2, (r, d), dtype)
+    state = jnp.abs(_rand(k3, (r,), jnp.float32)) * d
+    elig = jax.random.uniform(k4, (B,)) < 0.8
+    tau = float(jnp.median(ref.exemplar_marginals(cand, refs, state)))
+    budget = max(1, B // 3)
+    got = exemplar_accept(cand, refs, state, elig, tau, budget,
+                          interpret=True)
+    want = ref.exemplar_accept(cand, refs, state, elig, tau, budget)
+    if dtype == jnp.bfloat16:
+        # bf16 tiles: masks can legitimately flip on near-tau rows; check
+        # the invariants (budget/eligibility) and the state/gain bands
+        mask = np.asarray(got[0])
+        assert mask.sum() <= budget
+        assert not np.any(mask & ~np.asarray(elig))
+        tol = 5e-2
+        np.testing.assert_allclose(np.asarray(got[2]), np.asarray(want[2]),
+                                   rtol=tol, atol=tol * max(d, r),
+                                   err_msg="exemplar_accept gains")
+    else:
+        _assert_accept_matches(got, want, max(d, r), dtype,
+                               "exemplar_accept")
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 30), st.integers(1, 40), st.integers(1, 12),
+       st.integers(0, 2 ** 16), st.integers(0, 6), st.floats(0.0, 2.0))
+def test_exemplar_accept_property(B, r, d, seed, budget, tau_scale):
+    """Property: budget/eligibility always respected; kernel == scan ref
+    over random shapes, budgets and thresholds (incl. budget 0); state
+    only shrinks (min-distance updates)."""
+    from repro.kernels.exemplar_accept import exemplar_accept
+
+    rng = np.random.default_rng(seed)
+    cand = jnp.asarray(rng.standard_normal((B, d)).astype(np.float32))
+    refs = jnp.asarray(rng.standard_normal((r, d)).astype(np.float32))
+    state = jnp.asarray(rng.random(r).astype(np.float32)) * d
+    elig = jnp.asarray(rng.random(B) < 0.7)
+    tau = tau_scale * float(
+        jnp.max(ref.exemplar_marginals(cand, refs, state))) / 2.0
+    got = exemplar_accept(cand, refs, state, elig, tau, budget,
+                          interpret=True)
+    want = ref.exemplar_accept(cand, refs, state, elig, tau, budget)
+    _assert_accept_matches(got, want, max(d, r), jnp.float32,
+                           "exemplar_accept")
+    mask = np.asarray(got[0])
+    assert mask.sum() <= budget
+    assert not np.any(mask & ~np.asarray(elig))
+    assert np.all(np.asarray(got[1]) <= np.asarray(state) + 1e-6)
+
+
+def test_exemplar_oracle_kernel_accept_route():
+    """ExemplarClustering(use_kernel=True).chunk_accept == the plain path."""
+    from repro.core.functions import ExemplarClustering
+
+    rng = np.random.default_rng(29)
+    X = jnp.asarray(rng.standard_normal((40, 24)).astype(np.float32))
+    refs = jnp.asarray(rng.standard_normal((16, 24)).astype(np.float32))
+    plain = ExemplarClustering(feat_dim=24, reference=refs)
+    fused = ExemplarClustering(feat_dim=24, reference=refs, use_kernel=True)
+    st0 = plain.init_state()
+    tau = float(jnp.median(plain.chunk_marginals(st0, X)))
+    elig = jnp.asarray(rng.random(40) < 0.8)
+    got = fused.chunk_accept(st0, X, elig, tau, 6)
+    want = plain.chunk_accept(st0, X, elig, tau, 6)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]),
+                               rtol=1e-5, atol=1e-4)
+
+
 def test_accept_budget_and_eligibility_respected():
     """No kernel accepts an ineligible row or exceeds the budget, and the
     emitted gains are the accept-time fresh marginals (valid stale upper

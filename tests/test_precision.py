@@ -1,0 +1,243 @@
+"""Precision-policy conformance: the default f32 policy is bit-identical
+to the pre-refactor pipeline (golden outputs), and the bf16 storage policy
+stays within tolerance bands of the f32 reference across the oracle zoo —
+marginals, accept sweeps, end-to-end driver values, byte accounting, and
+the streaming checkpoint codec."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from oracle_contract import K_CAP, REGISTRY
+
+from repro.core import precision as P
+from repro.core.mapreduce import MRConfig, two_round_sim
+from repro.core.rounds import buffer_bytes
+
+jax.config.update("jax_enable_x64", False)
+
+N, D, M = 256, 16, 4
+
+
+def _sim_instance(name, rng):
+    oracle, X = REGISTRY[name](rng, N, D)
+    feats_mk = X.reshape(M, N // M, D)
+    ids_mk = jnp.arange(N, dtype=jnp.int32).reshape(M, N // M)
+    valid_mk = jnp.ones((M, N // M), bool)
+    return oracle, X, feats_mk, ids_mk, valid_mk
+
+
+# ---------------------------------------------------------------------------
+# the Precision policy object
+# ---------------------------------------------------------------------------
+
+def test_policy_registry_and_validation():
+    assert P.resolve("f32") is P.F32 and P.resolve("bf16") is P.BF16
+    assert P.resolve(P.BF16) is P.BF16
+    assert P.F32.storage_itemsize == 4 and P.BF16.storage_itemsize == 2
+    assert P.BF16.accumulate == jnp.float32   # accumulators never narrow
+    with pytest.raises(ValueError, match="precision"):
+        P.resolve("fp64")
+    with pytest.raises(ValueError, match="MRConfig"):
+        MRConfig(k=4, n_total=64, n_machines=2, precision="f16")
+    from repro.core.selector import SelectorSpec
+    with pytest.raises(ValueError, match="SelectorSpec"):
+        SelectorSpec(k=4, precision="int8")
+    from repro.streaming import SieveSpec
+    with pytest.raises(ValueError, match="SieveSpec"):
+        SieveSpec(k=4, precision="tf32")
+
+
+def test_f32_casts_are_identities():
+    """Bit-compat contract: under the default policy every cast the
+    refactor introduced is the identity (same buffer, same bits)."""
+    x = jnp.arange(12, dtype=jnp.float32).reshape(3, 4) * 0.37
+    assert P.F32.cast_storage(x) is x
+    assert P.F32.cast_accum(x) is x
+    assert P.accum32(x) is x
+    y = P.BF16.cast_storage(x)
+    assert y.dtype == jnp.bfloat16 and P.accum32(y).dtype == jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# golden bit-identity of the default policy (pre-refactor outputs)
+# ---------------------------------------------------------------------------
+
+def test_default_policy_bit_identical_to_golden():
+    """The f32 policy reproduces the pre-refactor golden outputs exactly:
+    same selected ids AND the same value bytes, on the sim drivers (all
+    three engines) and the mesh drivers."""
+    import golden_capture as gc
+
+    assert os.path.exists(gc.GOLDEN_PATH), \
+        "golden file missing — run: PYTHONPATH=src:tests python -m " \
+        "golden_capture"
+    with open(gc.GOLDEN_PATH) as f:
+        want = json.load(f)
+    got = gc.compute_golden()
+    assert got == want, {k: (got[k], want[k])
+                         for k in want if got.get(k) != want[k]}
+
+
+# ---------------------------------------------------------------------------
+# bf16 parity sweep across the registered zoo
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(REGISTRY))
+def test_chunk_marginals_bf16_parity(name):
+    """bf16 feature tiles give marginals within bf16 tolerance of the f32
+    pipeline, from empty AND non-trivial states."""
+    rng = np.random.default_rng(7)
+    oracle, X = REGISTRY[name](rng, 64, D)
+    st = oracle.init_state()
+    aux = oracle.prep(st, X)
+    for i in (2, 9):
+        st = oracle.add(st, jax.tree.map(lambda a: a[i], aux))
+    for state in (oracle.init_state(), st):
+        g32 = np.asarray(oracle.chunk_marginals(state, X))
+        g16 = np.asarray(oracle.chunk_marginals(state,
+                                                X.astype(jnp.bfloat16)))
+        assert g16.dtype == np.float32   # gains stay on the accumulate plane
+        scale = max(1.0, float(np.max(np.abs(g32))))
+        np.testing.assert_allclose(g16, g32, rtol=3e-2, atol=3e-2 * scale,
+                                   err_msg=name)
+
+
+@pytest.mark.parametrize("name", sorted(REGISTRY))
+def test_chunk_accept_bf16_parity(name):
+    """bf16 accept sweeps respect budget/eligibility exactly and land in
+    the f32 gain band (masks may flip only on near-tau rows)."""
+    rng = np.random.default_rng(11)
+    oracle, X = REGISTRY[name](rng, 48, D)
+    st0 = oracle.init_state()
+    gains = oracle.chunk_marginals(st0, X)
+    tau = float(jnp.median(gains))
+    elig = jnp.asarray(rng.random(48) < 0.8)
+    budget = 6
+    m32, s32, g32 = oracle.chunk_accept(st0, X, elig, tau, budget)
+    m16, s16, g16 = oracle.chunk_accept(st0, X.astype(jnp.bfloat16), elig,
+                                        tau, budget)
+    m16 = np.asarray(m16)
+    assert m16.sum() <= budget
+    assert not np.any(m16 & ~np.asarray(elig))
+    if bool(np.all(m16 == np.asarray(m32))):
+        # same accept trajectory -> gains must agree to bf16 tolerance
+        scale = max(1.0, float(np.max(np.abs(np.asarray(g32)))))
+        np.testing.assert_allclose(np.asarray(g16), np.asarray(g32),
+                                   rtol=3e-2, atol=3e-2 * scale,
+                                   err_msg=name)
+
+
+@pytest.mark.parametrize("name", sorted(REGISTRY))
+def test_two_round_value_ratio_bf16(name):
+    """Guarantee regression: the end-to-end two-round driver at bf16
+    storage keeps >= 0.99x of the f32 value across the zoo (the paper's
+    ratios are robust to storage-plane rounding because thresholds,
+    gains and values all accumulate in f32)."""
+    rng = np.random.default_rng(3)
+    oracle, X, feats_mk, ids_mk, valid_mk = _sim_instance(name, rng)
+    key = jax.random.PRNGKey(5)
+    vals = {}
+    for prec in ("f32", "bf16"):
+        cfg = MRConfig(k=K_CAP, n_total=N, n_machines=M, precision=prec)
+        res, log = two_round_sim(oracle, feats_mk, ids_mk, valid_mk, cfg,
+                                 key)
+        vals[prec] = float(res.value)
+        assert int(res.sol_size) > 0, (name, prec)
+    assert vals["bf16"] >= 0.99 * vals["f32"] - 1e-6, (name, vals)
+
+
+# ---------------------------------------------------------------------------
+# byte accounting (satellite: buffer_bytes no longer hardcodes 4)
+# ---------------------------------------------------------------------------
+
+def test_buffer_bytes_tracks_itemsize():
+    cap, d = 96, 32
+    assert buffer_bytes(cap, d) == cap * (4 * d + 5)          # f32 default
+    assert buffer_bytes(cap, d, itemsize=2) == cap * (2 * d + 5)
+    # the feature plane is exactly half; ids+validity overhead unchanged
+    assert (buffer_bytes(cap, d) - buffer_bytes(cap, d, itemsize=2)
+            == cap * d * 2)
+
+
+def test_round_log_feature_bytes_halve_at_bf16():
+    """Regression: a bf16 run's RoundLog reports exactly half the feature
+    bytes of the f32 run — record by record."""
+    rng = np.random.default_rng(0)
+    oracle, X, feats_mk, ids_mk, valid_mk = _sim_instance(
+        "feature_coverage", rng)
+    key = jax.random.PRNGKey(0)
+    logs = {}
+    for prec in ("f32", "bf16"):
+        cfg = MRConfig(k=K_CAP, n_total=N, n_machines=M, precision=prec)
+        _, log = two_round_sim(oracle, feats_mk, ids_mk, valid_mk, cfg, key)
+        logs[prec] = log
+    assert len(logs["f32"].records) == len(logs["bf16"].records)
+    for r32, r16 in zip(logs["f32"].records, logs["bf16"].records):
+        # bytes = cap*(d*isz + 5): the delta is the halved feature plane
+        delta = r32.bytes_total - r16.bytes_total
+        cap = r32.bytes_total // (D * 4 + 5)
+        assert delta == cap * D * 2, (r32.name, r32.bytes_total,
+                                      r16.bytes_total)
+    assert logs["bf16"].total_bytes < logs["f32"].total_bytes
+
+
+# ---------------------------------------------------------------------------
+# mesh driver + streaming/persist under the policy
+# ---------------------------------------------------------------------------
+
+def test_mesh_selector_bf16():
+    from repro.core.selector import DistributedSelector, SelectorSpec
+    from repro.launch.mesh import make_mesh_for
+
+    rng = np.random.default_rng(0)
+    X = jnp.asarray((rng.random((N, D)).astype(np.float32)) ** 2)
+    mesh = make_mesh_for(len(jax.devices()), model_parallel=1)
+    vals = {}
+    for prec in ("f32", "bf16"):
+        spec = SelectorSpec(k=K_CAP, oracle="feature_coverage",
+                            precision=prec)
+        sel = DistributedSelector(spec, mesh, n_total=N, feat_dim=D)
+        with mesh:
+            emb = jax.device_put(X, sel.data_sharding())
+            res = sel.select(emb, key=jax.random.PRNGKey(11))
+        vals[prec] = float(res.value)
+        assert int(res.sol_size) == K_CAP
+    assert vals["bf16"] >= 0.99 * vals["f32"]
+
+
+def test_streaming_bf16_checkpoint_roundtrip():
+    """bf16 sieve pools ride through the persist codec: the checkpoint
+    tail keeps the storage dtype, restore is bit-identical, and restoring
+    into a selector with a different precision policy fails loudly."""
+    from repro.core import FeatureCoverage
+    from repro.streaming import SieveSpec, StreamingSelector
+    from repro.streaming import persist
+
+    rng = np.random.default_rng(1)
+    oracle = FeatureCoverage(feat_dim=D)
+    spec = SieveSpec(k=K_CAP, precision="bf16")
+    sel = StreamingSelector(oracle, spec, D, chunk_elems=32)
+    sel.ingest(rng.random((80, D)).astype(np.float32))
+    assert sel.corpus.dtype == np.dtype(jnp.bfloat16)
+    assert sel.state.sol_feats.dtype == jnp.bfloat16
+    snap = persist.snapshot_selector(sel)
+    assert np.asarray(snap["tail"]).dtype == np.dtype(jnp.bfloat16)
+
+    twin = StreamingSelector(oracle, spec, D, chunk_elems=32)
+    persist.restore_selector(twin, snap)
+    extra = rng.random((40, D)).astype(np.float32)
+    sel.ingest(extra)
+    twin.ingest(extra)
+    a, b = sel.select(), twin.select()
+    assert np.asarray(a.sol_ids).tolist() == np.asarray(b.sol_ids).tolist()
+    assert float(a.value) == float(b.value)   # bit-identical replay
+
+    f32_sel = StreamingSelector(
+        oracle, SieveSpec(k=K_CAP, precision="f32"), D, chunk_elems=32)
+    with pytest.raises(ValueError):
+        persist.restore_selector(f32_sel, snap)
