@@ -10,6 +10,7 @@
   selection_slo           sustained p50/p99 latency SLO + kill/restore parity
   streaming               one-pass sieve throughput, value ratios, warm-start
   precision               bf16 storage vs f32: throughput, bytes, value ratio
+  constrained_quality     knapsack/partition ratios vs constrained OPT + throughput
   selection_roofline      §Perf pair-3 report (paper technique on the pod)
   roofline_report         aggregates results/dryrun into §Roofline rows
 
@@ -37,8 +38,8 @@ import traceback
 
 MODULES = ("approx_ratio", "epoch_quality", "adversarial", "memory_rounds",
            "distributed_baselines", "selection_throughput", "selection_qps",
-           "selection_slo", "streaming", "precision", "selection_roofline",
-           "roofline_report")
+           "selection_slo", "streaming", "precision", "constrained_quality",
+           "selection_roofline", "roofline_report")
 
 
 def _missing_outputs(mod, name: str, t0: float) -> list:

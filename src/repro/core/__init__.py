@@ -1,9 +1,13 @@
 """The paper's contribution: cardinality-constrained monotone submodular
 maximization in the MapReduce model (Liu–Vondrák, SOSA 2019)."""
 
+from repro.core.constraints import (CONSTRAINT_NAMES, Cardinality,
+                                    Constraint, Knapsack, PartitionMatroid,
+                                    make_constraint, split_plane)
 from repro.core.functions import (AdversarialThreshold, ExemplarClustering,
                                   FacilityLocation, FeatureCoverage,
                                   GraphCut, LogDetDiversity,
+                                  MutualInformationGaussian,
                                   SaturatedCoverage, SubmodularOracle,
                                   WeightedCoverage, bind_query,
                                   make_adversarial_instance)
@@ -15,16 +19,20 @@ from repro.core.mapreduce import (MRConfig, QueryBatch, SelectionResult,
                                   two_round_batch_mesh, two_round_batch_sim,
                                   two_round_known_opt_mesh,
                                   two_round_known_opt_sim, two_round_sim)
-from repro.core.selector import (ORACLE_NAMES, DistributedSelector,
-                                 SelectorSpec, make_oracle)
+from repro.core.selector import (ALGORITHMS, ORACLE_NAMES,
+                                 DistributedSelector, SelectorSpec,
+                                 make_oracle)
 from repro.core.threshold import (GreedyStats, pack_by_mask,
                                   threshold_filter, threshold_greedy,
                                   threshold_greedy_batch)
 
 __all__ = [
     "GreedyStats",
+    "CONSTRAINT_NAMES", "Cardinality", "Constraint", "Knapsack",
+    "PartitionMatroid", "make_constraint", "split_plane",
     "AdversarialThreshold", "ExemplarClustering", "FacilityLocation",
-    "FeatureCoverage", "GraphCut", "LogDetDiversity", "SaturatedCoverage",
+    "FeatureCoverage", "GraphCut", "LogDetDiversity",
+    "MutualInformationGaussian", "SaturatedCoverage",
     "SubmodularOracle", "WeightedCoverage", "bind_query",
     "make_adversarial_instance",
     "MRConfig", "QueryBatch", "SelectionResult", "dense_two_round_sim",
@@ -32,7 +40,8 @@ __all__ = [
     "multi_threshold_mesh", "multi_threshold_sim",
     "sparse_two_round_sim", "two_round_batch_mesh", "two_round_batch_sim",
     "two_round_known_opt_mesh", "two_round_known_opt_sim", "two_round_sim",
-    "ORACLE_NAMES", "DistributedSelector", "SelectorSpec", "make_oracle",
+    "ALGORITHMS", "ORACLE_NAMES", "DistributedSelector", "SelectorSpec",
+    "make_oracle",
     "pack_by_mask", "threshold_filter", "threshold_greedy",
     "threshold_greedy_batch",
 ]

@@ -1,0 +1,290 @@
+"""First-class feasibility constraints for distributed submodular selection.
+
+The paper's drivers are k-cardinality only; the Barbosa–Ene–Nguyen–Ward
+framework (PAPERS.md, arxiv 1507.03719) extends the same two-round /
+multi-epoch structure to any *hereditary* constraint — every subset of a
+feasible set is feasible — provided the local ThresholdGreedy loops only
+accept elements that keep the running solution feasible.  This module is
+the abstraction every engine consults:
+
+* ``Cardinality`` — the paper's |S| <= k.  Carries no state and no
+  attribute plane; every engine treats it exactly like the unconstrained
+  path (the k-slot budget is already threaded everywhere), so runs are
+  bit-identical to pre-constraint behaviour.
+* ``Knapsack`` — per-element costs c_e, budget B, feasibility
+  sum(c_e) <= B.  Accept uses *cost-ratio thresholding*: an element
+  qualifies at threshold tau when gain >= tau * c_e (the density rule the
+  knapsack analyses of the framework need); with unit costs and B = k
+  this degenerates to cardinality exactly (tau * 1.0 == tau in f32, so
+  even the accept bits match).  State is one f32 scalar (spent budget).
+* ``PartitionMatroid`` — elements are labelled with a part id; part p may
+  contribute at most cap_p elements.  State is the (P,) per-part count
+  vector.
+
+Feasibility state is O(1)/O(P) and rides every driver carry (epochs,
+sieve lanes, vmapped tau-grid lanes).  The jittable contract is
+
+    ok, cstate' = constraint.admit(cstate, plane_row)
+
+built from ``eligible`` (batched feasibility) + ``add`` (state update).
+
+**The attribute plane.**  Engines never see the constraint's (n_total,)
+host arrays directly: each constraint packs the per-element attributes it
+needs (cost; part id) into ``n_planes`` f32 columns via ``plane(ids)``,
+and the round drivers CONCATENATE those columns onto the feature matrix
+before pack/gather — the plane rides the existing storage-precision
+gather buffers, so byte accounting, capacity caps, and the bf16 storage
+policy all cover it with zero new plumbing (message width d + n_planes).
+``split_plane`` peels the columns back off in front of every oracle call.
+Note the storage-precision caveat: under bf16 storage the plane is
+rounded like any other feature column — costs lose precision and part
+ids stay exact only up to 256 parts (bf16 has an 8-bit mantissa).
+
+Monotonicity requirement: every engine's lazy/fused frontier EXCLUDES
+currently-infeasible rows from its hot set, which is only sound because
+feasibility here is monotone — spent budget and part counts only grow,
+so infeasible-now means infeasible-forever.  A constraint violating this
+(non-monotone admit) would need the dense engine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, ClassVar, Optional
+
+import jax
+import jax.numpy as jnp
+
+#: registry — CLI / SelectorSpec choices derive from this tuple
+CONSTRAINT_NAMES = ("cardinality", "knapsack", "partition_matroid")
+
+
+def validate_constraint_name(name: str, where: str = "constraint") -> None:
+    if name not in CONSTRAINT_NAMES:
+        raise ValueError(f"{where}: unknown constraint {name!r}; "
+                         f"choose from {CONSTRAINT_NAMES}")
+
+
+def split_plane(feats, n_planes: int):
+    """Peel the constraint attribute columns off an augmented feature
+    block: (..., d + p) -> ((..., d), (..., p) f32).  The plane rides the
+    END of the feature axis (concatenated last by the round drivers);
+    p == 0 returns the block untouched with ``None``."""
+    if n_planes == 0:
+        return feats, None
+    return (feats[..., :-n_planes],
+            feats[..., -n_planes:].astype(jnp.float32))
+
+
+def append_plane(feats, constraint, ids):
+    """Concatenate the constraint's attribute columns onto a feature
+    block at the block's storage dtype — the inverse of ``split_plane``.
+    No-op (the same array) when the constraint carries no plane."""
+    if constraint is None or constraint.n_planes == 0:
+        return feats
+    plane = constraint.plane(ids).astype(feats.dtype)
+    return jnp.concatenate([feats, plane], axis=-1)
+
+
+def n_planes_of(constraint) -> int:
+    return 0 if constraint is None else int(constraint.n_planes)
+
+
+class Constraint:
+    """Base feasibility contract.  All methods are pure/jittable; the
+    defaults implement the stateless, plane-less (cardinality-like) case.
+
+    ``fused_mode`` tells the fused engine how to keep multi-accept sweeps
+    on-device:
+      * "none" — no per-row input needed; the unconstrained
+        ``chunk_accept`` call is already exact.
+      * "cost" — feasibility is a scalar budget over per-row costs; the
+        sweep kernels take a (B,) cost vector + remaining-budget scalar
+        (see kernels/_accept_common.py) and track spend in the loop carry.
+      * "scan" — the state is a vector (per-part counts) that cannot ride
+        the kernels' scalar carry; the fused engine falls back to a
+        lax.scan sweep with per-row ``admit`` (still one while-trip per
+        chunk, just not inside a Pallas kernel).
+    """
+
+    name: ClassVar[str] = "cardinality"
+    n_planes: ClassVar[int] = 0
+    fused_mode: ClassVar[str] = "none"
+
+    # ---- state ---------------------------------------------------------
+    def init_state(self):
+        """Fresh feasibility state (a pytree; () when stateless)."""
+        return ()
+
+    # ---- attribute plane ----------------------------------------------
+    def plane(self, ids):
+        """Per-element attribute columns: (...,) int32 global ids ->
+        (..., n_planes) f32.  Invalid ids (-1 padding) may map to
+        arbitrary attributes — validity masks gate them everywhere."""
+        return jnp.zeros(ids.shape + (0,), jnp.float32)
+
+    # ---- feasibility ---------------------------------------------------
+    def eligible(self, cstate, plane):
+        """(..., n_planes) plane rows -> (...,) bool: could this element
+        be admitted under ``cstate``?  Monotone: once False for a given
+        element, stays False forever (state only accumulates)."""
+        return jnp.ones(plane.shape[:-1], bool)
+
+    def row_tau(self, tau, plane):
+        """Per-row accept threshold at level ``tau`` — scalar or (...,).
+        Cost-ratio constraints scale tau by the element cost."""
+        return tau
+
+    def add(self, cstate, plane_row):
+        """Unconditionally account one accepted element's (n_planes,)
+        plane row into the state."""
+        return cstate
+
+    def admit(self, cstate, plane_row):
+        """The one-element contract: (ok (), cstate').  ``cstate'`` has
+        the element accounted iff ``ok`` — callers can carry it straight
+        through a scan."""
+        ok = self.eligible(cstate, plane_row[None])[0]
+        added = self.add(cstate, plane_row)
+        new = jax.tree.map(lambda a, b: jnp.where(ok, a, b), added, cstate)
+        return ok, new
+
+    # ---- fused (on-device) sweep support -------------------------------
+    def fused_cost(self, plane):
+        """(..., n_planes) -> (...,) f32 per-row cost for the sweep
+        kernels (fused_mode == "cost" only)."""
+        raise NotImplementedError
+
+    def fused_cost_budget(self, cstate):
+        """Remaining cost budget () f32 at sweep start."""
+        raise NotImplementedError
+
+    def fused_spend(self, cstate, delta):
+        """Account ``delta`` () f32 of cost accepted by a sweep."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class Cardinality(Constraint):
+    """|S| <= k, the paper's native constraint.  Stateless and plane-less:
+    the k-slot budget is already enforced by every engine, so this object
+    only exists to make 'no extra constraint' a first-class registry
+    entry — selections are bit-identical to ``constraint=None``."""
+
+    name: ClassVar[str] = "cardinality"
+    n_planes: ClassVar[int] = 0
+    fused_mode: ClassVar[str] = "none"
+
+
+@dataclasses.dataclass(frozen=True)
+class Knapsack(Constraint):
+    """sum of per-element costs <= budget, with cost-ratio thresholding.
+
+    ``costs`` is the (n_total,) f32 per-element cost array (positive);
+    ``budget`` the scalar budget B.  State: spent budget, one f32 scalar.
+    An element qualifies at threshold tau when gain >= tau * cost — the
+    density rule — and is feasible while spent + cost <= B.
+    """
+
+    budget: float
+    costs: Any                        # (n_total,) f32
+    name: ClassVar[str] = "knapsack"
+    n_planes: ClassVar[int] = 1
+    fused_mode: ClassVar[str] = "cost"
+
+    def init_state(self):
+        return jnp.zeros((), jnp.float32)
+
+    def plane(self, ids):
+        costs = jnp.asarray(self.costs, jnp.float32)
+        return jnp.take(costs, jnp.clip(ids, 0, costs.shape[0] - 1),
+                        axis=0)[..., None]
+
+    def eligible(self, cstate, plane):
+        return cstate + plane[..., 0] <= jnp.float32(self.budget)
+
+    def row_tau(self, tau, plane):
+        return tau * plane[..., 0]
+
+    def add(self, cstate, plane_row):
+        return cstate + plane_row[0]
+
+    def fused_cost(self, plane):
+        return plane[..., 0]
+
+    def fused_cost_budget(self, cstate):
+        return jnp.float32(self.budget) - cstate
+
+    def fused_spend(self, cstate, delta):
+        return cstate + delta
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionMatroid(Constraint):
+    """Per-part capacities: element e with part label p_e is feasible
+    while the solution holds < cap_{p_e} elements of that part.
+
+    ``parts`` is the (n_total,) int32 part label array, ``capacities``
+    the (P,) int32 per-part caps.  State: the (P,) int32 count vector.
+    The part label rides the attribute plane as an f32 column — exact up
+    to 2^24 parts at f32 storage, 256 at bf16 (document your policy).
+    Threshold semantics are the plain cardinality rule (gain >= tau).
+    """
+
+    capacities: Any                   # (P,) int32
+    parts: Any                        # (n_total,) int32
+    name: ClassVar[str] = "partition_matroid"
+    n_planes: ClassVar[int] = 1
+    fused_mode: ClassVar[str] = "scan"
+
+    def init_state(self):
+        P = jnp.asarray(self.capacities).shape[0]
+        return jnp.zeros((P,), jnp.int32)
+
+    def plane(self, ids):
+        parts = jnp.asarray(self.parts, jnp.int32)
+        return jnp.take(parts, jnp.clip(ids, 0, parts.shape[0] - 1),
+                        axis=0).astype(jnp.float32)[..., None]
+
+    def _part_of(self, plane):
+        P = jnp.asarray(self.capacities).shape[0]
+        return jnp.clip(plane[..., 0].astype(jnp.int32), 0, P - 1)
+
+    def eligible(self, cstate, plane):
+        pid = self._part_of(plane)
+        caps = jnp.asarray(self.capacities, jnp.int32)
+        return jnp.take(cstate, pid) < jnp.take(caps, pid)
+
+    def add(self, cstate, plane_row):
+        pid = self._part_of(plane_row[None])[0]
+        return cstate.at[pid].add(1)
+
+
+def make_constraint(name: str, n_total: Optional[int] = None, costs=None,
+                    budget: Optional[float] = None, parts=None,
+                    capacities=None) -> Optional[Constraint]:
+    """Registry factory.  "cardinality" returns ``None`` — the canonical
+    no-op every driver special-cases to the pre-constraint fast path (an
+    explicit :class:`Cardinality` object takes the generic path and must
+    produce identical selections; tests pin that)."""
+    validate_constraint_name(name, where="make_constraint")
+    if name == "cardinality":
+        return None
+    if name == "knapsack":
+        if costs is None or budget is None:
+            raise ValueError("make_constraint('knapsack') needs costs= "
+                             "and budget=")
+        costs = jnp.asarray(costs, jnp.float32)
+        if n_total is not None and costs.shape[0] != n_total:
+            raise ValueError(f"knapsack costs cover {costs.shape[0]} "
+                             f"elements, corpus has {n_total}")
+        return Knapsack(budget=float(budget), costs=costs)
+    if parts is None or capacities is None:
+        raise ValueError("make_constraint('partition_matroid') needs "
+                         "parts= and capacities=")
+    parts = jnp.asarray(parts, jnp.int32)
+    if n_total is not None and parts.shape[0] != n_total:
+        raise ValueError(f"partition parts cover {parts.shape[0]} "
+                         f"elements, corpus has {n_total}")
+    return PartitionMatroid(capacities=jnp.asarray(capacities, jnp.int32),
+                            parts=parts)

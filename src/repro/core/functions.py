@@ -40,6 +40,10 @@ Oracles implemented:
                      f(S) = L({e0}) - L(S + e0), L(S) = sum_{v in R}
                      min_{e in S} ||v - x_e||^2 (phantom exemplar at 0);
                      state is R's current min-distance vector
+  MutualInformationGaussian  sensor-placement mutual information
+                     f(S) = 0.5 log det(I + X_S X_S^T / noise^2) — the
+                     Gaussian information gain, sharing log_det's O(k*d)
+                     whitened state and Pallas kernels (0.5 gain scale)
   AdversarialThreshold  the hard instance of Theorem 4, in closed form
 """
 
@@ -97,7 +101,8 @@ class SubmodularOracle:
     def chunk_marginals(self, state, cand_feats):
         return self.marginals(state, self.prep(state, cand_feats))
 
-    def chunk_accept(self, state, cand_feats, eligible, tau, budget):
+    def chunk_accept(self, state, cand_feats, eligible, tau, budget,
+                     cost=None, cost_budget=None):
         """Sequential threshold-accept sweep over one chunk (the paper's
         Algorithm-1 inner loop restricted to these B rows): row i's gain
         is its fresh marginal against the state *after* every earlier
@@ -111,22 +116,48 @@ class SubmodularOracle:
         correct for every oracle (including pytree states like log-det's
         incremental Cholesky); the state-decomposable oracles override it
         with fused Pallas kernels that keep the state in VMEM scratch.
+
+        Knapsack-constrained sweeps (core/constraints.py) pass ``cost``
+        (B,) f32 per-row costs and ``cost_budget`` () f32 remaining
+        budget: the accept rule becomes gain >= tau * cost_i (cost-ratio
+        thresholding) with spend tracked in the carry, so intra-chunk
+        budget exhaustion is exact.  ``cost=None`` is the unconstrained
+        sweep, computation-for-computation identical to before.
         """
         aux = self.prep(state, cand_feats)
 
+        if cost is None:
+            def step(carry, xs):
+                st, n_acc = carry
+                ok, aux_row = xs
+                gain = self.marginals(
+                    st, jax.tree.map(lambda a: a[None], aux_row))[0]
+                acc = ok & (gain >= tau) & (n_acc < budget)
+                new_st = self.add(st, aux_row)
+                st = jax.tree.map(
+                    lambda new, old: jnp.where(acc, new, old), new_st, st)
+                return (st, n_acc + acc.astype(jnp.int32)), (acc, gain)
+
+            (st, _), (mask, gains) = jax.lax.scan(
+                step, (state, jnp.zeros((), jnp.int32)), (eligible, aux))
+            return mask, st, gains
+
         def step(carry, xs):
-            st, n_acc = carry
-            ok, aux_row = xs
+            st, n_acc, spent = carry
+            ok, aux_row, ci = xs
             gain = self.marginals(
                 st, jax.tree.map(lambda a: a[None], aux_row))[0]
-            acc = ok & (gain >= tau) & (n_acc < budget)
+            acc = ok & (gain >= tau * ci) & (n_acc < budget) & \
+                (spent + ci <= cost_budget)
             new_st = self.add(st, aux_row)
             st = jax.tree.map(
                 lambda new, old: jnp.where(acc, new, old), new_st, st)
-            return (st, n_acc + acc.astype(jnp.int32)), (acc, gain)
+            return (st, n_acc + acc.astype(jnp.int32),
+                    spent + jnp.where(acc, ci, jnp.float32(0.0))), (acc, gain)
 
-        (st, _), (mask, gains) = jax.lax.scan(
-            step, (state, jnp.zeros((), jnp.int32)), (eligible, aux))
+        (st, _, _), (mask, gains) = jax.lax.scan(
+            step, (state, jnp.zeros((), jnp.int32),
+                   jnp.zeros((), jnp.float32)), (eligible, aux, cost))
         return mask, st, gains
 
     def marginals(self, state, aux):  # pragma: no cover - interface
@@ -165,13 +196,16 @@ class FeatureCoverage(SubmodularOracle):
             new = new * self.weights[None, :]
         return jnp.sum(new, axis=-1)
 
-    def chunk_accept(self, state, cand_feats, eligible, tau, budget):
+    def chunk_accept(self, state, cand_feats, eligible, tau, budget,
+                     cost=None, cost_budget=None):
         if self.use_kernel:
             from repro.kernels import ops
 
             return ops.coverage_accept(cand_feats, state, self.weights,
-                                       eligible, tau, budget)
-        return super().chunk_accept(state, cand_feats, eligible, tau, budget)
+                                       eligible, tau, budget, cost=cost,
+                                       cost_budget=cost_budget)
+        return super().chunk_accept(state, cand_feats, eligible, tau, budget,
+                                    cost=cost, cost_budget=cost_budget)
 
     def add(self, state, aux_row):
         return state + aux_row
@@ -228,7 +262,8 @@ class FacilityLocation(SubmodularOracle):
             return ops.facility_marginals(cand_feats, self.reference, state)
         return self.marginals(state, self.prep(state, cand_feats))
 
-    def chunk_accept(self, state, cand_feats, eligible, tau, budget):
+    def chunk_accept(self, state, cand_feats, eligible, tau, budget,
+                     cost=None, cost_budget=None):
         # The fused engine's hot path: matmul + rectified residual +
         # the whole accept loop in one kernel, (B, r) similarities and the
         # cover vector both living in VMEM scratch.
@@ -236,8 +271,10 @@ class FacilityLocation(SubmodularOracle):
             from repro.kernels import ops
 
             return ops.facility_accept(cand_feats, self.reference, state,
-                                       eligible, tau, budget)
-        return super().chunk_accept(state, cand_feats, eligible, tau, budget)
+                                       eligible, tau, budget, cost=cost,
+                                       cost_budget=cost_budget)
+        return super().chunk_accept(state, cand_feats, eligible, tau, budget,
+                                    cost=cost, cost_budget=cost_budget)
 
     def add(self, state, aux_row):
         return jnp.maximum(state, aux_row)
@@ -275,13 +312,16 @@ class WeightedCoverage(SubmodularOracle):
             return ops.weighted_coverage_marginals(aux, state)
         return jnp.sum(state[None, :] * aux, axis=-1)
 
-    def chunk_accept(self, state, cand_feats, eligible, tau, budget):
+    def chunk_accept(self, state, cand_feats, eligible, tau, budget,
+                     cost=None, cost_budget=None):
         if self.use_kernel:
             from repro.kernels import ops
 
             return ops.weighted_coverage_accept(cand_feats, state, eligible,
-                                                tau, budget)
-        return super().chunk_accept(state, cand_feats, eligible, tau, budget)
+                                                tau, budget, cost=cost,
+                                                cost_budget=cost_budget)
+        return super().chunk_accept(state, cand_feats, eligible, tau, budget,
+                                    cost=cost, cost_budget=cost_budget)
 
     def add(self, state, aux_row):
         return state * (1.0 - aux_row)
@@ -330,14 +370,18 @@ class SaturatedCoverage(SubmodularOracle):
             new = new * self.weights[None, :]
         return jnp.sum(new, axis=-1)
 
-    def chunk_accept(self, state, cand_feats, eligible, tau, budget):
+    def chunk_accept(self, state, cand_feats, eligible, tau, budget,
+                     cost=None, cost_budget=None):
         if self.use_kernel:
             from repro.kernels import ops
 
             return ops.saturated_coverage_accept(cand_feats, state,
                                                  self._cap(), self.weights,
-                                                 eligible, tau, budget)
-        return super().chunk_accept(state, cand_feats, eligible, tau, budget)
+                                                 eligible, tau, budget,
+                                                 cost=cost,
+                                                 cost_budget=cost_budget)
+        return super().chunk_accept(state, cand_feats, eligible, tau, budget,
+                                    cost=cost, cost_budget=cost_budget)
 
     def add(self, state, aux_row):
         return state + aux_row
@@ -390,15 +434,18 @@ class GraphCut(SubmodularOracle):
         lin = aux @ (self.total - 2.0 * self.lam * state)
         return lin - self.lam * jnp.sum(aux * aux, axis=-1)
 
-    def chunk_accept(self, state, cand_feats, eligible, tau, budget):
+    def chunk_accept(self, state, cand_feats, eligible, tau, budget,
+                     cost=None, cost_budget=None):
         # like marginals, the accept kernel bakes lam in at compile time —
         # a traced (per-query) lam routes through the scan reference
         if self.use_kernel and isinstance(self.lam, (int, float)):
             from repro.kernels import ops
 
             return ops.graph_cut_accept(cand_feats, self.total, state,
-                                        eligible, tau, budget, self.lam)
-        return super().chunk_accept(state, cand_feats, eligible, tau, budget)
+                                        eligible, tau, budget, self.lam,
+                                        cost=cost, cost_budget=cost_budget)
+        return super().chunk_accept(state, cand_feats, eligible, tau, budget,
+                                    cost=cost, cost_budget=cost_budget)
 
     def add(self, state, aux_row):
         return state + aux_row
@@ -462,6 +509,23 @@ class LogDetDiversity(SubmodularOracle):
             - (self.alpha ** 2) * jnp.sum(proj * proj, axis=-1)
         return jnp.log(jnp.maximum(resid, LOGDET_EPS))
 
+    def chunk_accept(self, state, cand_feats, eligible, tau, budget,
+                     cost=None, cost_budget=None):
+        # Fused sweep: marginal + rank-1 Gram–Schmidt append per accepted
+        # row, the (k_max, d) whitened basis living in VMEM scratch.  Like
+        # marginals, alpha bakes in at compile time — a traced (per-query)
+        # alpha routes through the scan reference.
+        if self.use_kernel and isinstance(self.alpha, (int, float)):
+            from repro.kernels import ops
+
+            U, logdet, size = state
+            mask, U, logdet, size, gains = ops.logdet_accept(
+                cand_feats, U, logdet, size, eligible, tau, budget,
+                alpha=self.alpha, cost=cost, cost_budget=cost_budget)
+            return mask, (U, logdet, size), gains
+        return super().chunk_accept(state, cand_feats, eligible, tau, budget,
+                                    cost=cost, cost_budget=cost_budget)
+
     def add(self, state, aux_row):
         U, logdet, size = state
         aux_row = accum32(aux_row)
@@ -471,6 +535,85 @@ class LogDetDiversity(SubmodularOracle):
             LOGDET_EPS)
         u_new = (aux_row - v @ U) / jnp.sqrt(d2)
         return (U.at[size].set(u_new), logdet + jnp.log(d2), size + 1)
+
+    def value(self, state):
+        return state[1]
+
+
+@dataclasses.dataclass(frozen=True)
+class MutualInformationGaussian(SubmodularOracle):
+    """Sensor-placement mutual information under the Gaussian-process
+    model with i.i.d. observation noise:
+
+        f(S) = I(y_S; g) = 0.5 * log det(I + sigma^{-2} X_S X_S^T)
+
+    for sensors with feature rows x_e (the GP covariance factor,
+    K = X X^T) and noise variance sigma^2 = ``noise``^2.  This is the
+    classic Krause–Guestrin objective in its information-gain form —
+    monotone submodular for any features, and exactly the log-det
+    geometry at alpha = 1/noise^2 scaled by 1/2.
+
+    The state is therefore the SAME O(k*d) whitened incremental Cholesky
+    as :class:`LogDetDiversity` (U = L^{-1} X_S, the running MI scalar,
+    |S|), and the fused kernels are shared: ``ops.logdet_marginals`` /
+    ``ops.logdet_accept`` take a compile-time ``scale`` that the MI
+    oracle sets to 0.5 (LogDetDiversity's scale=1.0 path is untouched —
+    the scaling is a python-level branch, so its lowering is
+    bit-identical to before this oracle existed).
+
+    ``noise`` is a corpus-level sensor property, not a per-query knob, so
+    MI is deliberately NOT in ``consumes_query_params``.
+    """
+
+    feat_dim: int
+    k_max: int = 1
+    noise: float = 1.0
+    use_kernel: bool = False
+
+    @property
+    def alpha(self):
+        return 1.0 / (self.noise * self.noise)
+
+    def init_state(self):
+        return (jnp.zeros((self.k_max, self.feat_dim), jnp.float32),  # U
+                jnp.zeros((), jnp.float32),                           # MI
+                jnp.zeros((), jnp.int32))                             # |S|
+
+    def marginals(self, state, aux):
+        U, _, _ = state
+        if self.use_kernel:
+            from repro.kernels import ops
+
+            return ops.logdet_marginals(aux, U, self.alpha, scale=0.5)
+        aux = accum32(aux)
+        proj = aux @ U.T
+        resid = 1.0 + self.alpha * jnp.sum(aux * aux, axis=-1) \
+            - (self.alpha ** 2) * jnp.sum(proj * proj, axis=-1)
+        return 0.5 * jnp.log(jnp.maximum(resid, LOGDET_EPS))
+
+    def chunk_accept(self, state, cand_feats, eligible, tau, budget,
+                     cost=None, cost_budget=None):
+        if self.use_kernel:
+            from repro.kernels import ops
+
+            U, mi, size = state
+            mask, U, mi, size, gains = ops.logdet_accept(
+                cand_feats, U, mi, size, eligible, tau, budget,
+                alpha=self.alpha, scale=0.5, cost=cost,
+                cost_budget=cost_budget)
+            return mask, (U, mi, size), gains
+        return super().chunk_accept(state, cand_feats, eligible, tau, budget,
+                                    cost=cost, cost_budget=cost_budget)
+
+    def add(self, state, aux_row):
+        U, mi, size = state
+        aux_row = accum32(aux_row)
+        v = self.alpha * (U @ aux_row)
+        d2 = jnp.maximum(
+            1.0 + self.alpha * jnp.sum(aux_row * aux_row) - jnp.sum(v * v),
+            LOGDET_EPS)
+        u_new = (aux_row - v @ U) / jnp.sqrt(d2)
+        return (U.at[size].set(u_new), mi + 0.5 * jnp.log(d2), size + 1)
 
     def value(self, state):
         return state[1]
@@ -525,7 +668,8 @@ class ExemplarClustering(SubmodularOracle):
             return ops.exemplar_marginals(cand_feats, self.reference, state)
         return self.marginals(state, self.prep(state, cand_feats))
 
-    def chunk_accept(self, state, cand_feats, eligible, tau, budget):
+    def chunk_accept(self, state, cand_feats, eligible, tau, budget,
+                     cost=None, cost_budget=None):
         # The fused engine's hot path: distance block + the whole accept
         # loop in one kernel, the (B, r) distances and the min-distance
         # vector living in VMEM scratch (same shape as facility_accept,
@@ -534,8 +678,10 @@ class ExemplarClustering(SubmodularOracle):
             from repro.kernels import ops
 
             return ops.exemplar_accept(cand_feats, self.reference, state,
-                                       eligible, tau, budget)
-        return super().chunk_accept(state, cand_feats, eligible, tau, budget)
+                                       eligible, tau, budget, cost=cost,
+                                       cost_budget=cost_budget)
+        return super().chunk_accept(state, cand_feats, eligible, tau, budget,
+                                    cost=cost, cost_budget=cost_budget)
 
     def add(self, state, aux_row):
         return jnp.minimum(state, aux_row)

@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core import constraints as constraints_mod
 from repro.core import grids, rounds
 from repro.core import precision as precision_mod
 from repro.core.functions import bind_query, consumes_query_params
@@ -111,6 +112,11 @@ class MRConfig:
     precision: str = "f32"                # dtype policy name; "f32" is the
     #                                       bit-compat default, "bf16" stores
     #                                       features half-width (f32 accum)
+    constraint: Optional[constraints_mod.Constraint] = None
+    #                                       feasibility constraint threaded
+    #                                       through every epoch driver; None
+    #                                       is plain k-cardinality (the
+    #                                       pre-constraint fast path)
 
     def __post_init__(self):
         # trace-time knob validation with the config as the call site —
@@ -118,6 +124,19 @@ class MRConfig:
         validate_engine(self.engine, self.accept, where="MRConfig")
         grids.validate_schedule_kind(self.schedule_kind, where="MRConfig")
         precision_mod.validate(self.precision, where="MRConfig")
+        if self.constraint is not None and not isinstance(
+                self.constraint, constraints_mod.Constraint):
+            raise TypeError(
+                "MRConfig: constraint must be a repro.core.constraints."
+                f"Constraint (or None), got {type(self.constraint).__name__}"
+                "; build one with constraints.make_constraint(...)")
+
+    @property
+    def constraint_planes(self) -> int:
+        """Width of the constraint's attribute plane — the extra f32
+        columns the round backends append to every packed message (and
+        the Lemma-2/6 byte accounting must therefore count)."""
+        return constraints_mod.n_planes_of(self.constraint)
 
     @property
     def precision_policy(self) -> precision_mod.Precision:
@@ -175,14 +194,16 @@ class MRConfig:
 
 # Thin aliases: the drivers' central/local pieces live in repro.core.rounds
 # now; these keep historical call sites and white-box tests stable.
-def _empty_solution(oracle, k):
-    return rounds.empty_solution(oracle, k)
+def _empty_solution(oracle, k, constraint=None):
+    return rounds.empty_solution(oracle, k, constraint)
 
 
 def _greedy(oracle, st, sol, size, feats, ids, valid, tau, k, cfg: MRConfig,
-            k_dyn=None):
-    return rounds.greedy_step(oracle, (st, sol, size), (feats, ids, valid),
-                              tau, k, cfg, k_dyn=k_dyn)
+            k_dyn=None, constraint=None, cstate=None):
+    st, sol, size, cst = rounds.greedy_step(
+        oracle, (st, sol, size, () if cstate is None else cstate),
+        (feats, ids, valid), tau, k, cfg, k_dyn=k_dyn, constraint=constraint)
+    return (st, sol, size) if constraint is None else (st, sol, size, cst)
 
 
 _local_sample = rounds.local_sample
@@ -199,7 +220,10 @@ def _tau_grid(oracle, cfg, s_feats, s_ids, s_valid, k=None):
     ``k`` optionally overrides cfg.k (a traced per-query budget in the
     batched multi-query path).
     Returns (taus (J,), degenerate () int32)."""
-    v = _max_singleton(oracle, s_feats, s_valid)
+    # gathered messages carry the constraint plane — singleton estimates
+    # want the base features only
+    base, _ = rounds.split_plane(s_feats, cfg.constraint_planes)
+    v = _max_singleton(oracle, base, s_valid)
     return _tau_grid_from_v(cfg, v, cfg.k if k is None else k)
 
 
@@ -217,7 +241,9 @@ def _known_opt_select(oracle, rr, cfg: MRConfig, schedule,
                       epoch_keys) -> SelectionResult:
     """Known-OPT epoch driver: run the scalar schedule, report the carried
     solution (Algorithms 4 and 5)."""
-    (st, sol, size), drops = run_epochs(oracle, rr, schedule, epoch_keys, cfg)
+    (st, sol, size, _cst), drops = run_epochs(oracle, rr, schedule,
+                                              epoch_keys, cfg,
+                                              constraint=rr.constraint)
     return SelectionResult(sol, size, oracle.value(st),
                            rr.finalize_drops(drops), jnp.zeros((), jnp.int32))
 
@@ -235,15 +261,17 @@ def _epoch_select(oracle, rr, cfg: MRConfig, epoch_keys, epochs: int,
     S1, sdrop1 = rr.sample(epoch_keys[0], cfg.sample_p, s_cap)
     taus, fb_d = _tau_grid(oracle, cfg, *S1)
     sched = grids.epoch_schedule(taus, epochs, cfg.eps, kind)
-    (st_j, sol_j, size_j), drops = run_epochs(oracle, rr, sched, epoch_keys,
-                                              cfg, first_sample=(S1, sdrop1))
+    (st_j, sol_j, size_j, _cst), drops = run_epochs(
+        oracle, rr, sched, epoch_keys, cfg, first_sample=(S1, sdrop1),
+        constraint=rr.constraint)
     dval = jax.vmap(oracle.value)(st_j)
 
     if with_sparse:
         Ltop, _tdrop = rr.tops(oracle, t_cap)
         taus_s, fb_s = _tau_grid(oracle, cfg, *Ltop)
         sched_s = grids.epoch_schedule(taus_s, epochs, cfg.eps, kind)
-        ssol, ssize, sval = rounds.sparse_sweep(oracle, Ltop, sched_s, cfg)
+        ssol, ssize, sval = rounds.sparse_sweep(oracle, Ltop, sched_s, cfg,
+                                                constraint=rr.constraint)
         sols = jnp.concatenate([sol_j, ssol], axis=0)
         sizes = jnp.concatenate([size_j, ssize], axis=0)
         vals = jnp.concatenate([dval, sval], axis=0)
@@ -271,10 +299,10 @@ def two_round_known_opt_sim(oracle, feats_mk, ids_mk, valid_mk, opt,
                             ) -> Tuple[SelectionResult, RoundLog]:
     """Algorithm 4: 2 rounds, 1/2-approx, OPT known — the 1-epoch scalar
     instantiation at tau = OPT/2k."""
-    m, _, d = feats_mk.shape
+    m = feats_mk.shape[0]
     rr = SimRounds(oracle, feats_mk, ids_mk, valid_mk,
-                   precision=cfg.precision_policy)
-    log = rounds.epoch_round_log(cfg, m, d, 1)
+                   precision=cfg.precision_policy, constraint=cfg.constraint)
+    log = rounds.epoch_round_log(cfg, m, rr.feat_dim, 1)
     res = _known_opt_select(oracle, rr, cfg, [opt / (2.0 * cfg.k)], [key])
     return res, log
 
@@ -288,12 +316,12 @@ def multi_threshold_sim(oracle, feats_mk, ids_mk, valid_mk, opt, t: int,
     ``schedule`` optionally overrides the thresholds (absolute values,
     descending) — used by the Theorem-4 adversarial benchmark, which needs
     control over the boundary between element values and thresholds."""
-    m, _, d = feats_mk.shape
+    m = feats_mk.shape[0]
     rr = SimRounds(oracle, feats_mk, ids_mk, valid_mk,
-                   precision=cfg.precision_policy)
+                   precision=cfg.precision_policy, constraint=cfg.constraint)
     sched = (list(schedule) if schedule is not None
              else grids.alg5_schedule(opt, cfg.k, t))
-    log = rounds.epoch_round_log(cfg, m, d, t, level_suffix=True)
+    log = rounds.epoch_round_log(cfg, m, rr.feat_dim, t, level_suffix=True)
     res = _known_opt_select(oracle, rr, cfg, sched,
                             rounds.chain_keys(key, t))
     return res, log
@@ -304,10 +332,10 @@ def dense_two_round_sim(oracle, feats_mk, ids_mk, valid_mk, cfg: MRConfig,
     """Algorithm 6: 2 rounds, (1/2 - eps)-approx for 'dense' inputs.
     One grid epoch: the Algorithm-4 pipeline for every tau_j in the grid
     (a vmapped engine lane — the paper's '1/eps log k parallel copies')."""
-    m, _, d = feats_mk.shape
+    m = feats_mk.shape[0]
     rr = SimRounds(oracle, feats_mk, ids_mk, valid_mk,
-                   precision=cfg.precision_policy)
-    log = rounds.epoch_round_log(cfg, m, d, 1, with_grid=True)
+                   precision=cfg.precision_policy, constraint=cfg.constraint)
+    log = rounds.epoch_round_log(cfg, m, rr.feat_dim, 1, with_grid=True)
     res = _epoch_select(oracle, rr, cfg, [key], 1, cfg.schedule_kind,
                         with_sparse=False)
     return res, log
@@ -318,17 +346,18 @@ def sparse_two_round_sim(oracle, feats_mk, ids_mk, valid_mk, cfg: MRConfig,
     """Algorithm 7: 2 rounds, (1/2 - eps)-approx for 'sparse' inputs.
     Each machine ships its O(k) largest singletons to the central machine,
     which tries the threshold grid sequentially."""
-    m, _, d = feats_mk.shape
+    m = feats_mk.shape[0]
     _, _, t_cap = cfg.caps()
     rr = SimRounds(oracle, feats_mk, ids_mk, valid_mk,
-                   precision=cfg.precision_policy)
+                   precision=cfg.precision_policy, constraint=cfg.constraint)
     log = RoundLog()
-    rounds.log_gather(log, "gather-top-singletons", t_cap, m, d,
+    rounds.log_gather(log, "gather-top-singletons", t_cap, m, rr.feat_dim,
                       f"top {t_cap}/machine",
                       itemsize=cfg.precision_policy.storage_itemsize)
     L, tdrop = rr.tops(oracle, t_cap)
     taus, tau_fb = _tau_grid(oracle, cfg, *L)
-    sol_j, size_j, val_j = rounds.sparse_sweep(oracle, L, [taus], cfg)
+    sol_j, size_j, val_j = rounds.sparse_sweep(oracle, L, [taus], cfg,
+                                               constraint=rr.constraint)
     log.add("broadcast-result", buffer_bytes(cfg.k, 0), buffer_bytes(cfg.k, 0),
             "central solution out")
     best = jnp.argmax(val_j)
@@ -352,21 +381,22 @@ def multi_epoch_sim(oracle, feats_mk, ids_mk, valid_mk, cfg: MRConfig, key,
     sequential lane, the tight guarantee with no grid slack)."""
     E = cfg.n_epochs(epochs)
     kind = schedule_kind or cfg.schedule_kind
-    m, _, d = feats_mk.shape
+    m = feats_mk.shape[0]
     rr = SimRounds(oracle, feats_mk, ids_mk, valid_mk,
-                   precision=cfg.precision_policy)
+                   precision=cfg.precision_policy, constraint=cfg.constraint)
     if opt is not None:
         sched = (grids.alg5_schedule(opt, cfg.k, E) if kind == "paper"
                  else grids.epoch_schedule(opt / (2.0 * cfg.k), E, cfg.eps,
                                            kind))
-        log = rounds.epoch_round_log(cfg, m, d, E)
+        log = rounds.epoch_round_log(cfg, m, rr.feat_dim, E)
         # chained keys = multi_threshold_sim's derivation, so the known-OPT
         # paper-schedule instantiation IS Algorithm 5 bit-for-bit
         res = _known_opt_select(oracle, rr, cfg, sched,
                                 rounds.chain_keys(key, E))
         return res, log
     kd, _ks = jax.random.split(key)
-    log = rounds.epoch_round_log(cfg, m, d, E, with_grid=True, with_top=True)
+    log = rounds.epoch_round_log(cfg, m, rr.feat_dim, E, with_grid=True,
+                                 with_top=True)
     res = _epoch_select(oracle, rr, cfg, _epoch_keys_split(kd, E), E, kind)
     return res, log
 
@@ -399,6 +429,7 @@ def two_round_batch_sim(oracle, feats_mk, ids_mk, valid_mk, qb: QueryBatch,
     Returns a SelectionResult whose every field carries a leading (Q,)
     axis, and a RoundLog with shared-vs-per-query bytes broken out.
     """
+    _require_unconstrained(cfg, "two_round_batch_sim")
     m, _, d = feats_mk.shape
     K = cfg.k
     s_cap, f_cap, t_cap = cfg.caps()
@@ -449,6 +480,16 @@ def two_round_batch_sim(oracle, feats_mk, ids_mk, valid_mk, qb: QueryBatch,
 # per-query central phases (shared by the sim and mesh batch drivers)
 # ---------------------------------------------------------------------------
 
+def _require_unconstrained(cfg: MRConfig, where: str) -> None:
+    """The query-batched drivers share one sample/gather round across Q
+    queries but would need Q independent feasibility states woven through
+    the shared buffers — not wired up yet; fail loudly at trace time."""
+    if cfg.constraint is not None:
+        raise NotImplementedError(
+            f"{where}: constrained selection is not supported on the "
+            "query-batched path; run the single-query drivers per query")
+
+
 def _batch_round_log(cfg, m, feat_dim, n_queries: int,
                      shared_stats: bool) -> RoundLog:
     s_cap, f_cap, t_cap = cfg.caps()
@@ -489,11 +530,12 @@ def _query_grid_b(orc, cfg, K, kq, taus, carry, R, L, v_sparse=None):
     """One query's phase 2 + sparse path + best-of: complete every grid
     lane on its gathered survivors, sweep the sparse grid over the
     top-singleton pool, keep the best lane."""
-    st_j, sol_j, size_j = carry
+    st_j, sol_j, size_j = carry[:3]
 
     def p2(st, sol, size, f, i, v, tau):
-        st, sol, size = rounds.greedy_step(orc, (st, sol, size), (f, i, v),
-                                           tau, K, cfg, k_dyn=kq)
+        st, sol, size, _ = rounds.greedy_step(orc, (st, sol, size, ()),
+                                              (f, i, v), tau, K, cfg,
+                                              k_dyn=kq)
         return sol, size, orc.value(st)
 
     dsol, dsize, dval = jax.vmap(p2)(st_j, sol_j, size_j, *R, taus)
@@ -533,12 +575,15 @@ def two_round_known_opt_mesh(oracle, cfg: MRConfig, mesh: Mesh,
     all_gathers inside the shard_map body *are* the two MapReduce rounds."""
     m, gather_axes, data_spec, ids_spec = _mesh_setup(mesh, axes, data_spec)
     # Message rows carry the oracle's feature width (for TPOracle that is
-    # the per-device shard width — exactly what each machine sends).
-    log = rounds.epoch_round_log(cfg, m, oracle.feat_dim, 1)
+    # the per-device shard width — exactly what each machine sends) plus
+    # the constraint's attribute plane.
+    log = rounds.epoch_round_log(
+        cfg, m, oracle.feat_dim + cfg.constraint_planes, 1)
 
     def body(feats, ids, opt, key):
         rr = MeshRounds(oracle, feats, ids, ids >= 0, gather_axes,
-                        precision=cfg.precision_policy)
+                        precision=cfg.precision_policy,
+                        constraint=cfg.constraint)
         return _known_opt_select(oracle, rr, cfg, [opt / (2.0 * cfg.k)],
                                  [key])
 
@@ -560,12 +605,14 @@ def multi_threshold_mesh(oracle, cfg: MRConfig, t: int, mesh: Mesh,
     """Algorithm 5 on a device mesh: t epochs (2t all_gather phases) in one
     program at the known-OPT schedule."""
     m, gather_axes, data_spec, ids_spec = _mesh_setup(mesh, axes, data_spec)
-    log = rounds.epoch_round_log(cfg, m, oracle.feat_dim, t,
-                                 level_suffix=True)
+    log = rounds.epoch_round_log(
+        cfg, m, oracle.feat_dim + cfg.constraint_planes, t,
+        level_suffix=True)
 
     def body(feats, ids, opt, key):
         rr = MeshRounds(oracle, feats, ids, ids >= 0, gather_axes,
-                        precision=cfg.precision_policy)
+                        precision=cfg.precision_policy,
+                        constraint=cfg.constraint)
         return _known_opt_select(oracle, rr, cfg,
                                  grids.alg5_schedule(opt, cfg.k, t),
                                  rounds.chain_keys(key, t))
@@ -594,12 +641,14 @@ def multi_epoch_mesh(oracle, cfg: MRConfig, mesh: Mesh, axes=("data",),
     E = cfg.n_epochs(epochs)
     kind = schedule_kind or cfg.schedule_kind
     m, gather_axes, data_spec, ids_spec = _mesh_setup(mesh, axes, data_spec)
-    log = rounds.epoch_round_log(cfg, m, oracle.feat_dim, E, with_grid=True,
-                                 with_top=True)
+    log = rounds.epoch_round_log(
+        cfg, m, oracle.feat_dim + cfg.constraint_planes, E, with_grid=True,
+        with_top=True)
 
     def body(feats, ids, key):
         rr = MeshRounds(oracle, feats, ids, ids >= 0, gather_axes,
-                        precision=cfg.precision_policy)
+                        precision=cfg.precision_policy,
+                        constraint=cfg.constraint)
         return _epoch_select(oracle, rr, cfg, _epoch_keys_split(key, E), E,
                              kind)
 
@@ -648,6 +697,7 @@ def two_round_batch_mesh(oracle, cfg: MRConfig, mesh: Mesh,
     RoundLog parameterized by ``n_queries``.  The jitted fn specializes on
     Q (a shape), so a service should pin its slot count.
     """
+    _require_unconstrained(cfg, "two_round_batch_mesh")
     m, gather_axes, data_spec, ids_spec = _mesh_setup(mesh, axes, data_spec)
     K = cfg.k
     s_cap, f_cap, t_cap = cfg.caps()
@@ -691,7 +741,7 @@ def two_round_batch_mesh(oracle, cfg: MRConfig, mesh: Mesh,
         # ---- central phase 1 + local survivor filter, per query ---------
         def phase_a(kq, lam, alpha):
             orc = bind_query(oracle, lam, alpha)
-            taus, fb_d, (st_j, sol_j, size_j) = _query_grid_a(
+            taus, fb_d, (st_j, sol_j, size_j, _cst) = _query_grid_a(
                 orc, cfg, S, K, kq, v_dense if shared_stats else None)
             rf, ri, rv, rdrop = jax.vmap(
                 lambda st, sol, size, tau: rounds.local_filter(

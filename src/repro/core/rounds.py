@@ -37,6 +37,7 @@ from typing import Dict, List
 import jax
 import jax.numpy as jnp
 
+from repro.core.constraints import n_planes_of, split_plane, append_plane
 from repro.core.threshold import (exclude_ids, pack_by_mask, threshold_filter,
                                   threshold_greedy)
 
@@ -158,10 +159,16 @@ def local_sample(oracle, key, feats, ids, valid, p, cap):
 
 
 def local_filter(oracle, st, sol, feats, ids, valid, tau, cap, size=None,
-                 k=None, chunk=None):
+                 k=None, chunk=None, constraint=None, cstate=None):
     """Algorithm 2 local half: survivors of ThresholdFilter, packed.
     ``chunk`` (from MRConfig.filter_chunk) tiles the marginal sweep so the
     filter never materializes a full-block prep aux.
+
+    Under a constraint, ``feats`` rows are AUGMENTED (plane columns last):
+    the oracle filter runs on the base features, rows infeasible under the
+    carried ``cstate`` are dropped (sound: feasibility is monotone), the
+    threshold is cost-ratio scaled per row, and the packed survivors keep
+    their plane columns — the plane rides the gather.
 
     Lemma 2's escape hatch: if the partial greedy solution already has k
     elements, the algorithm is done and the machines send *nothing* to the
@@ -169,14 +176,20 @@ def local_filter(oracle, st, sol, feats, ids, valid, tau, cap, size=None,
     Without this, low thresholds in the unknown-OPT grid overflow their
     whp-sized survivor buffers."""
     v = exclude_ids(ids, valid, sol)
-    mask = threshold_filter(oracle, st, feats, v, tau, chunk=chunk)
+    base, plane = split_plane(feats, n_planes_of(constraint))
+    if plane is not None:
+        v = v & constraint.eligible(cstate, plane)
+        tau = constraint.row_tau(tau, plane)
+    mask = threshold_filter(oracle, st, base, v, tau, chunk=chunk)
     if size is not None and k is not None:
         mask = mask & (size < k)
     return pack_by_mask(feats, ids, mask, cap)
 
 
-def local_top(oracle, feats, ids, valid, cap):
-    """Algorithm 7 local half: top-`cap` elements by singleton value.
+def local_top(oracle, feats, ids, valid, cap, constraint=None):
+    """Algorithm 7 local half: top-`cap` elements by singleton value
+    (computed on the base features when ``feats`` carries a constraint
+    plane; the packed rows stay augmented).
 
     Truncation to the O(k) largest is the algorithm's *intended* behaviour
     ("send the O(k) largest elements on each machine"), not a buffer
@@ -184,7 +197,8 @@ def local_top(oracle, feats, ids, valid, cap):
     guarantee (Lemma 7) rests on the balls-and-bins argument that all
     globally-large elements survive this cut whp."""
     st0 = oracle.init_state()
-    gains = oracle.marginals(st0, oracle.prep(st0, feats))
+    base, _ = split_plane(feats, n_planes_of(constraint))
+    gains = oracle.marginals(st0, oracle.prep(st0, base))
     f, i, v, _ = pack_by_mask(feats, ids, valid, cap, priority=gains)
     return f, i, v, jnp.zeros((), jnp.int32)
 
@@ -216,10 +230,16 @@ class SimRounds:
     flattened into the capacity axis — exactly what the central machine
     sees — plus the summed overflow count."""
 
-    def __init__(self, oracle, feats_mk, ids_mk, valid_mk, precision=None):
+    def __init__(self, oracle, feats_mk, ids_mk, valid_mk, precision=None,
+                 constraint=None):
         self.oracle = oracle
         if precision is not None:
             feats_mk = precision.cast_storage(feats_mk)
+        # the constraint's attribute plane rides the sharded feature block
+        # (at storage dtype) — every pack/gather ships it for free, and
+        # feat_dim / the byte accounting below reflect the augmented width
+        feats_mk = append_plane(feats_mk, constraint, ids_mk)
+        self.constraint = constraint
         self.feats_mk, self.ids_mk, self.valid_mk = feats_mk, ids_mk, valid_mk
         self.m, self.n_local, self.feat_dim = feats_mk.shape
 
@@ -235,21 +255,25 @@ class SimRounds:
     def tops(self, oracle, cap):
         m, d = self.m, self.feat_dim
         tf, ti, tv, tdrop = jax.vmap(
-            lambda f, i, v: local_top(oracle, f, i, v, cap)
+            lambda f, i, v: local_top(oracle, f, i, v, cap,
+                                      constraint=self.constraint)
         )(self.feats_mk, self.ids_mk, self.valid_mk)
         return ((tf.reshape(m * cap, d), ti.reshape(-1), tv.reshape(-1)),
                 jnp.sum(tdrop))
 
-    def filter(self, oracle, st, sol, size, tau, cap, k, chunk):
+    def filter(self, oracle, st, sol, size, cstate, tau, cap, k, chunk):
         m, d = self.m, self.feat_dim
         rf, ri, rv, rdrop = jax.vmap(
             lambda f, i, v: local_filter(oracle, st, sol, f, i, v, tau, cap,
-                                         size, k, chunk)
+                                         size, k, chunk,
+                                         constraint=self.constraint,
+                                         cstate=cstate)
         )(self.feats_mk, self.ids_mk, self.valid_mk)
         return ((rf.reshape(m * cap, d), ri.reshape(-1), rv.reshape(-1)),
                 jnp.sum(rdrop))
 
-    def filter_grid(self, oracle, st_j, sol_j, size_j, taus, cap, k, chunk):
+    def filter_grid(self, oracle, st_j, sol_j, size_j, cstate_j, taus, cap,
+                    k, chunk):
         """Per-tau survivor filter for a (J,)-stacked grid of partial
         solutions; machines outer, taus inner, then transposed so each
         grid lane sees its own (m*cap,) gathered message."""
@@ -258,9 +282,10 @@ class SimRounds:
 
         def local_all(f, i, v):
             return jax.vmap(
-                lambda st, sol, size, tau: local_filter(
-                    oracle, st, sol, f, i, v, tau, cap, size, k, chunk)
-            )(st_j, sol_j, size_j, taus)
+                lambda st, sol, size, cst, tau: local_filter(
+                    oracle, st, sol, f, i, v, tau, cap, size, k, chunk,
+                    constraint=self.constraint, cstate=cst)
+            )(st_j, sol_j, size_j, cstate_j, taus)
 
         rf, ri, rv, rdrop = jax.vmap(local_all)(self.feats_mk, self.ids_mk,
                                                 self.valid_mk)
@@ -280,10 +305,12 @@ class MeshRounds:
     counts stay machine-local until ``finalize_drops`` psums them once."""
 
     def __init__(self, oracle, feats, ids, valid, gather_axes,
-                 precision=None):
+                 precision=None, constraint=None):
         self.oracle = oracle
         if precision is not None:
             feats = precision.cast_storage(feats)
+        feats = append_plane(feats, constraint, ids)
+        self.constraint = constraint
         self.feats, self.ids, self.valid = feats, ids, valid
         self.gather_axes = gather_axes
         self.machine_index = jax.lax.axis_index(gather_axes)
@@ -300,21 +327,25 @@ class MeshRounds:
 
     def tops(self, oracle, cap):
         tf, ti, tv, tdrop = local_top(oracle, self.feats, self.ids,
-                                      self.valid, cap)
+                                      self.valid, cap,
+                                      constraint=self.constraint)
         return self._gather3(tf, ti, tv), tdrop
 
-    def filter(self, oracle, st, sol, size, tau, cap, k, chunk):
+    def filter(self, oracle, st, sol, size, cstate, tau, cap, k, chunk):
         rf, ri, rv, rdrop = local_filter(oracle, st, sol, self.feats,
                                          self.ids, self.valid, tau, cap,
-                                         size, k, chunk)
+                                         size, k, chunk,
+                                         constraint=self.constraint,
+                                         cstate=cstate)
         return self._gather3(rf, ri, rv), rdrop
 
-    def filter_grid(self, oracle, st_j, sol_j, size_j, taus, cap, k, chunk):
+    def filter_grid(self, oracle, st_j, sol_j, size_j, cstate_j, taus, cap,
+                    k, chunk):
         rf, ri, rv, rdrop = jax.vmap(
-            lambda st, sol, size, tau: local_filter(
+            lambda st, sol, size, cst, tau: local_filter(
                 oracle, st, sol, self.feats, self.ids, self.valid, tau, cap,
-                size, k, chunk)
-        )(st_j, sol_j, size_j, taus)
+                size, k, chunk, constraint=self.constraint, cstate=cst)
+        )(st_j, sol_j, size_j, cstate_j, taus)
         return self._gather3(rf, ri, rv, lead=1), jnp.sum(rdrop)
 
     def finalize_drops(self, drops):
@@ -325,34 +356,50 @@ class MeshRounds:
 # central-phase pieces and the epoch engine
 # ---------------------------------------------------------------------------
 
-def empty_solution(oracle, k):
+def empty_solution(oracle, k, constraint=None):
+    """The empty carry: (oracle state, sol ids, size, constraint state).
+    The trailing cstate is ``()`` when unconstrained — an empty pytree, so
+    vmapping / scanning the carry adds zero leaves and the unconstrained
+    drivers trace exactly as before."""
     return (oracle.init_state(),
             jnp.full((k,), -1, jnp.int32),
-            jnp.zeros((), jnp.int32))
+            jnp.zeros((), jnp.int32),
+            () if constraint is None else constraint.init_state())
 
 
-def greedy_step(oracle, carry, cands, tau, k, cfg, k_dyn=None):
-    """One central accept: extend the carried (state, sol, size) with the
-    gathered candidate triple at threshold tau via ThresholdGreedy
-    (engine/accept/chunk from cfg), excluding already-selected ids."""
-    st, sol, size = carry
+def greedy_step(oracle, carry, cands, tau, k, cfg, k_dyn=None,
+                constraint=None):
+    """One central accept: extend the carried (state, sol, size, cstate)
+    with the gathered candidate triple at threshold tau via
+    ThresholdGreedy (engine/accept/chunk from cfg), excluding
+    already-selected ids.  Augmented candidate rows are split into base
+    features + constraint plane in front of the engine."""
+    st, sol, size, cstate = carry
     feats, ids, valid = cands
     valid = exclude_ids(ids, valid & (ids >= 0), sol)
-    return threshold_greedy(oracle, st, sol, size, feats, ids, valid, tau, k,
-                            accept=cfg.accept, engine=cfg.engine,
-                            chunk=cfg.chunk, k_dyn=k_dyn)
+    base, plane = split_plane(feats, n_planes_of(constraint))
+    if constraint is None:
+        st, sol, size = threshold_greedy(
+            oracle, st, sol, size, base, ids, valid, tau, k,
+            accept=cfg.accept, engine=cfg.engine, chunk=cfg.chunk,
+            k_dyn=k_dyn)
+        return st, sol, size, cstate
+    return threshold_greedy(
+        oracle, st, sol, size, base, ids, valid, tau, k,
+        accept=cfg.accept, engine=cfg.engine, chunk=cfg.chunk, k_dyn=k_dyn,
+        constraint=constraint, cstate=cstate, cplane=plane)
 
 
-def grid_phase1(oracle, S, taus, k, cfg, k_dyn=None):
+def grid_phase1(oracle, S, taus, k, cfg, k_dyn=None, constraint=None):
     """First central accept of a grid epoch: an independent empty-start
     greedy per threshold guess (the paper's parallel tau copies)."""
     def p1(tau):
-        return greedy_step(oracle, empty_solution(oracle, k), S, tau, k, cfg,
-                           k_dyn)
+        return greedy_step(oracle, empty_solution(oracle, k, constraint), S,
+                           tau, k, cfg, k_dyn, constraint)
     return jax.vmap(p1)(taus)
 
 
-def sparse_sweep(oracle, L, schedule, cfg, k_dyn=None):
+def sparse_sweep(oracle, L, schedule, cfg, k_dyn=None, constraint=None):
     """Algorithm 7's central half, generalized to a schedule: each guess
     lane runs its full descending threshold sequence over the gathered
     top-singleton pool — purely central, no extra rounds.  ``schedule`` is
@@ -361,10 +408,11 @@ def sparse_sweep(oracle, L, schedule, cfg, k_dyn=None):
     k = cfg.k
 
     def per_guess(*taus):
-        carry = empty_solution(oracle, k)
+        carry = empty_solution(oracle, k, constraint)
         for tau in taus:
-            carry = greedy_step(oracle, carry, L, tau, k, cfg, k_dyn)
-        st, sol, size = carry
+            carry = greedy_step(oracle, carry, L, tau, k, cfg, k_dyn,
+                                constraint)
+        st, sol, size, _ = carry
         return sol, size, oracle.value(st)
 
     return jax.vmap(per_guess)(*schedule)
@@ -381,7 +429,7 @@ def chain_keys(key, n: int):
 
 
 def run_epochs(oracle, rounds, schedule, epoch_keys, cfg, k_dyn=None,
-               first_sample=None):
+               first_sample=None, constraint=None):
     """The epoch engine: execute a descending threshold schedule on a
     round-primitives backend, carrying the partial solution across epochs.
 
@@ -395,8 +443,11 @@ def run_epochs(oracle, rounds, schedule, epoch_keys, cfg, k_dyn=None,
     unknown-OPT multi-epoch driver; the grid axis leads the carry).
     ``first_sample`` optionally injects epoch 1's already-gathered sample
     (the unknown-OPT drivers derive the tau grid from it before the first
-    accept).  Returns ((state, sol, size), drops); drops are summed but
-    NOT finalized — callers pass them through rounds.finalize_drops once.
+    accept).  ``constraint`` threads the feasibility contract through every
+    central accept and local filter; its O(1)/O(P) state rides the carry
+    across epochs (per grid lane when vmapped).  Returns
+    ((state, sol, size, cstate), drops); drops are summed but NOT
+    finalized — callers pass them through rounds.finalize_drops once.
     """
     k = cfg.k
     s_cap, f_cap, _ = cfg.caps()
@@ -411,23 +462,27 @@ def run_epochs(oracle, rounds, schedule, epoch_keys, cfg, k_dyn=None,
             S, sdrop = rounds.sample(epoch_keys[e], cfg.sample_p, s_cap)
         if grid:
             if carry is None:
-                carry = grid_phase1(oracle, S, taus, k, cfg, k_dyn)
+                carry = grid_phase1(oracle, S, taus, k, cfg, k_dyn,
+                                    constraint)
             else:
                 carry = jax.vmap(
-                    lambda c, t: greedy_step(oracle, c, S, t, k, cfg, k_dyn)
+                    lambda c, t: greedy_step(oracle, c, S, t, k, cfg, k_dyn,
+                                             constraint)
                 )(carry, taus)
             R, rdrop = rounds.filter_grid(oracle, *carry, taus, f_cap, keff,
                                           cfg.filter_chunk)
             carry = jax.vmap(
                 lambda c, cand, t: greedy_step(oracle, c, cand, t, k, cfg,
-                                               k_dyn)
+                                               k_dyn, constraint)
             )(carry, R, taus)
         else:
             if carry is None:
-                carry = empty_solution(oracle, k)
-            carry = greedy_step(oracle, carry, S, taus, k, cfg, k_dyn)
+                carry = empty_solution(oracle, k, constraint)
+            carry = greedy_step(oracle, carry, S, taus, k, cfg, k_dyn,
+                                constraint)
             R, rdrop = rounds.filter(oracle, *carry, taus, f_cap, keff,
                                      cfg.filter_chunk)
-            carry = greedy_step(oracle, carry, R, taus, k, cfg, k_dyn)
+            carry = greedy_step(oracle, carry, R, taus, k, cfg, k_dyn,
+                                constraint)
         drops = drops + sdrop + rdrop
     return carry, drops

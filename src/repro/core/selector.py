@@ -14,17 +14,26 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import constraints as constraints_mod
 from repro.core import functions as F
 from repro.core import mapreduce as mr
 from repro.core import precision as precision_mod
+
+#: every algorithm DistributedSelector can run — CLIs and serving configs
+#: derive their choices from this tuple, not hand-copied literals.
+ALGORITHMS = ("two_round", "multi_epoch", "multi_threshold",
+              "two_round_known_opt")
+
+#: the subset that needs no OPT estimate / guess loop — what a serving
+#: loop can run unattended on every request.
+OPT_FREE_ALGORITHMS = ("two_round", "multi_epoch")
 
 
 @dataclasses.dataclass(frozen=True)
 class SelectorSpec:
     k: int
     oracle: str = "feature_coverage"   # see ORACLE_NAMES for the full zoo
-    algorithm: str = "two_round"       # | multi_epoch | multi_threshold
-    #                                    | two_round_known_opt
+    algorithm: str = "two_round"       # see ALGORITHMS
     t: int = 1                         # thresholds for multi_threshold
     eps: float = 0.15
     epochs: Optional[int] = None       # multi_epoch levels; None derives
@@ -46,9 +55,23 @@ class SelectorSpec:
     precision: str = "f32"             # storage/compute policy ("f32" |
     #                                    "bf16"); accumulators stay f32 —
     #                                    see repro.core.precision
+    constraint: str = "cardinality"    # feasibility constraint, see
+    #                                    constraints.CONSTRAINT_NAMES; the
+    #                                    per-element data (costs / part
+    #                                    labels) is a DistributedSelector
+    #                                    constructor argument — it belongs
+    #                                    to the corpus, not the spec
+    knapsack_budget: Optional[float] = None   # constraint="knapsack" budget
+    mi_noise: float = 1.0              # MutualInformationGaussian sensor
+    #                                    noise variance sigma^2
 
     def __post_init__(self):
         precision_mod.validate(self.precision, where="SelectorSpec")
+        constraints_mod.validate_constraint_name(self.constraint,
+                                                 where="SelectorSpec")
+        if self.algorithm not in ALGORITHMS:
+            raise ValueError(f"SelectorSpec: unknown algorithm "
+                             f"{self.algorithm!r}; choose from {ALGORITHMS}")
 
     @property
     def precision_policy(self):
@@ -59,7 +82,8 @@ class SelectorSpec:
 #: harness sweep this list, so registering an oracle here opts it into the
 #: ratio / throughput / property-test coverage.
 ORACLE_NAMES = ("feature_coverage", "facility_location", "weighted_coverage",
-                "saturated_coverage", "graph_cut", "log_det", "exemplar")
+                "saturated_coverage", "graph_cut", "log_det", "exemplar",
+                "mutual_information")
 
 
 def make_oracle(spec: SelectorSpec, feat_dim: int, reference=None,
@@ -96,6 +120,10 @@ def make_oracle(spec: SelectorSpec, feat_dim: int, reference=None,
         assert reference is not None, "exemplar needs a reference set"
         return F.ExemplarClustering(feat_dim=feat_dim, reference=reference,
                                     use_kernel=spec.use_kernel)
+    if spec.oracle == "mutual_information":
+        return F.MutualInformationGaussian(feat_dim=feat_dim, k_max=spec.k,
+                                           noise=spec.mi_noise,
+                                           use_kernel=spec.use_kernel)
     raise ValueError(f"unknown oracle {spec.oracle!r}; "
                      f"registered: {ORACLE_NAMES}")
 
@@ -110,7 +138,8 @@ class DistributedSelector:
     """
 
     def __init__(self, spec: SelectorSpec, mesh: Mesh, n_total: int,
-                 feat_dim: int, axes=("data",), reference=None, total=None):
+                 feat_dim: int, axes=("data",), reference=None, total=None,
+                 element_costs=None, parts=None, part_caps=None):
         self.spec = spec
         self.mesh = mesh
         # Stash the oracle's corpus-level statistics: opt_upper_bound (and
@@ -128,12 +157,19 @@ class DistributedSelector:
         m = 1
         for a in self.axes:
             m *= mesh.shape[a]
+        # the constraint object marries the spec's knob (name, budget) to
+        # the corpus's per-element data (costs / part labels) — built here
+        # because only the selector sees both
+        self.constraint = constraints_mod.make_constraint(
+            spec.constraint, n_total, costs=element_costs,
+            budget=spec.knapsack_budget, parts=parts, capacities=part_caps)
         self.cfg = mr.MRConfig(k=spec.k, n_total=n_total, n_machines=m,
                                eps=spec.eps, accept=spec.accept,
                                engine=spec.engine, chunk=spec.chunk,
                                epochs=spec.epochs,
                                schedule_kind=spec.schedule_kind,
-                               precision=spec.precision)
+                               precision=spec.precision,
+                               constraint=self.constraint)
         self.cfg.require_even_shards(where="DistributedSelector data sharding")
         tp = mesh.shape.get("model", 1)
         self.tp = (spec.oracle_tp and tp > 1 and feat_dim % tp == 0 and

@@ -17,36 +17,54 @@ import numpy as np
 
 
 def greedy(oracle, feats, valid, k: int, ids=None,
-           k_dyn=None) -> Tuple[jax.Array, jax.Array, jax.Array]:
+           k_dyn=None, constraint=None
+           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Classic greedy: k batched argmax steps.  Returns (ids, size, value).
 
     The solution buffer reports row indices, or global ids when ``ids``
     is given (the streaming merge pools carry arbitrary global ids).
     ``k_dyn`` (optional, traced () int32 <= k) caps the accepted count
     within the fixed k-step loop — per-request budgets through one
-    compiled program, same convention as threshold_greedy."""
+    compiled program, same convention as threshold_greedy.  ``constraint``
+    (a repro.core.constraints.Constraint) restricts each step's argmax to
+    currently-feasible elements and accounts accepted elements into the
+    feasibility state; its attribute plane is looked up from the global
+    ids (row indices when ``ids`` is None)."""
     n = feats.shape[0]
     k_eff = k if k_dyn is None else jnp.minimum(
         jnp.asarray(k_dyn, jnp.int32), k)
     st = oracle.init_state()
     aux = oracle.prep(st, feats)
     sol = jnp.full((k,), -1, jnp.int32)
+    constrained = constraint is not None and constraint.n_planes > 0
+    if constrained:
+        plane = constraint.plane(
+            jnp.arange(n, dtype=jnp.int32) if ids is None else ids)
+        cstate0 = constraint.init_state()
 
     def body(i, carry):
-        st, sol, taken = carry
+        st, sol, taken, cstate = carry
         gains = oracle.marginals(st, aux)
         gains = jnp.where(valid & ~taken, gains, -jnp.inf)
+        if constrained:
+            gains = jnp.where(constraint.eligible(cstate, plane), gains,
+                              -jnp.inf)
         best = jnp.argmax(gains)
         ok = (gains[best] > 0.0) & (i < k_eff)
         aux_row = jax.tree.map(lambda a: a[best], aux)
         new_st = oracle.add(st, aux_row)
         st = jax.tree.map(lambda a, b: jnp.where(ok, a, b), new_st, st)
+        if constrained:
+            cstate = jax.tree.map(lambda a, b: jnp.where(ok, a, b),
+                                  constraint.add(cstate, plane[best]), cstate)
         out_id = best.astype(jnp.int32) if ids is None else ids[best]
         sol = jnp.where(ok, sol.at[i].set(out_id), sol)
         taken = taken.at[best].set(taken[best] | ok)
-        return st, sol, taken
+        return st, sol, taken, cstate
 
-    st, sol, _ = jax.lax.fori_loop(0, k, body, (st, sol, jnp.zeros((n,), bool)))
+    st, sol, _, _ = jax.lax.fori_loop(
+        0, k, body,
+        (st, sol, jnp.zeros((n,), bool), cstate0 if constrained else ()))
     return sol, jnp.sum(sol >= 0), oracle.value(st)
 
 
@@ -81,4 +99,44 @@ def brute_force(oracle, feats_np: np.ndarray, k: int) -> Tuple[tuple, float]:
         v = value_of(subset)
         if v > best_v:
             best, best_v = subset, v
+    return best, best_v
+
+
+def brute_force_constrained(oracle, feats_np: np.ndarray, k: int,
+                            constraint) -> Tuple[tuple, float]:
+    """Exact *constrained* OPT by enumeration: the best subset of size
+    <= k that the constraint admits (checked on the host via the same
+    ``admit`` contract the engines use, so the two can never disagree on
+    feasibility).  Only for tiny n — the constrained guarantee
+    regressions compare the two-round drivers against this."""
+    n = feats_np.shape[0]
+    feats = jnp.asarray(feats_np)
+    plane = (None if constraint is None or constraint.n_planes == 0
+             else np.asarray(constraint.plane(jnp.arange(n, dtype=jnp.int32))))
+
+    def feasible(subset):
+        if constraint is None or plane is None:
+            return True
+        cstate = constraint.init_state()
+        for e in subset:
+            ok, cstate = constraint.admit(cstate, jnp.asarray(plane[e]))
+            if not bool(ok):
+                return False
+        return True
+
+    def value_of(subset):
+        st = oracle.init_state()
+        aux = oracle.prep(st, feats[np.asarray(subset)])
+        for i in range(len(subset)):
+            st = oracle.add(st, jax.tree.map(lambda a: a[i], aux))
+        return float(oracle.value(st))
+
+    best, best_v = (), 0.0
+    for r in range(1, min(k, n) + 1):
+        for subset in itertools.combinations(range(n), r):
+            if not feasible(subset):
+                continue
+            v = value_of(subset)
+            if v > best_v:
+                best, best_v = subset, v
     return best, best_v

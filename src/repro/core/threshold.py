@@ -109,6 +109,7 @@ class GreedyState(NamedTuple):
     done: jax.Array         # () bool
     n_evals: jax.Array      # () int32 — marginal rows evaluated so far
     n_iters: jax.Array      # () int32
+    cstate: object = ()     # constraint feasibility state (() when none)
 
 
 class LazyState(NamedTuple):
@@ -120,6 +121,38 @@ class LazyState(NamedTuple):
     done: jax.Array         # () bool
     n_evals: jax.Array      # () int32
     n_iters: jax.Array      # () int32
+    cstate: object = ()     # constraint feasibility state (() when none)
+
+
+def _feasible(constraint, cstate, cplane, C):
+    """(C,) feasibility under the current constraint state; all-true when
+    unconstrained.  Sound to exclude from lazy/fused hot sets because
+    constraint feasibility is monotone (see core/constraints.py)."""
+    if constraint is None or cplane is None:   # plane-less: never binding
+        return jnp.ones((C,), bool)
+    return constraint.eligible(cstate, cplane)
+
+
+def _row_tau(constraint, tau, cplane):
+    """Per-row accept threshold — ``tau`` itself when unconstrained (or
+    when the constraint does no cost-ratio scaling)."""
+    if constraint is None or cplane is None:
+        return tau
+    return constraint.row_tau(tau, cplane)
+
+
+def _tau_at(tau_row, idxs):
+    """Index a per-row threshold that may be a scalar broadcast."""
+    return tau_row[idxs] if jnp.ndim(tau_row) else tau_row
+
+
+def _cstate_accept(constraint, cstate, cplane, idx, accept_now):
+    """Conditionally account candidate ``idx`` into the feasibility state."""
+    if constraint is None or cplane is None:
+        return cstate
+    new = constraint.add(cstate, cplane[idx])
+    return jax.tree.map(lambda a, b: jnp.where(accept_now, a, b),
+                        new, cstate)
 
 
 def _apply_accept(st, accept_now, new_state, cand_id, idx, k):
@@ -140,7 +173,8 @@ def _apply_accept(st, accept_now, new_state, cand_id, idx, k):
 def threshold_greedy(oracle, oracle_state, sol_ids, sol_size, cand_feats,
                      cand_ids, cand_valid, tau, k: int, accept: str = "first",
                      engine: str = "dense", chunk: int = DEFAULT_CHUNK,
-                     with_stats: bool = False, k_dyn=None):
+                     with_stats: bool = False, k_dyn=None, constraint=None,
+                     cstate=None, cplane=None):
     """Algorithm 1.  Extends (sol_ids, sol_size, oracle_state) greedily with
     candidates whose marginal w.r.t. the current solution is >= tau, until
     |G| = k or no candidate qualifies.
@@ -155,8 +189,16 @@ def threshold_greedy(oracle, oracle_state, sol_ids, sol_size, cand_feats,
     (optional, a traced () int32 <= k) is the effective cardinality budget
     — the batched multi-query path carries per-query budgets through one
     fixed-shape program this way.
-    Returns (oracle_state, sol_ids, sol_size), plus a GreedyStats when
-    ``with_stats``.
+
+    Constrained selection (core/constraints.py): pass ``constraint``
+    together with its feasibility state ``cstate`` and the candidates'
+    (C, n_planes) attribute plane ``cplane``; every engine then consults
+    feasibility before accepting and applies the constraint's per-row
+    threshold rule (cost-ratio for knapsack).  The return value grows the
+    updated cstate: (oracle_state, sol_ids, sol_size, cstate[, stats]).
+
+    Unconstrained returns (oracle_state, sol_ids, sol_size), plus a
+    GreedyStats when ``with_stats``.
     """
     validate_engine(engine, accept, where="threshold_greedy")
     fn = {"dense": _threshold_greedy_dense,
@@ -164,12 +206,18 @@ def threshold_greedy(oracle, oracle_state, sol_ids, sol_size, cand_feats,
           "fused": _threshold_greedy_fused}[engine]
     k_eff = k if k_dyn is None else jnp.minimum(
         jnp.asarray(k_dyn, jnp.int32), k)
-    out_state, out_sol, out_size, stats = fn(
+    if constraint is not None and cstate is None:
+        cstate = constraint.init_state()
+    out_state, out_sol, out_size, out_cstate, stats = fn(
         oracle, oracle_state, sol_ids, sol_size, cand_feats, cand_ids,
-        cand_valid, tau, k, k_eff, accept, chunk)
+        cand_valid, tau, k, k_eff, accept, chunk, constraint,
+        () if cstate is None else cstate, cplane)
+    out = (out_state, out_sol, out_size)
+    if constraint is not None:
+        out = out + (out_cstate,)
     if with_stats:
-        return out_state, out_sol, out_size, stats
-    return out_state, out_sol, out_size
+        return out + (stats,)
+    return out
 
 
 def threshold_greedy_batch(oracle, oracle_states, sol_ids, sol_sizes,
@@ -177,7 +225,8 @@ def threshold_greedy_batch(oracle, oracle_states, sol_ids, sol_sizes,
                            k_dyn=None, bind=None, bind_params=None,
                            accept: str = "first", engine: str = "dense",
                            chunk: int = DEFAULT_CHUNK,
-                           with_stats: bool = False):
+                           with_stats: bool = False, constraint=None,
+                           cstates=None, cplane=None):
     """Q independent ThresholdGreedy queries over ONE shared candidate block.
 
     The paper's algorithms consume only (oracle state, threshold) — they are
@@ -190,38 +239,55 @@ def threshold_greedy_batch(oracle, oracle_states, sol_ids, sol_sizes,
     capacity, ``k_dyn`` (Q,) int32 the per-query budgets (<= k).  Per-query
     oracle hyper-parameters ride in ``bind_params`` (a pytree with leading
     (Q,) leaves); ``bind(oracle, params_q)`` rebuilds the oracle with one
-    query's slice (see functions.bind_query).
-    Returns (oracle_states, sol_ids, sol_sizes[, GreedyStats]) batched on Q.
+    query's slice (see functions.bind_query).  Constrained selection adds
+    per-query feasibility states ``cstates`` (leading (Q,) leaves) over
+    the shared candidate plane ``cplane``.
+    Returns (oracle_states, sol_ids, sol_sizes[, cstates][, GreedyStats])
+    batched on Q.
     """
     validate_engine(engine, accept, where="threshold_greedy_batch")
     Q = taus.shape[0]
     if k_dyn is None:
         k_dyn = jnp.full((Q,), k, jnp.int32)
+    if constraint is not None and cstates is None:
+        cstates = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (Q,) + a.shape),
+            constraint.init_state())
 
-    def one(state, sol, size, tau, kq, prm):
+    def one(state, sol, size, tau, kq, prm, cst):
         orc = oracle if bind is None else bind(oracle, prm)
-        return threshold_greedy(orc, state, sol, size, cand_feats, cand_ids,
-                                cand_valid, tau, k, accept=accept,
-                                engine=engine, chunk=chunk, k_dyn=kq,
-                                with_stats=True)
+        out = threshold_greedy(orc, state, sol, size, cand_feats, cand_ids,
+                               cand_valid, tau, k, accept=accept,
+                               engine=engine, chunk=chunk, k_dyn=kq,
+                               with_stats=True, constraint=constraint,
+                               cstate=cst, cplane=cplane)
+        if constraint is None:
+            return out[:3] + ((),) + out[3:]
+        return out
 
-    out_state, out_sol, out_size, stats = jax.vmap(one)(
-        oracle_states, sol_ids, sol_sizes, taus, k_dyn, bind_params)
+    out_state, out_sol, out_size, out_cst, stats = jax.vmap(one)(
+        oracle_states, sol_ids, sol_sizes, taus, k_dyn, bind_params,
+        cstates if constraint is not None else ())
+    out = (out_state, out_sol, out_size)
+    if constraint is not None:
+        out = out + (out_cst,)
     if with_stats:
-        return out_state, out_sol, out_size, stats
-    return out_state, out_sol, out_size
+        return out + (stats,)
+    return out
 
 
 def _threshold_greedy_dense(oracle, oracle_state, sol_ids, sol_size,
                             cand_feats, cand_ids, cand_valid, tau, k, k_eff,
-                            accept, chunk):
+                            accept, chunk, constraint=None, cstate=(),
+                            cplane=None):
     """Batched engine: one full-block marginals call per accept."""
     aux = oracle.prep(oracle_state, cand_feats)
     C = cand_feats.shape[0]
     order = jnp.arange(C, dtype=jnp.int32)
+    tau_row = _row_tau(constraint, tau, cplane)
 
     def pick(gains, eligible):
-        ok = eligible & (gains >= tau)
+        ok = eligible & (gains >= tau_row)
         if accept == "first":
             key = jnp.where(ok, order, C)
             idx = jnp.argmin(key)
@@ -233,15 +299,19 @@ def _threshold_greedy_dense(oracle, oracle_state, sol_ids, sol_size,
     def body(st: GreedyState) -> GreedyState:
         gains = oracle.marginals(st.oracle_state, aux)
         eligible = cand_valid & ~st.taken
+        if constraint is not None and cplane is not None:
+            eligible = eligible & constraint.eligible(st.cstate, cplane)
         idx, any_ok = pick(gains, eligible)
         accept_now = any_ok & (st.sol_size < k_eff)
         aux_row = jax.tree.map(lambda a: a[idx], aux)
         new_state = oracle.add(st.oracle_state, aux_row)
         oracle_state, sol_ids, sol_size, taken = _apply_accept(
             st, accept_now, new_state, cand_ids[idx], idx, k)
+        cstate = _cstate_accept(constraint, st.cstate, cplane, idx,
+                                accept_now)
         return GreedyState(oracle_state, sol_ids, sol_size, taken,
                            done=~accept_now, n_evals=st.n_evals + C,
-                           n_iters=st.n_iters + 1)
+                           n_iters=st.n_iters + 1, cstate=cstate)
 
     def cond(st: GreedyState):
         return (~st.done) & (st.sol_size < k_eff)
@@ -250,15 +320,16 @@ def _threshold_greedy_dense(oracle, oracle_state, sol_ids, sol_size,
                        taken=jnp.zeros((C,), bool),
                        done=jnp.asarray(False),
                        n_evals=jnp.zeros((), jnp.int32),
-                       n_iters=jnp.zeros((), jnp.int32))
+                       n_iters=jnp.zeros((), jnp.int32), cstate=cstate)
     out = jax.lax.while_loop(cond, body, init)
-    return (out.oracle_state, out.sol_ids, out.sol_size,
+    return (out.oracle_state, out.sol_ids, out.sol_size, out.cstate,
             GreedyStats(out.n_evals, out.n_iters))
 
 
 def _threshold_greedy_lazy(oracle, oracle_state, sol_ids, sol_size,
                            cand_feats, cand_ids, cand_valid, tau, k, k_eff,
-                           accept, chunk):
+                           accept, chunk, constraint=None, cstate=(),
+                           cplane=None):
     """Lazy engine: stale-gain upper bounds + chunked on-demand rescoring.
 
     Invariant: ``g_stale[i] >= fresh_marginal(i)`` at all times.  It starts
@@ -285,14 +356,21 @@ def _threshold_greedy_lazy(oracle, oracle_state, sol_ids, sol_size,
     largest stale bounds and accepts the freshest-best only if it also
     beats every stale bound outside the chunk (the classic lazy-greedy
     certificate), so the accepted element is a true fresh argmax.
+
+    Constrained runs fold monotone feasibility into the hot set (an
+    infeasible row can never become feasible again, so excluding it is
+    as permanent as a cold stale bound) and compare fresh gains against
+    the constraint's per-row threshold.
     """
     C = cand_feats.shape[0]
     B = max(1, min(chunk, C))
     order = jnp.arange(C, dtype=jnp.int32)
+    tau_row = _row_tau(constraint, tau, cplane)
 
     def body(st: LazyState) -> LazyState:
-        eligible = cand_valid & ~st.taken
-        hot = eligible & (st.g_stale >= tau)
+        eligible = cand_valid & ~st.taken & \
+            _feasible(constraint, st.cstate, cplane, C)
+        hot = eligible & (st.g_stale >= tau_row)
         if accept == "first":
             # contiguous chunk at the scan frontier (first hot index);
             # dynamic_slice clamps near the right edge, which only re-reads
@@ -305,7 +383,7 @@ def _threshold_greedy_lazy(oracle, oracle_state, sol_ids, sol_size,
             # fresh gains are valid upper bounds for every row going forward
             g_stale = jax.lax.dynamic_update_slice_in_dim(st.g_stale,
                                                           g_chunk, c, axis=0)
-            ok = eligible[idxs] & (g_chunk >= tau)
+            ok = eligible[idxs] & (g_chunk >= _tau_at(tau_row, idxs))
             j = jnp.argmax(ok)                    # earliest qualifying
             found = jnp.any(ok)
         else:
@@ -319,10 +397,12 @@ def _threshold_greedy_lazy(oracle, oracle_state, sol_ids, sol_size,
             jkey = jnp.where(chunk_ok, g_chunk, NEG)
             j = jnp.argmax(jkey)
             best_fresh = jkey[j]
+            tau_j = _tau_at(tau_row, idxs)
+            tau_j = tau_j[j] if jnp.ndim(tau_j) else tau_j
             # certificate: the best fresh gain in the chunk dominates every
             # stale bound outside it, hence every fresh gain outside it
             max_rest = jnp.max(key.at[idxs].set(NEG))
-            found = chunk_ok[j] & (best_fresh >= tau) & \
+            found = chunk_ok[j] & (best_fresh >= tau_j) & \
                 (best_fresh >= max_rest)
         idx = idxs[j]
         accept_now = found & (st.sol_size < k_eff)
@@ -340,11 +420,14 @@ def _threshold_greedy_lazy(oracle, oracle_state, sol_ids, sol_size,
         new_state = oracle.add(st.oracle_state, aux_row)
         oracle_state, sol_ids, sol_size, taken = _apply_accept(
             st, accept_now, new_state, cand_ids[idx], idx, k)
+        cstate = _cstate_accept(constraint, st.cstate, cplane, idx,
+                                accept_now)
 
-        hot_left = cand_valid & ~taken & (g_stale >= tau)
+        hot_left = cand_valid & ~taken & \
+            _feasible(constraint, cstate, cplane, C) & (g_stale >= tau_row)
         return LazyState(oracle_state, sol_ids, sol_size, g_stale, taken,
                          done=~jnp.any(hot_left), n_evals=st.n_evals + B,
-                         n_iters=st.n_iters + 1)
+                         n_iters=st.n_iters + 1, cstate=cstate)
 
     def cond(st: LazyState):
         return (~st.done) & (st.sol_size < k_eff)
@@ -354,15 +437,52 @@ def _threshold_greedy_lazy(oracle, oracle_state, sol_ids, sol_size,
                      taken=jnp.zeros((C,), bool),
                      done=~jnp.any(cand_valid),
                      n_evals=jnp.zeros((), jnp.int32),
-                     n_iters=jnp.zeros((), jnp.int32))
+                     n_iters=jnp.zeros((), jnp.int32), cstate=cstate)
     out = jax.lax.while_loop(cond, body, init)
-    return (out.oracle_state, out.sol_ids, out.sol_size,
+    return (out.oracle_state, out.sol_ids, out.sol_size, out.cstate,
             GreedyStats(out.n_evals, out.n_iters))
+
+
+def constrained_chunk_accept(oracle, constraint, oracle_state, cstate,
+                             feats_chunk, plane_chunk, eligible, tau,
+                             budget):
+    """Reference constrained accept sweep: Algorithm 1's sequential loop
+    over one chunk with a per-row ``admit`` consult, as a lax.scan.
+
+    The fused engine routes through here when the constraint's state
+    cannot ride the Pallas kernels' scalar cost carry (fused_mode ==
+    "scan", e.g. the partition matroid's per-part count vector — two
+    same-part rows in one chunk must see each other's count update).
+    Still one while-trip per chunk; only the sweep itself leaves the
+    kernel.  Returns (mask (B,) bool, oracle_state, cstate, gains (B,)).
+    """
+    aux = oracle.prep(oracle_state, feats_chunk)
+    B = eligible.shape[0]
+    tau_vec = jnp.broadcast_to(_row_tau(constraint, tau, plane_chunk), (B,))
+
+    def step(carry, xs):
+        st, cst, n_acc = carry
+        ok, aux_row, prow, tr = xs
+        gain = oracle.marginals(
+            st, jax.tree.map(lambda a: a[None], aux_row))[0]
+        feas = constraint.eligible(cst, prow[None])[0]
+        acc = ok & feas & (gain >= tr) & (n_acc < budget)
+        new_st = oracle.add(st, aux_row)
+        st = jax.tree.map(lambda a, b: jnp.where(acc, a, b), new_st, st)
+        new_cst = constraint.add(cst, prow)
+        cst = jax.tree.map(lambda a, b: jnp.where(acc, a, b), new_cst, cst)
+        return (st, cst, n_acc + acc.astype(jnp.int32)), (acc, gain)
+
+    (oracle_state, cstate, _), (mask, gains) = jax.lax.scan(
+        step, (oracle_state, cstate, jnp.zeros((), jnp.int32)),
+        (eligible, aux, plane_chunk, tau_vec))
+    return mask, oracle_state, cstate, gains
 
 
 def _threshold_greedy_fused(oracle, oracle_state, sol_ids, sol_size,
                             cand_feats, cand_ids, cand_valid, tau, k, k_eff,
-                            accept, chunk):
+                            accept, chunk, constraint=None, cstate=(),
+                            cplane=None):
     """Fused engine: the accept loop runs inside ``oracle.chunk_accept``.
 
     Same stale-gains invariant and scan frontier as the lazy engine
@@ -389,10 +509,13 @@ def _threshold_greedy_fused(oracle, oracle_state, sol_ids, sol_size,
     C = cand_feats.shape[0]
     B = max(1, min(chunk, C))
     arange_b = jnp.arange(B, dtype=jnp.int32)
+    tau_row = _row_tau(constraint, tau, cplane)
+    fused_mode = "none" if constraint is None else constraint.fused_mode
 
     def body(st: LazyState) -> LazyState:
-        eligible = cand_valid & ~st.taken
-        hot = eligible & (st.g_stale >= tau)
+        eligible = cand_valid & ~st.taken & \
+            _feasible(constraint, st.cstate, cplane, C)
+        hot = eligible & (st.g_stale >= tau_row)
         # contiguous chunk at the scan frontier; the dynamic_slice clamp
         # near the right edge only re-reads rows already proven cold or
         # taken (ineligible), which the sweep can never re-accept
@@ -401,8 +524,31 @@ def _threshold_greedy_fused(oracle, oracle_state, sol_ids, sol_size,
         base = jnp.minimum(c, C - B)
         idxs = base + arange_b
         budget = k_eff - st.sol_size
-        mask, oracle_state, g_chunk = oracle.chunk_accept(
-            st.oracle_state, feats_chunk, eligible[idxs], tau, budget)
+        if fused_mode == "none":
+            mask, oracle_state, g_chunk = oracle.chunk_accept(
+                st.oracle_state, feats_chunk, eligible[idxs], tau, budget)
+            cstate = st.cstate
+        elif fused_mode == "cost":
+            # per-row costs + remaining budget ride into the sweep kernel;
+            # the kernel's carry tracks intra-chunk spend so multi-accept
+            # stays on-device (see kernels/_accept_common.py)
+            plane_chunk = jax.lax.dynamic_slice_in_dim(cplane, base, B)
+            cost_chunk = constraint.fused_cost(plane_chunk)
+            mask, oracle_state, g_chunk = oracle.chunk_accept(
+                st.oracle_state, feats_chunk, eligible[idxs], tau, budget,
+                cost=cost_chunk,
+                cost_budget=constraint.fused_cost_budget(st.cstate))
+            cstate = constraint.fused_spend(
+                st.cstate,
+                jnp.sum(jnp.where(mask, cost_chunk, jnp.float32(0.0))))
+        else:
+            # vector-state constraints (partition matroid): the per-part
+            # counts can't ride the kernels' scalar carry, so the sweep
+            # runs as the reference scan with a per-row admit consult
+            plane_chunk = jax.lax.dynamic_slice_in_dim(cplane, base, B)
+            mask, oracle_state, cstate, g_chunk = constrained_chunk_accept(
+                oracle, constraint, st.oracle_state, st.cstate, feats_chunk,
+                plane_chunk, eligible[idxs], tau, budget)
         mask = mask.astype(bool)
         g_stale = jax.lax.dynamic_update_slice_in_dim(st.g_stale, g_chunk,
                                                       c, axis=0)
@@ -414,10 +560,11 @@ def _threshold_greedy_fused(oracle, oracle_state, sol_ids, sol_size,
         sol_size = st.sol_size + jnp.sum(m32)
         taken = st.taken.at[idxs].set(st.taken[idxs] | mask)
 
-        hot_left = cand_valid & ~taken & (g_stale >= tau)
+        hot_left = cand_valid & ~taken & \
+            _feasible(constraint, cstate, cplane, C) & (g_stale >= tau_row)
         return LazyState(oracle_state, sol_ids, sol_size, g_stale, taken,
                          done=~jnp.any(hot_left), n_evals=st.n_evals + B,
-                         n_iters=st.n_iters + 1)
+                         n_iters=st.n_iters + 1, cstate=cstate)
 
     def cond(st: LazyState):
         return (~st.done) & (st.sol_size < k_eff)
@@ -427,9 +574,9 @@ def _threshold_greedy_fused(oracle, oracle_state, sol_ids, sol_size,
                      taken=jnp.zeros((C,), bool),
                      done=~jnp.any(cand_valid),
                      n_evals=jnp.zeros((), jnp.int32),
-                     n_iters=jnp.zeros((), jnp.int32))
+                     n_iters=jnp.zeros((), jnp.int32), cstate=cstate)
     out = jax.lax.while_loop(cond, body, init)
-    return (out.oracle_state, out.sol_ids, out.sol_size,
+    return (out.oracle_state, out.sol_ids, out.sol_size, out.cstate,
             GreedyStats(out.n_evals, out.n_iters))
 
 

@@ -43,24 +43,42 @@ from repro.kernels._tiling import pad_axis as _pad_axis
 
 
 def run_sweep(nrows: int, elig_ref, tau_ref, budget_ref, mask_ref,
-              state_out_ref, gains_ref, st_scratch, row_fn, step_fn):
+              state_out_ref, gains_ref, st_scratch, row_fn, step_fn,
+              cost_ref=None, cbud_ref=None):
     """The sequential accept sweep.  ``st_scratch`` must already hold the
     incoming oracle state; on return it (and ``state_out_ref``) hold the
-    post-sweep state."""
+    post-sweep state.
+
+    ``cost_ref`` / ``cbud_ref`` (both given or both None — a compile-time
+    branch) add knapsack cost-ratio semantics: a row with cost c accepts
+    only when gain >= tau * c AND the running spend + c stays within the
+    (1, 1) remaining-budget scalar.  The cost=None lowering is exactly
+    the pre-knapsack sweep."""
     B = nrows
     tau = tau_ref[0, 0]
     budget = budget_ref[0, 0]
     elig = elig_ref[...]                                   # (B,) int32
     row_iota = jax.lax.broadcasted_iota(jnp.int32, (B, 1), 0)[:, 0]
+    if cost_ref is not None:
+        cost = cost_ref[...]                               # (B,) f32
+        cbud = cbud_ref[0, 0]
 
     def body(i, carry):
-        n_acc, mask, gains = carry
+        if cost_ref is None:
+            n_acc, mask, gains = carry
+        else:
+            n_acc, spent, mask, gains = carry
         row = row_fn(i)                                    # (1, dp)
         st = st_scratch[...]
         gain, new_st = step_fn(st, row)
         here = row_iota == i
         ok = jnp.sum(jnp.where(here, elig, 0)) > 0         # elig[i], masked
-        acc = ok & (gain >= tau) & (n_acc < budget)
+        if cost_ref is None:
+            acc = ok & (gain >= tau) & (n_acc < budget)
+        else:
+            ci = jnp.sum(jnp.where(here, cost, 0.0))       # cost[i], masked
+            acc = ok & (gain >= tau * ci) & (n_acc < budget) \
+                & (spent + ci <= cbud)
 
         @pl.when(acc)
         def _accept():
@@ -68,19 +86,25 @@ def run_sweep(nrows: int, elig_ref, tau_ref, budget_ref, mask_ref,
 
         mask = jnp.where(here, acc.astype(jnp.int32), mask)
         gains = jnp.where(here, gain, gains)
-        return n_acc + acc.astype(jnp.int32), mask, gains
+        if cost_ref is None:
+            return n_acc + acc.astype(jnp.int32), mask, gains
+        spent = spent + jnp.where(acc, ci, jnp.float32(0.0))
+        return n_acc + acc.astype(jnp.int32), spent, mask, gains
 
     init = (jnp.zeros((), jnp.int32),
             jnp.zeros((B,), jnp.int32),
             jnp.zeros((B,), jnp.float32))
-    _, mask, gains = jax.lax.fori_loop(0, B, body, init)
+    if cost_ref is not None:
+        init = (init[0], jnp.zeros((), jnp.float32), init[1], init[2])
+    out = jax.lax.fori_loop(0, B, body, init)
+    mask, gains = out[-2], out[-1]
     mask_ref[...] = mask
     gains_ref[...] = gains
     state_out_ref[...] = st_scratch[...]
 
 
 def accept_call(step_from, x, state, extras, eligible, tau, budget, *,
-                interpret: bool):
+                interpret: bool, cost=None, cost_budget=None):
     """Shared ``pallas_call`` plumbing for the elementwise-state accept
     kernels (state and every extra operand are (d,)-broadcast rows, all
     zero-padded — each oracle's gain/update contributes exactly 0 on
@@ -91,11 +115,18 @@ def accept_call(step_from, x, state, extras, eligible, tau, budget, *,
     ``step_from(*extra_refs)`` builds the ``step_fn(st, x)`` callback for
     :func:`run_sweep`.
 
+    ``cost``/``cost_budget`` (optional, both or neither) append a (B,)
+    per-row cost operand + (1, 1) remaining-budget scalar and switch
+    :func:`run_sweep` to knapsack cost-ratio accepts.  With cost=None the
+    pallas_call is built EXACTLY as before — the cardinality path's
+    lowering (and therefore its bits) cannot drift.
+
     Returns ``(mask (B,) bool, state (d,) f32, gains (B,) f32)``.
     """
     B, d = x.shape
     Bp, dp = _ceil_to(B, _sublane(x.dtype)), _ceil_to(d, 128)
     n_extras = len(extras)
+    with_cost = cost is not None
 
     x_p = _pad_axis(_pad_axis(x, 0, Bp), 1, dp)
     state_p = _pad_axis(state.astype(jnp.float32), 0, dp)[None, :]
@@ -104,12 +135,21 @@ def accept_call(step_from, x, state, extras, eligible, tau, budget, *,
     elig_p = _pad_axis(eligible.astype(jnp.int32), 0, Bp)
     tau_b = jnp.asarray(tau, jnp.float32).reshape(1, 1)
     budget_b = jnp.asarray(budget, jnp.int32).reshape(1, 1)
+    cost_ops = []
+    if with_cost:
+        cost_ops = [_pad_axis(cost.astype(jnp.float32), 0, Bp),
+                    jnp.asarray(cost_budget, jnp.float32).reshape(1, 1)]
 
     def kernel(*refs):
         x_ref, state_ref = refs[0], refs[1]
         extra_refs = refs[2:2 + n_extras]
         elig_ref, tau_ref, budget_ref = refs[2 + n_extras:5 + n_extras]
-        mask_ref, state_out_ref, gains_ref, st_scratch = refs[5 + n_extras:]
+        base = 5 + n_extras
+        cost_ref = cbud_ref = None
+        if with_cost:
+            cost_ref, cbud_ref = refs[base:base + 2]
+            base += 2
+        mask_ref, state_out_ref, gains_ref, st_scratch = refs[base:]
         st_scratch[...] = state_ref[...]
 
         def row(i):
@@ -117,7 +157,8 @@ def accept_call(step_from, x, state, extras, eligible, tau, budget, *,
 
         run_sweep(Bp, elig_ref, tau_ref, budget_ref, mask_ref,
                   state_out_ref, gains_ref, st_scratch, row,
-                  step_from(*extra_refs))
+                  step_from(*extra_refs),
+                  cost_ref=cost_ref, cbud_ref=cbud_ref)
 
     mask, state_out, gains = pl.pallas_call(
         kernel,
@@ -129,6 +170,8 @@ def accept_call(step_from, x, state, extras, eligible, tau, budget, *,
             pl.BlockSpec((Bp,), lambda i: (0,)),
             pl.BlockSpec((1, 1), lambda i: (0, 0)),
             pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            *([pl.BlockSpec((Bp,), lambda i: (0,)),
+               pl.BlockSpec((1, 1), lambda i: (0, 0))] if with_cost else []),
         ],
         out_specs=[
             pl.BlockSpec((Bp,), lambda i: (0,)),
@@ -144,5 +187,5 @@ def accept_call(step_from, x, state, extras, eligible, tau, budget, *,
             pltpu.VMEM((1, dp), jnp.float32),
         ],
         interpret=interpret,
-    )(x_p, state_p, *extras_p, elig_p, tau_b, budget_b)
+    )(x_p, state_p, *extras_p, elig_p, tau_b, budget_b, *cost_ops)
     return mask[:B] != 0, state_out[0, :d], gains[:B]

@@ -30,7 +30,7 @@ from repro.kernels._accept_common import accept_call
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def coverage_accept(x, state, weights, eligible, tau, budget, *,
-                    interpret: bool = False):
+                    interpret: bool = False, cost=None, cost_budget=None):
     """(B, d), (d,)[, (d,)], (B,) bool, (), () -> (mask (B,) bool,
     state (d,) f32, gains (B,) f32) — the FeatureCoverage accept sweep."""
     d = x.shape[1]
@@ -43,4 +43,5 @@ def coverage_accept(x, state, weights, eligible, tau, budget, *,
         return step
 
     return accept_call(step_from, x, state, [w], eligible, tau, budget,
-                       interpret=interpret)
+                       interpret=interpret, cost=cost,
+                       cost_budget=cost_budget)

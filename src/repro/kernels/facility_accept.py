@@ -34,9 +34,14 @@ from repro.kernels._tiling import sublane as _sublane
 from repro.kernels._tiling import pad_axis as _pad_axis
 
 
-def _fa_kernel(cand_ref, refT_ref, state_ref, elig_ref, tau_ref, budget_ref,
-               mask_ref, state_out_ref, gains_ref, sims_scratch, st_scratch,
-               *, nrows):
+def _fa_kernel(*refs, nrows, with_cost):
+    cand_ref, refT_ref, state_ref, elig_ref, tau_ref, budget_ref = refs[:6]
+    base = 6
+    cost_ref = cbud_ref = None
+    if with_cost:
+        cost_ref, cbud_ref = refs[base:base + 2]
+        base += 2
+    mask_ref, state_out_ref, gains_ref, sims_scratch, st_scratch = refs[base:]
     # MXU: the (B, r) similarity block, rectified, lives only in scratch
     sims = jnp.dot(cand_ref[...], refT_ref[...],
                    preferred_element_type=jnp.float32)
@@ -51,17 +56,19 @@ def _fa_kernel(cand_ref, refT_ref, state_ref, elig_ref, tau_ref, budget_ref,
         return gain, jnp.maximum(st, s)
 
     run_sweep(nrows, elig_ref, tau_ref, budget_ref, mask_ref,
-              state_out_ref, gains_ref, st_scratch, row, step)
+              state_out_ref, gains_ref, st_scratch, row, step,
+              cost_ref=cost_ref, cbud_ref=cbud_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def facility_accept(cand, ref, state, eligible, tau, budget, *,
-                    interpret: bool = False):
+                    interpret: bool = False, cost=None, cost_budget=None):
     """(B, d), (r, d), (r,), (B,) bool, (), () -> (mask (B,) bool,
     state (r,) f32, gains (B,) f32) — the facility-location accept sweep."""
     B, d = cand.shape
     r = ref.shape[0]
     Bp, rp = _ceil_to(B, _sublane(cand.dtype)), _ceil_to(r, 128)
+    with_cost = cost is not None
 
     cand_p = _pad_axis(cand, 0, Bp)
     refT_p = _pad_axis(ref.T, 1, rp)                        # (d, rp)
@@ -70,9 +77,13 @@ def facility_accept(cand, ref, state, eligible, tau, budget, *,
     elig_p = _pad_axis(eligible.astype(jnp.int32), 0, Bp)
     tau_b = jnp.asarray(tau, jnp.float32).reshape(1, 1)
     budget_b = jnp.asarray(budget, jnp.int32).reshape(1, 1)
+    cost_ops = []
+    if with_cost:
+        cost_ops = [_pad_axis(cost.astype(jnp.float32), 0, Bp),
+                    jnp.asarray(cost_budget, jnp.float32).reshape(1, 1)]
 
     mask, state_out, gains = pl.pallas_call(
-        functools.partial(_fa_kernel, nrows=Bp),
+        functools.partial(_fa_kernel, nrows=Bp, with_cost=with_cost),
         grid=(1,),
         in_specs=[
             pl.BlockSpec((Bp, d), lambda i: (0, 0)),
@@ -81,6 +92,8 @@ def facility_accept(cand, ref, state, eligible, tau, budget, *,
             pl.BlockSpec((Bp,), lambda i: (0,)),
             pl.BlockSpec((1, 1), lambda i: (0, 0)),
             pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            *([pl.BlockSpec((Bp,), lambda i: (0,)),
+               pl.BlockSpec((1, 1), lambda i: (0, 0))] if with_cost else []),
         ],
         out_specs=[
             pl.BlockSpec((Bp,), lambda i: (0,)),
@@ -97,5 +110,5 @@ def facility_accept(cand, ref, state, eligible, tau, budget, *,
             pltpu.VMEM((1, rp), jnp.float32),
         ],
         interpret=interpret,
-    )(cand_p, refT_p, state_p, elig_p, tau_b, budget_b)
+    )(cand_p, refT_p, state_p, elig_p, tau_b, budget_b, *cost_ops)
     return mask[:B] != 0, state_out[0, :r], gains[:B]

@@ -27,7 +27,8 @@ from repro.kernels._accept_common import accept_call
 @functools.partial(jax.jit,
                    static_argnames=("lam", "interpret"))
 def graph_cut_accept(x, total, state, eligible, tau, budget,
-                     lam: float = 0.5, *, interpret: bool = False):
+                     lam: float = 0.5, *, interpret: bool = False,
+                     cost=None, cost_budget=None):
     """(B, d), (d,), (d,), (B,) bool, (), () -> (mask (B,) bool,
     state (d,) f32, gains (B,) f32) — the GraphCut accept sweep."""
 
@@ -39,4 +40,5 @@ def graph_cut_accept(x, total, state, eligible, tau, budget,
         return step
 
     return accept_call(step_from, x, state, [total], eligible, tau, budget,
-                       interpret=interpret)
+                       interpret=interpret, cost=cost,
+                       cost_budget=cost_budget)

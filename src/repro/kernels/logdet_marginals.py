@@ -34,20 +34,26 @@ DEFAULT_BC = 256
 RESID_EPS = 1e-12   # clamp for the Schur complement (exact math keeps it >= 1)
 
 
-def _ld_kernel(x_ref, ut_ref, out_ref, *, alpha, eps):
+def _ld_kernel(x_ref, ut_ref, out_ref, *, alpha, eps, scale):
     x = x_ref[...].astype(jnp.float32)                   # (bc, d)
     # MXU: (bc, d) @ (d, kp) projection onto the whitened selected basis
     proj = jnp.dot(x, ut_ref[...], preferred_element_type=jnp.float32)
     sq = jnp.sum(x * x, axis=-1)
     resid = 1.0 + alpha * sq - (alpha * alpha) * jnp.sum(proj * proj, axis=-1)
-    out_ref[...] = jnp.log(jnp.maximum(resid, eps))
+    gains = jnp.log(jnp.maximum(resid, eps))
+    # scale=0.5 is the mutual-information oracle (0.5 * log det); the
+    # python-level branch keeps the scale=1.0 lowering bit-identical
+    out_ref[...] = gains if scale == 1.0 else scale * gains
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("alpha", "eps", "block_c", "interpret"))
+                   static_argnames=("alpha", "eps", "block_c", "interpret",
+                                    "scale"))
 def logdet_marginals(x, U, alpha: float = 1.0, eps: float = RESID_EPS, *,
-                     block_c: int = DEFAULT_BC, interpret: bool = False):
-    """(C, d), (k, d) -> (C,) f32 log-det diversity marginal gains."""
+                     block_c: int = DEFAULT_BC, interpret: bool = False,
+                     scale: float = 1.0):
+    """(C, d), (k, d) -> (C,) f32 log-det diversity marginal gains
+    (times the compile-time ``scale`` — 0.5 for the MI oracle)."""
     C, d = x.shape
     k = U.shape[0]
     bc = min(block_c, _ceil_to(C, _sublane(x.dtype)))
@@ -59,7 +65,7 @@ def logdet_marginals(x, U, alpha: float = 1.0, eps: float = RESID_EPS, *,
 
     grid = (Cp // bc,)
     out = pl.pallas_call(
-        functools.partial(_ld_kernel, alpha=alpha, eps=eps),
+        functools.partial(_ld_kernel, alpha=alpha, eps=eps, scale=scale),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bc, d), lambda i: (i, 0)),

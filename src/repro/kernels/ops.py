@@ -18,6 +18,7 @@ from repro.kernels import facility_accept as _fa
 from repro.kernels import facility_marginals as _fm
 from repro.kernels import graph_cut_accept as _ga
 from repro.kernels import graph_cut_marginals as _gc
+from repro.kernels import logdet_accept as _la
 from repro.kernels import logdet_marginals as _ld
 from repro.kernels import saturated_coverage_accept as _sa
 from repro.kernels import saturated_coverage_marginals as _sc
@@ -97,56 +98,81 @@ def graph_cut_marginals(x, total, state, lam=0.5, *, block_c=None,
                                    interpret=_interpret(), **kw)
 
 
-def logdet_marginals(x, U, alpha=1.0, *, block_c=None):
-    """Fused (C,d),(k,d)->(C,) log-det diversity marginals."""
+def logdet_marginals(x, U, alpha=1.0, *, block_c=None, scale=1.0):
+    """Fused (C,d),(k,d)->(C,) log-det diversity marginals (``scale=0.5``
+    is the mutual-information oracle)."""
     kw = {}
     if block_c:
         kw["block_c"] = block_c
-    return _ld.logdet_marginals(x, U, alpha, interpret=_interpret(), **kw)
+    return _ld.logdet_marginals(x, U, alpha, interpret=_interpret(),
+                                scale=scale, **kw)
 
 
-def coverage_accept(x, state, weights, eligible, tau, budget):
+def coverage_accept(x, state, weights, eligible, tau, budget,
+                    cost=None, cost_budget=None):
     """Fused FeatureCoverage chunk-accept sweep: one kernel runs the
     ThresholdGreedy inner loop over the (B, d) tile.  Returns
-    (mask (B,) bool, state (d,), gains (B,))."""
+    (mask (B,) bool, state (d,), gains (B,)).  ``cost``/``cost_budget``
+    switch to knapsack cost-ratio accepts (all accept entries)."""
     return _ca.coverage_accept(x, state, weights, eligible, tau, budget,
-                               interpret=_interpret())
+                               interpret=_interpret(), cost=cost,
+                               cost_budget=cost_budget)
 
 
-def weighted_coverage_accept(x, state, eligible, tau, budget):
+def weighted_coverage_accept(x, state, eligible, tau, budget,
+                             cost=None, cost_budget=None):
     """Fused WeightedCoverage chunk-accept sweep."""
     return _wa.weighted_coverage_accept(x, state, eligible, tau, budget,
-                                        interpret=_interpret())
+                                        interpret=_interpret(), cost=cost,
+                                        cost_budget=cost_budget)
 
 
 def saturated_coverage_accept(x, state, cap, weights, eligible, tau,
-                              budget):
+                              budget, cost=None, cost_budget=None):
     """Fused SaturatedCoverage chunk-accept sweep."""
     return _sa.saturated_coverage_accept(x, state, cap, weights, eligible,
                                          tau, budget,
-                                         interpret=_interpret())
+                                         interpret=_interpret(), cost=cost,
+                                         cost_budget=cost_budget)
 
 
-def graph_cut_accept(x, total, state, eligible, tau, budget, lam=0.5):
+def graph_cut_accept(x, total, state, eligible, tau, budget, lam=0.5,
+                     cost=None, cost_budget=None):
     """Fused GraphCut chunk-accept sweep (lam baked at compile time)."""
     return _ga.graph_cut_accept(x, total, state, eligible, tau, budget,
-                                lam, interpret=_interpret())
+                                lam, interpret=_interpret(), cost=cost,
+                                cost_budget=cost_budget)
 
 
-def facility_accept(cand, ref, state, eligible, tau, budget):
+def facility_accept(cand, ref, state, eligible, tau, budget,
+                    cost=None, cost_budget=None):
     """Fused facility-location chunk-accept sweep: matmul + rectified
     residual + accept loop in one kernel; the (B, r) similarity block
     never leaves VMEM."""
     return _fa.facility_accept(cand, ref, state, eligible, tau, budget,
-                               interpret=_interpret())
+                               interpret=_interpret(), cost=cost,
+                               cost_budget=cost_budget)
 
 
-def exemplar_accept(cand, ref, state, eligible, tau, budget):
+def exemplar_accept(cand, ref, state, eligible, tau, budget,
+                    cost=None, cost_budget=None):
     """Fused exemplar-clustering chunk-accept sweep: matmul + distance
     expansion + accept loop in one kernel; the (B, r) squared-distance
     block never leaves VMEM."""
     return _ea.exemplar_accept(cand, ref, state, eligible, tau, budget,
-                               interpret=_interpret())
+                               interpret=_interpret(), cost=cost,
+                               cost_budget=cost_budget)
+
+
+def logdet_accept(x, U, logdet, size, eligible, tau, budget, alpha=1.0,
+                  scale=1.0, cost=None, cost_budget=None):
+    """Fused log-det (scale=1) / mutual-information (scale=0.5)
+    chunk-accept sweep: Schur-complement gains + rank-1 Gram-Schmidt
+    appends against the whitened basis held in VMEM scratch.  Returns
+    (mask (B,) bool, U (k,d), logdet (), size (), gains (B,))."""
+    return _la.logdet_accept(x, U, logdet, size, eligible, tau, budget,
+                             alpha, scale=scale, interpret=_interpret(),
+                             cost=cost, cost_budget=cost_budget)
 
 
 def exemplar_marginals(cand, ref, state, *, block_c=None, block_r=None):

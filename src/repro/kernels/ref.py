@@ -98,24 +98,29 @@ def graph_cut_marginals(x, total, state, lam=0.5):
     return (lin - lam * jnp.sum(x * x, axis=-1)).astype(jnp.float32)
 
 
-def logdet_marginals(x, U, alpha=1.0, eps=1e-12):
+def logdet_marginals(x, U, alpha=1.0, eps=1e-12, scale=1.0):
     """(C, d), (k, d) -> (C,): log-det diversity marginal gains.
 
-    gains[i] = log(1 + alpha*||x_i||^2 - alpha^2*||U x_i||^2)
+    gains[i] = scale * log(1 + alpha*||x_i||^2 - alpha^2*||U x_i||^2)
 
     U = L^{-1} X_S is the whitened selected-feature basis (rows beyond |S|
     are zero); the bracket is the Schur complement of the bordered Gram
     matrix I + alpha * X_{S+e} X_{S+e}^T, which is >= 1 in exact
     arithmetic — ``eps`` only guards float cancellation near-duplicates.
+    ``scale=0.5`` is the mutual-information oracle.
     """
     x = x.astype(jnp.float32)
     proj = x @ U.astype(jnp.float32).T
     resid = 1.0 + alpha * jnp.sum(x * x, axis=-1) \
         - (alpha * alpha) * jnp.sum(proj * proj, axis=-1)
-    return jnp.log(jnp.maximum(resid, eps)).astype(jnp.float32)
+    gains = jnp.log(jnp.maximum(resid, eps))
+    if scale != 1.0:
+        gains = scale * gains
+    return gains.astype(jnp.float32)
 
 
-def _accept_scan(gain_fn, upd_fn, rows, state, eligible, tau, budget):
+def _accept_scan(gain_fn, upd_fn, rows, state, eligible, tau, budget,
+                 cost=None, cost_budget=None):
     """Sequential accept sweep (the chunk-accept semantics, as a scan).
 
     Walks ``rows`` in stream order: row i's gain is computed against the
@@ -123,40 +128,65 @@ def _accept_scan(gain_fn, upd_fn, rows, state, eligible, tau, budget):
     eligible & gain >= tau & accepts-so-far < budget, and accepted rows
     update the state.  Returns (mask (B,) bool, state, gains (B,) f32) —
     exactly what the fused Pallas accept kernels must reproduce.
-    """
-    def step(carry, xs):
-        st, n_acc = carry
-        ok, x = xs
-        g = gain_fn(st, x)
-        acc = ok & (g >= tau) & (n_acc < budget)
-        st = jnp.where(acc, upd_fn(st, x), st)
-        return (st, n_acc + acc.astype(jnp.int32)), (acc, g)
 
-    (st, _), (mask, gains) = jax.lax.scan(
-        step, (state.astype(jnp.float32), jnp.zeros((), jnp.int32)),
-        (eligible, rows))
+    ``cost``/``cost_budget`` (both or neither) switch to knapsack
+    cost-ratio accepts: gain >= tau * c_i, running spend <= cost_budget.
+    """
+    if cost is None:
+        def step(carry, xs):
+            st, n_acc = carry
+            ok, x = xs
+            g = gain_fn(st, x)
+            acc = ok & (g >= tau) & (n_acc < budget)
+            st = jnp.where(acc, upd_fn(st, x), st)
+            return (st, n_acc + acc.astype(jnp.int32)), (acc, g)
+
+        (st, _), (mask, gains) = jax.lax.scan(
+            step, (state.astype(jnp.float32), jnp.zeros((), jnp.int32)),
+            (eligible, rows))
+        return mask, st, gains.astype(jnp.float32)
+
+    def step(carry, xs):
+        st, n_acc, spent = carry
+        ok, x, ci = xs
+        g = gain_fn(st, x)
+        acc = ok & (g >= tau * ci) & (n_acc < budget) \
+            & (spent + ci <= cost_budget)
+        st = jnp.where(acc, upd_fn(st, x), st)
+        spent = spent + jnp.where(acc, ci, jnp.float32(0.0))
+        return (st, n_acc + acc.astype(jnp.int32), spent), (acc, g)
+
+    (st, _, _), (mask, gains) = jax.lax.scan(
+        step, (state.astype(jnp.float32), jnp.zeros((), jnp.int32),
+               jnp.zeros((), jnp.float32)),
+        (eligible, rows, cost.astype(jnp.float32)))
     return mask, st, gains.astype(jnp.float32)
 
 
-def coverage_accept(x, state, weights, eligible, tau, budget):
+def coverage_accept(x, state, weights, eligible, tau, budget,
+                    cost=None, cost_budget=None):
     """Reference FeatureCoverage accept sweep (see coverage_marginals)."""
     w = (weights if weights is not None
          else jnp.ones((x.shape[1],), jnp.float32))
     return _accept_scan(
         lambda st, xr: jnp.sum((jnp.sqrt(st + xr) - jnp.sqrt(st)) * w),
         lambda st, xr: st + xr,
-        x.astype(jnp.float32), state, eligible, tau, budget)
+        x.astype(jnp.float32), state, eligible, tau, budget,
+        cost=cost, cost_budget=cost_budget)
 
 
-def weighted_coverage_accept(x, state, eligible, tau, budget):
+def weighted_coverage_accept(x, state, eligible, tau, budget,
+                             cost=None, cost_budget=None):
     """Reference WeightedCoverage accept sweep."""
     return _accept_scan(
         lambda st, xr: jnp.sum(st * xr),
         lambda st, xr: st * (1.0 - xr),
-        x.astype(jnp.float32), state, eligible, tau, budget)
+        x.astype(jnp.float32), state, eligible, tau, budget,
+        cost=cost, cost_budget=cost_budget)
 
 
-def saturated_coverage_accept(x, state, cap, weights, eligible, tau, budget):
+def saturated_coverage_accept(x, state, cap, weights, eligible, tau, budget,
+                              cost=None, cost_budget=None):
     """Reference SaturatedCoverage accept sweep."""
     w = (weights if weights is not None
          else jnp.ones((x.shape[1],), jnp.float32))
@@ -165,20 +195,24 @@ def saturated_coverage_accept(x, state, cap, weights, eligible, tau, budget):
         lambda st, xr: jnp.sum(
             (jnp.minimum(st + xr, cap) - jnp.minimum(st, cap)) * w),
         lambda st, xr: st + xr,
-        x.astype(jnp.float32), state, eligible, tau, budget)
+        x.astype(jnp.float32), state, eligible, tau, budget,
+        cost=cost, cost_budget=cost_budget)
 
 
-def graph_cut_accept(x, total, state, eligible, tau, budget, lam=0.5):
+def graph_cut_accept(x, total, state, eligible, tau, budget, lam=0.5,
+                     cost=None, cost_budget=None):
     """Reference GraphCut accept sweep."""
     total = total.astype(jnp.float32)
     return _accept_scan(
         lambda st, xr: jnp.sum(xr * (total - 2.0 * lam * st)
                                - lam * xr * xr),
         lambda st, xr: st + xr,
-        x.astype(jnp.float32), state, eligible, tau, budget)
+        x.astype(jnp.float32), state, eligible, tau, budget,
+        cost=cost, cost_budget=cost_budget)
 
 
-def facility_accept(cand, ref, state, eligible, tau, budget):
+def facility_accept(cand, ref, state, eligible, tau, budget,
+                    cost=None, cost_budget=None):
     """Reference facility-location accept sweep: rectified similarity rows
     against the running cover vector (see facility_marginals)."""
     sims = jnp.maximum(
@@ -186,10 +220,12 @@ def facility_accept(cand, ref, state, eligible, tau, budget):
     return _accept_scan(
         lambda st, sr: jnp.sum(jnp.maximum(sr - st, 0.0)),
         lambda st, sr: jnp.maximum(st, sr),
-        sims, state, eligible, tau, budget)
+        sims, state, eligible, tau, budget,
+        cost=cost, cost_budget=cost_budget)
 
 
-def exemplar_accept(cand, ref, state, eligible, tau, budget):
+def exemplar_accept(cand, ref, state, eligible, tau, budget,
+                    cost=None, cost_budget=None):
     """Reference exemplar-clustering accept sweep: precomputed squared-
     distance rows against the running min-distance vector (see
     exemplar_marginals)."""
@@ -202,7 +238,52 @@ def exemplar_accept(cand, ref, state, eligible, tau, budget):
     return _accept_scan(
         lambda st, d2r: jnp.sum(jnp.maximum(st - d2r, 0.0)),
         lambda st, d2r: jnp.minimum(st, d2r),
-        d2, state, eligible, tau, budget)
+        d2, state, eligible, tau, budget,
+        cost=cost, cost_budget=cost_budget)
+
+
+def logdet_accept(x, U, logdet, size, eligible, tau, budget, alpha=1.0,
+                  eps=1e-12, scale=1.0, cost=None, cost_budget=None):
+    """Reference log-det (scale=1) / mutual-information (scale=0.5) accept
+    sweep: per-row Schur-complement gain against the live whitened basis,
+    with the rank-1 Gram–Schmidt append on accept.  Returns
+    (mask (B,) bool, U (k, d) f32, logdet () f32, size () int32,
+    gains (B,) f32) — the tuple-state twin of the Pallas kernel in
+    kernels/logdet_accept.py."""
+    x = x.astype(jnp.float32)
+    U = U.astype(jnp.float32)
+    k = U.shape[0]
+
+    def step(carry, xs):
+        u, ld, sz, n_acc, spent = carry
+        ok, xr, ci = xs
+        v = alpha * (u @ xr)
+        d2 = jnp.maximum(1.0 + alpha * jnp.sum(xr * xr) - jnp.sum(v * v),
+                         eps)
+        g = jnp.log(d2)
+        if scale != 1.0:
+            g = scale * g
+        if cost is None:
+            acc = ok & (g >= tau) & (n_acc < budget)
+        else:
+            acc = ok & (g >= tau * ci) & (n_acc < budget) \
+                & (spent + ci <= cost_budget)
+        u_new = (xr - v @ u) / jnp.sqrt(d2)
+        row_iota = jnp.arange(k, dtype=jnp.int32)[:, None]
+        u = jnp.where(acc & (row_iota == sz), u_new[None, :], u)
+        ld = ld + jnp.where(acc, g, jnp.float32(0.0))
+        sz = sz + acc.astype(jnp.int32)
+        spent = spent + jnp.where(acc, ci, jnp.float32(0.0))
+        return (u, ld, sz, n_acc + acc.astype(jnp.int32), spent), (acc, g)
+
+    ci_rows = (cost.astype(jnp.float32) if cost is not None
+               else jnp.zeros((x.shape[0],), jnp.float32))
+    (U, ld, sz, _, _), (mask, gains) = jax.lax.scan(
+        step,
+        (U, jnp.asarray(logdet, jnp.float32), jnp.asarray(size, jnp.int32),
+         jnp.zeros((), jnp.int32), jnp.zeros((), jnp.float32)),
+        (eligible, x, ci_rows))
+    return mask, U, ld, sz, gains.astype(jnp.float32)
 
 
 def exemplar_marginals(cand, ref, state):

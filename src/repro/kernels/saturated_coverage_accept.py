@@ -25,7 +25,8 @@ from repro.kernels._accept_common import accept_call
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def saturated_coverage_accept(x, state, cap, weights, eligible, tau,
-                              budget, *, interpret: bool = False):
+                              budget, *, interpret: bool = False,
+                              cost=None, cost_budget=None):
     """(B, d), (d,), (d,)[, (d,)], (B,) bool, (), () -> (mask (B,) bool,
     state (d,) f32, gains (B,) f32) — the SaturatedCoverage accept sweep."""
     d = x.shape[1]
@@ -40,4 +41,5 @@ def saturated_coverage_accept(x, state, cap, weights, eligible, tau,
         return step
 
     return accept_call(step_from, x, state, [cap, w], eligible, tau, budget,
-                       interpret=interpret)
+                       interpret=interpret, cost=cost,
+                       cost_budget=cost_budget)

@@ -26,7 +26,8 @@ from repro.kernels._accept_common import accept_call
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def weighted_coverage_accept(x, state, eligible, tau, budget, *,
-                             interpret: bool = False):
+                             interpret: bool = False, cost=None,
+                             cost_budget=None):
     """(B, U), (U,), (B,) bool, (), () -> (mask (B,) bool, state (U,) f32,
     gains (B,) f32) — the WeightedCoverage accept sweep."""
 
@@ -37,4 +38,5 @@ def weighted_coverage_accept(x, state, eligible, tau, budget, *,
         return step
 
     return accept_call(step_from, x, state, [], eligible, tau, budget,
-                       interpret=interpret)
+                       interpret=interpret, cost=cost,
+                       cost_budget=cost_budget)

@@ -16,7 +16,14 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core.selector import DistributedSelector, SelectorSpec
+# CLI choices derive from the central registries — registering a new
+# oracle/engine/constraint makes it launchable with no CLI edit
+from repro.core.constraints import CONSTRAINT_NAMES
+from repro.core.grids import SCHEDULE_KINDS
+from repro.core.precision import PRECISION_NAMES
+from repro.core.selector import (ALGORITHMS, ORACLE_NAMES,
+                                 DistributedSelector, SelectorSpec)
+from repro.core.threshold import ENGINES
 from repro.launch.mesh import make_mesh_for
 
 
@@ -26,23 +33,33 @@ def main() -> None:
     ap.add_argument("--k", type=int, default=64)
     ap.add_argument("--d", type=int, default=64)
     ap.add_argument("--oracle", default="feature_coverage",
-                    choices=["feature_coverage", "facility_location",
-                             "weighted_coverage", "saturated_coverage",
-                             "graph_cut", "log_det", "exemplar"])
+                    choices=list(ORACLE_NAMES))
     ap.add_argument("--algorithm", default="two_round",
-                    choices=["two_round", "multi_epoch", "multi_threshold"])
-    ap.add_argument("--engine", default="dense",
-                    choices=["dense", "lazy", "fused"],
+                    choices=list(ALGORITHMS))
+    ap.add_argument("--engine", default="dense", choices=list(ENGINES),
                     help="ThresholdGreedy engine for the central phases")
     ap.add_argument("--chunk", type=int, default=128,
                     help="lazy/fused-engine chunk size")
     ap.add_argument("--use-kernel", action="store_true",
                     help="route oracle marginals/accepts through the "
                          "Pallas kernels (interpret mode off-TPU)")
-    ap.add_argument("--precision", default="f32", choices=["f32", "bf16"],
+    ap.add_argument("--precision", default="f32",
+                    choices=list(PRECISION_NAMES),
                     help="storage/compute precision policy (accumulators "
                          "stay f32); bf16 halves feature bytes at rest "
                          "and on the wire")
+    ap.add_argument("--constraint", default="cardinality",
+                    choices=list(CONSTRAINT_NAMES),
+                    help="feasibility constraint on the selection; the "
+                         "launcher draws synthetic per-element costs / "
+                         "part labels to exercise it")
+    ap.add_argument("--budget", type=float, default=None,
+                    help="knapsack cost budget (default: k * mean cost / 2)")
+    ap.add_argument("--n-parts", type=int, default=8,
+                    help="partition_matroid: number of parts (capacities "
+                         "split k evenly)")
+    ap.add_argument("--mi-noise", type=float, default=1.0,
+                    help="mutual_information sensor noise variance")
     ap.add_argument("--t", type=int, default=3)
     ap.add_argument("--epochs", type=int, default=None,
                     help="multi_epoch threshold levels (2 rounds each); "
@@ -51,7 +68,7 @@ def main() -> None:
                     help="approximation slack: grid resolution, and the "
                          "multi_epoch shortfall below 1-1/e")
     ap.add_argument("--schedule", default="paper",
-                    choices=["paper", "geometric"],
+                    choices=list(SCHEDULE_KINDS),
                     help="multi_epoch descending-threshold schedule family")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -67,15 +84,35 @@ def main() -> None:
     total = jnp.sum(emb, axis=0) \
         if args.oracle in ("graph_cut", "saturated_coverage") else None
 
+    # synthetic per-element constraint data (the framework feeds real
+    # costs/labels through the same DistributedSelector arguments)
+    element_costs = parts = part_caps = budget = None
+    if args.constraint == "knapsack":
+        kc, _ = jax.random.split(kr)
+        element_costs = jax.random.uniform(kc, (args.n,), minval=0.5,
+                                           maxval=2.0)
+        budget = (args.budget if args.budget is not None
+                  else args.k * 1.25 / 2.0)
+    elif args.constraint == "partition_matroid":
+        kc, _ = jax.random.split(kr)
+        parts = jax.random.randint(kc, (args.n,), 0, args.n_parts)
+        cap = max(1, args.k // args.n_parts)
+        part_caps = jnp.full((args.n_parts,), cap, jnp.int32)
+
     spec = SelectorSpec(k=args.k, oracle=args.oracle,
                         algorithm=args.algorithm, t=args.t,
                         eps=args.eps, epochs=args.epochs,
                         schedule_kind=args.schedule,
                         engine=args.engine, chunk=args.chunk,
                         use_kernel=args.use_kernel,
-                        precision=args.precision)
+                        precision=args.precision,
+                        constraint=args.constraint,
+                        knapsack_budget=budget,
+                        mi_noise=args.mi_noise)
     sel = DistributedSelector(spec, mesh, n_total=args.n, feat_dim=args.d,
-                              reference=reference, total=total)
+                              reference=reference, total=total,
+                              element_costs=element_costs, parts=parts,
+                              part_caps=part_caps)
     with mesh:
         emb = jax.device_put(emb, sel.data_sharding())
         t0 = time.time()
@@ -105,7 +142,7 @@ def main() -> None:
 
     print(f"[select] n={args.n} k={args.k} oracle={args.oracle} "
           f"algo={args.algorithm} machines={sel.cfg.n_machines} "
-          f"precision={args.precision}")
+          f"precision={args.precision} constraint={args.constraint}")
     print(sel.round_log.summary())
     print(f"[select] f(S)={float(res.value):.4f} |S|={int(res.sol_size)} "
           f"dropped={int(res.n_dropped)} wall={dt * 1e3:.0f}ms")

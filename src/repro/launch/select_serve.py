@@ -70,9 +70,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
+# CLI choices derive from the central registries — registering a new
+# oracle/engine/constraint makes it servable with no CLI edit
+from repro.core.constraints import CONSTRAINT_NAMES, make_constraint
+from repro.core.grids import SCHEDULE_KINDS
 from repro.core.mapreduce import make_query_batch
-from repro.core.selector import (DistributedSelector, ORACLE_NAMES,
-                                 SelectorSpec, make_oracle)
+from repro.core.precision import PRECISION_NAMES
+from repro.core.selector import (DistributedSelector, OPT_FREE_ALGORITHMS,
+                                 ORACLE_NAMES, SelectorSpec, make_oracle)
+from repro.core.threshold import ENGINES
 from repro.launch.mesh import make_mesh_for
 from repro.streaming import SieveSpec, StreamingSelector
 from repro.streaming import persist
@@ -99,7 +105,8 @@ class SelectionService:
     """
 
     def __init__(self, spec: SelectorSpec, mesh, init_corpus,
-                 reference=None, total=None, stream_chunk: int = 512):
+                 reference=None, total=None, stream_chunk: int = 512,
+                 constraint=None):
         # corpus statistics are accumulate-plane quantities: compute them
         # in f32, then hold the corpus itself at the policy's storage dtype
         # (identity under the default f32 policy)
@@ -127,9 +134,14 @@ class SelectionService:
         # on FIRST use of ingest()/select_warm() — a static-corpus serve
         # (no --ingest-docs) never pays the sieve compile or the n-row scan
         oracle = make_oracle(spec, d, reference=reference, total=total)
+        # the constraint rides the ONLINE path only: the sieve honors it
+        # per lane and at merge; the batched query path stays unconstrained
+        # (per-query feasibility states don't compose with the shared
+        # sample/gather rounds — the batch drivers refuse them loudly)
         sieve_spec = SieveSpec(k=spec.k, eps=spec.eps, accept=spec.accept,
                                engine=spec.engine, chunk=spec.chunk,
-                               precision=spec.precision)
+                               precision=spec.precision,
+                               constraint=constraint)
         self.stream = StreamingSelector(oracle, sieve_spec, d,
                                         chunk_elems=stream_chunk)
         self._init_corpus = init_corpus
@@ -430,22 +442,34 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--oracle", default="feature_coverage",
                     choices=list(ORACLE_NAMES))
-    ap.add_argument("--engine", default="dense",
-                    choices=["dense", "lazy", "fused"])
-    ap.add_argument("--precision", default="f32", choices=["f32", "bf16"],
+    ap.add_argument("--engine", default="dense", choices=list(ENGINES))
+    ap.add_argument("--precision", default="f32",
+                    choices=list(PRECISION_NAMES),
                     help="storage/compute precision policy for the corpus, "
                          "gather messages and sieve pools (accumulators "
                          "stay f32)")
     ap.add_argument("--algorithm", default="two_round",
-                    choices=["two_round", "multi_epoch"],
+                    choices=list(OPT_FREE_ALGORITHMS),
                     help="OPT-free selection driver backing the service "
                          "(the batch path always runs the 1-epoch pipeline; "
                          "multi_epoch upgrades warm/cold single selects)")
+    ap.add_argument("--constraint", default="cardinality",
+                    choices=list(CONSTRAINT_NAMES),
+                    help="feasibility constraint on the ONLINE (sieve) "
+                         "path's warm selections; the batched query path "
+                         "stays unconstrained.  The launcher draws "
+                         "synthetic per-element costs / part labels over "
+                         "the maximum corpus the service can grow to")
+    ap.add_argument("--budget", type=float, default=None,
+                    help="knapsack cost budget (default: k * mean cost / 2)")
+    ap.add_argument("--n-parts", type=int, default=8,
+                    help="partition_matroid: number of parts (capacities "
+                         "split k evenly)")
     ap.add_argument("--epochs", type=int, default=None,
                     help="multi_epoch threshold levels; None derives "
                          "ceil(1/eps)")
     ap.add_argument("--schedule", default="paper",
-                    choices=["paper", "geometric"],
+                    choices=list(SCHEDULE_KINDS),
                     help="multi_epoch descending-threshold schedule family")
     ap.add_argument("--deadline-ms", type=float, default=None,
                     help="per-request deadline budget (jittered 0.5-1.5x "
@@ -480,7 +504,28 @@ def main() -> None:
                         algorithm=args.algorithm, epochs=args.epochs,
                         schedule_kind=args.schedule, engine=args.engine,
                         precision=args.precision)
-    svc = SelectionService(spec, mesh, emb, stream_chunk=args.stream_chunk)
+    # synthetic per-element constraint data sized for the LARGEST corpus
+    # the service can reach (initial + every possible ingest step), so
+    # the attribute plane lookup covers every id the sieve will ever see
+    constraint = None
+    if args.constraint != "cardinality":
+        n_max = args.n + args.ingest_docs * max(1, args.requests)
+        kc = jax.random.fold_in(key, 7)
+        costs = parts = part_caps = None
+        budget = None
+        if args.constraint == "knapsack":
+            costs = jax.random.uniform(kc, (n_max,), minval=0.5, maxval=2.0)
+            budget = (args.budget if args.budget is not None
+                      else args.k * 1.25 / 2.0)
+        elif args.constraint == "partition_matroid":
+            parts = jax.random.randint(kc, (n_max,), 0, args.n_parts)
+            cap = max(1, args.k // args.n_parts)
+            part_caps = jnp.full((args.n_parts,), cap, jnp.int32)
+        constraint = make_constraint(args.constraint, n_max, costs=costs,
+                                     budget=budget, parts=parts,
+                                     capacities=part_caps)
+    svc = SelectionService(spec, mesh, emb, stream_chunk=args.stream_chunk,
+                           constraint=constraint)
     ckpt = Checkpointer(args.checkpoint_dir) if args.checkpoint_dir else None
     if args.restore:
         assert ckpt is not None, "--restore needs --checkpoint-dir"
@@ -491,7 +536,8 @@ def main() -> None:
     svc.materialize()
     t_prep = time.time() - t0
     print(f"[select_serve] corpus ready: n={args.n} d={args.d} "
-          f"oracle={args.oracle} stats cached in {t_prep * 1e3:.0f}ms")
+          f"oracle={args.oracle} constraint={args.constraint} "
+          f"stats cached in {t_prep * 1e3:.0f}ms")
 
     loop = ServeLoop(svc, args.slots, ks)
     for req in synth_requests(args.requests, args.k, args.oracle, args.seed,

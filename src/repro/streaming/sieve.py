@@ -47,6 +47,7 @@ from typing import Any, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core import constraints as constraints_mod
 from repro.core import grids
 from repro.core import precision as precision_mod
 from repro.core.mapreduce import SelectionResult
@@ -75,12 +76,25 @@ class SieveSpec:
     #                                   (sol_feats / top_feats) and host
     #                                   chunks ride at storage precision;
     #                                   oracle states / values stay f32
+    constraint: Optional[constraints_mod.Constraint] = None
+    #                                   feasibility constraint: each lane
+    #                                   carries its own O(1)/O(P) state
+    #                                   (reseeded with the lane) and its
+    #                                   accept loop only admits feasible
+    #                                   elements; the chunk's attribute
+    #                                   plane is looked up from global ids
+    #                                   per update — nothing extra streams
 
     def __post_init__(self):
         # shared trace-time knob validation (threshold.validate_engine) —
         # a typo'd engine fails at spec construction, naming the sieve
         validate_engine(self.engine, self.accept, where="SieveSpec")
         precision_mod.validate(self.precision, where="SieveSpec")
+        if self.constraint is not None and not isinstance(
+                self.constraint, constraints_mod.Constraint):
+            raise TypeError(
+                "SieveSpec: constraint must be a repro.core.constraints."
+                f"Constraint (or None), got {type(self.constraint).__name__}")
 
     @property
     def precision_policy(self):
@@ -112,11 +126,21 @@ class SieveState(NamedTuple):
     top_feats: jax.Array     # (T, d) running top singletons (Alg-7 analog)
     top_ids: jax.Array       # (T,) int32, -1 padded
     top_vals: jax.Array      # (T,) f32 singleton values, -inf padded
+    cstates: Any = ()        # stacked (L, ...) per-lane feasibility states
+    #                          (an empty pytree when unconstrained, so the
+    #                          pre-constraint state layout is unchanged)
 
 
 def _stacked_init(oracle, n_lanes: int):
     """(L,)-stacked empty oracle states."""
     return jax.vmap(lambda _: oracle.init_state())(jnp.arange(n_lanes))
+
+
+def _stacked_cinit(constraint, n_lanes: int):
+    """(L,)-stacked empty per-lane feasibility states (() unconstrained)."""
+    if constraint is None:
+        return ()
+    return jax.vmap(lambda _: constraint.init_state())(jnp.arange(n_lanes))
 
 
 def sieve_init(oracle, spec: SieveSpec, feat_dim: int) -> SieveState:
@@ -133,6 +157,7 @@ def sieve_init(oracle, spec: SieveSpec, feat_dim: int) -> SieveState:
         top_feats=jnp.zeros((T, feat_dim), sdt),
         top_ids=jnp.full((T,), -1, jnp.int32),
         top_vals=jnp.full((T,), -jnp.inf, jnp.float32),
+        cstates=_stacked_cinit(spec.constraint, L),
     )
 
 
@@ -170,25 +195,36 @@ def sieve_update(oracle, spec: SieveSpec, state: SieveState, feats, ids,
     new_exps = jnp.where(active, grids.lane_exponents(lo, L),
                          jnp.full((L,), EXP_UNSEEDED, jnp.int32))
     reseed = new_exps != state.exps
-    lane_states = jax.tree.map(
-        lambda init, old: jnp.where(
-            reseed.reshape((-1,) + (1,) * (old.ndim - 1)), init, old),
-        _stacked_init(oracle, L), state.oracle_states)
+    reseed_tree = lambda init, old: jax.tree.map(
+        lambda a, b: jnp.where(
+            reseed.reshape((-1,) + (1,) * (b.ndim - 1)), a, b), init, old)
+    lane_states = reseed_tree(_stacked_init(oracle, L), state.oracle_states)
     sol_ids = jnp.where(reseed[:, None], -1, state.sol_ids)
     sol_feats = jnp.where(reseed[:, None, None], 0.0, state.sol_feats)
     sol_sizes = jnp.where(reseed, 0, state.sol_sizes)
+    cn = spec.constraint
+    cstates = reseed_tree(_stacked_cinit(cn, L), state.cstates)
 
     # ---- 3. per-lane threshold accept over the chunk --------------------
     taus = grids.lane_taus(new_exps, k, spec.eps, active)
+    # the chunk's constraint attribute plane, from global ids (a re-streamed
+    # element always resolves to the same costs/part — nothing extra ships)
+    cplane = None if cn is None or cn.n_planes == 0 else cn.plane(ids)
 
-    def lane_accept(st, sol, size, tau):
+    def lane_accept(st, sol, size, tau, cstate):
         v = exclude_ids(ids, valid & (ids >= 0), sol)
+        if cn is None:
+            out = threshold_greedy(oracle, st, sol, size, feats, ids, v, tau,
+                                   k, accept=spec.accept, engine=spec.engine,
+                                   chunk=spec.chunk)
+            return out + (cstate,)
         return threshold_greedy(oracle, st, sol, size, feats, ids, v, tau,
                                 k, accept=spec.accept, engine=spec.engine,
-                                chunk=spec.chunk)
+                                chunk=spec.chunk, constraint=cn,
+                                cstate=cstate, cplane=cplane)
 
-    lane_states, sol_ids, new_sizes = jax.vmap(lane_accept)(
-        lane_states, sol_ids, sol_sizes, taus)
+    lane_states, sol_ids, new_sizes, cstates = jax.vmap(lane_accept)(
+        lane_states, sol_ids, sol_sizes, taus, cstates)
 
     # ---- 4. carry the accepted feature rows (needed by the finish) ------
     slot = jnp.arange(k, dtype=jnp.int32)
@@ -205,7 +241,7 @@ def sieve_update(oracle, spec: SieveSpec, state: SieveState, feats, ids,
 
     return SieveState(lane_states, sol_ids, sol_feats, new_sizes, new_exps,
                       v_max, state.n_seen + jnp.sum(valid),
-                      top_feats, top_ids, top_vals)
+                      top_feats, top_ids, top_vals, cstates)
 
 
 def sieve_best(oracle, state: SieveState):
@@ -246,14 +282,23 @@ def merge_pool(oracle, spec: SieveSpec, pool_feats, pool_ids, pool_valid,
 
     taus, tau_fb = grids.tau_grid_from_v(v_max, k, spec.eps,
                                          spec.grid_size())
+    cn = spec.constraint
+    cplane = None if cn is None or cn.n_planes == 0 else cn.plane(pool_ids)
 
     def per_tau(tau):
         st = oracle.init_state()
         sol = jnp.full((k,), -1, jnp.int32)
-        st, sol, size = threshold_greedy(
-            oracle, st, sol, jnp.zeros((), jnp.int32), pool_feats, pool_ids,
-            pool_valid, tau, k, accept=spec.accept, engine=spec.engine,
-            chunk=spec.chunk, k_dyn=k_dyn)
+        if cn is None:
+            st, sol, size = threshold_greedy(
+                oracle, st, sol, jnp.zeros((), jnp.int32), pool_feats,
+                pool_ids, pool_valid, tau, k, accept=spec.accept,
+                engine=spec.engine, chunk=spec.chunk, k_dyn=k_dyn)
+        else:
+            st, sol, size, _ = threshold_greedy(
+                oracle, st, sol, jnp.zeros((), jnp.int32), pool_feats,
+                pool_ids, pool_valid, tau, k, accept=spec.accept,
+                engine=spec.engine, chunk=spec.chunk, k_dyn=k_dyn,
+                constraint=cn, cstate=cn.init_state(), cplane=cplane)
         return sol, size, oracle.value(st)
 
     sol_j, size_j, val_j = jax.vmap(per_tau)(taus)
@@ -261,7 +306,7 @@ def merge_pool(oracle, spec: SieveSpec, pool_feats, pool_ids, pool_valid,
     # O(k * |pool|) marginal rows, still independent of the stream length,
     # and the strongest of the central candidates in practice
     g_sol, g_size, g_val = greedy(oracle, pool_feats, pool_valid, k,
-                                  ids=pool_ids, k_dyn=k_dyn)
+                                  ids=pool_ids, k_dyn=k_dyn, constraint=cn)
     sols = jnp.concatenate([sol_j, g_sol[None], best_sol[None]], axis=0)
     sizes = jnp.concatenate([size_j, g_size[None], best_size[None]], axis=0)
     vals = jnp.concatenate([val_j, g_val[None], best_val[None]], axis=0)

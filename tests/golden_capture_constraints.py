@@ -1,0 +1,109 @@
+"""Capture golden cardinality-selection outputs for the constraints PR.
+
+The constraint subsystem refactor (core/constraints.py) must leave every
+cardinality-only run bit-identical: same solution ids, same f32 value
+BYTES, on the sim path (all three engines) and the mesh path.  This
+script was run at the pre-refactor HEAD to freeze those outputs into
+``tests/golden/constraints_cardinality_golden.json``;
+``tests/test_constraints.py`` replays the same selections — unconstrained
+AND with the degenerate constraints (explicit Cardinality; unit-cost
+Knapsack with budget k) — against the stored bytes.
+
+    PYTHONPATH=src python tests/golden_capture_constraints.py
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_platform_name", "cpu")
+
+N, D, M, K = 512, 16, 4, 8
+
+ENGINES = ("dense", "lazy", "fused")
+SIM_KINDS = ("feature_coverage", "log_det", "graph_cut")
+MESH_KINDS = ("feature_coverage", "log_det")
+
+
+def _instance(kind, seed=0):
+    """(oracle, X) — deterministic instance per oracle kind.  log_det is
+    standard-normal (diversity geometry); the coverage-style oracles use
+    squared-uniform rows."""
+    from repro.core import FeatureCoverage, GraphCut, LogDetDiversity
+
+    rng = np.random.default_rng(seed)
+    if kind == "log_det":
+        X = jnp.asarray(rng.standard_normal((N, D)).astype(np.float32))
+        oracle = LogDetDiversity(feat_dim=D, k_max=K, alpha=1.0)
+    elif kind == "graph_cut":
+        X = jnp.asarray((rng.random((N, D)).astype(np.float32)) ** 2)
+        oracle = GraphCut(feat_dim=D, total=jnp.sum(X, axis=0), lam=0.5)
+    else:
+        X = jnp.asarray((rng.random((N, D)).astype(np.float32)) ** 2)
+        oracle = FeatureCoverage(feat_dim=D)
+    return oracle, X
+
+
+def _pack(res):
+    ids = np.asarray(res.sol_ids).reshape(-1).tolist()
+    val = np.asarray(res.value, np.float32).reshape(-1)
+    return {"sol_ids": ids, "value_hex": val.tobytes().hex()}
+
+
+def _sharded(X):
+    return (X.reshape(M, N // M, D),
+            jnp.arange(N, dtype=jnp.int32).reshape(M, N // M),
+            jnp.ones((M, N // M), bool))
+
+
+def compute_golden(run_sim=None, run_mesh=None):
+    """Run every golden selection; the test injects constrained runners
+    through ``run_sim``/``run_mesh`` to prove the degenerate constraints
+    reproduce the same bytes."""
+    from repro.core import MRConfig, two_round_sim
+    from repro.core.selector import DistributedSelector, SelectorSpec
+    from repro.launch.mesh import make_mesh_for
+
+    if run_sim is None:
+        def run_sim(oracle, fm, im, vm, cfg, key):
+            res, _ = two_round_sim(oracle, fm, im, vm, cfg, key)
+            return res
+
+    if run_mesh is None:
+        def run_mesh(spec, mesh, X, total, key):
+            sel = DistributedSelector(spec, mesh, n_total=N, feat_dim=D,
+                                      total=total)
+            return sel.select(X, key=key)
+
+    out = {}
+    for kind in SIM_KINDS:
+        oracle, X = _instance(kind)
+        fm, im, vm = _sharded(X)
+        for engine in ENGINES:
+            cfg = MRConfig(k=K, n_total=N, n_machines=M, engine=engine,
+                           chunk=64)
+            res = run_sim(oracle, fm, im, vm, cfg, jax.random.PRNGKey(0))
+            out[f"sim/{kind}/{engine}"] = _pack(res)
+
+    mesh = make_mesh_for(len(jax.devices()), model_parallel=1)
+    for kind in MESH_KINDS:
+        _, X = _instance(kind)
+        total = jnp.sum(X, axis=0) if kind == "graph_cut" else None
+        spec = SelectorSpec(k=K, oracle=kind, algorithm="two_round")
+        res = run_mesh(spec, mesh, X, total, jax.random.PRNGKey(11))
+        out[f"mesh/{kind}"] = _pack(res)
+    return out
+
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
+                           "constraints_cardinality_golden.json")
+
+if __name__ == "__main__":
+    golden = compute_golden()
+    os.makedirs(os.path.dirname(GOLDEN_PATH), exist_ok=True)
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(golden, f, indent=1, sort_keys=True)
+    print(f"wrote {len(golden)} golden selections to {GOLDEN_PATH}")

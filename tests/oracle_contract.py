@@ -26,7 +26,8 @@ import numpy as np
 
 from repro.core import (ExemplarClustering, FacilityLocation,
                         FeatureCoverage, GraphCut, LogDetDiversity,
-                        SaturatedCoverage, WeightedCoverage)
+                        MutualInformationGaussian, SaturatedCoverage,
+                        WeightedCoverage)
 
 K_CAP = 8   # max subset size the property tests draw (>= |B| + 1 below)
 
@@ -71,6 +72,14 @@ def build_log_det(rng, n, d):
     return LogDetDiversity(feat_dim=d, k_max=K_CAP, alpha=1.0), feats
 
 
+def build_mutual_information(rng, n, d):
+    # sensor rows are raw observation vectors; the oracle whitens by the
+    # noise internally.  noise != 1 so the 1/noise^2 scaling is exercised.
+    feats = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+    return (MutualInformationGaussian(feat_dim=d, k_max=K_CAP, noise=0.7),
+            feats)
+
+
 def build_exemplar(rng, n, d):
     ref = jnp.asarray(rng.random((max(4, n // 2), d)).astype(np.float32))
     return (ExemplarClustering(feat_dim=d, reference=ref),
@@ -84,13 +93,15 @@ REGISTRY = {
     "facility_location": build_facility_location,
     "graph_cut": build_graph_cut,
     "log_det": build_log_det,
+    "mutual_information": build_mutual_information,
     "exemplar": build_exemplar,
 }
 
 #: oracles whose hot paths route through a Pallas kernel when
 #: ``use_kernel=True`` (swept by the kernel differential tests)
 KERNELED = ("feature_coverage", "facility_location", "weighted_coverage",
-            "saturated_coverage", "graph_cut", "log_det", "exemplar")
+            "saturated_coverage", "graph_cut", "log_det",
+            "mutual_information", "exemplar")
 
 
 def state_of(oracle, feats, subset):

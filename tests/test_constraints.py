@@ -1,0 +1,361 @@
+"""Constraint subsystem tests: golden bit-identity for the degenerate
+constraints, engine agreement under each constraint, sim-vs-mesh RoundLog
+parity with the cost plane, knapsack/partition guarantee regressions vs
+constrained brute-force OPT, the mutual-information oracle through the
+drivers, the sieve's per-lane constraint handling, and the validation /
+refusal surfaces."""
+
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from golden_capture_constraints import (GOLDEN_PATH, K, N, compute_golden)
+from repro.core import MRConfig
+from repro.core import mapreduce as mr
+from repro.core.constraints import (Cardinality, Knapsack, PartitionMatroid,
+                                    make_constraint)
+from repro.core.functions import (FeatureCoverage, LogDetDiversity,
+                                  MutualInformationGaussian)
+from repro.core.selector import DistributedSelector, SelectorSpec
+from repro.core.sequential import brute_force_constrained, greedy
+from repro.launch.mesh import make_mesh_for
+from repro.streaming import SieveSpec, StreamingSelector
+
+jax.config.update("jax_platform_name", "cpu")
+
+ENGINES = ("dense", "lazy", "fused")
+
+
+def _nonneg(seed, n, d):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray((rng.random((n, d)).astype(np.float32)) ** 2)
+
+
+def _sharded(X, m):
+    n, d = X.shape
+    return (X.reshape(m, n // m, d),
+            jnp.arange(n, dtype=jnp.int32).reshape(m, n // m),
+            jnp.ones((m, n // m), bool))
+
+
+def _pack(res):
+    return (np.asarray(res.sol_ids).reshape(-1).tolist(),
+            np.asarray(res.value, np.float32).reshape(-1).tobytes().hex())
+
+
+def _knapsack(seed, n, budget):
+    rng = np.random.default_rng(seed)
+    costs = jnp.asarray(
+        (0.5 + 1.5 * rng.random(n)).astype(np.float32))
+    return Knapsack(budget=float(budget), costs=costs)
+
+
+def _partition(seed, n, n_parts, cap):
+    rng = np.random.default_rng(seed)
+    parts = jnp.asarray(rng.integers(0, n_parts, n).astype(np.int32))
+    return PartitionMatroid(
+        capacities=jnp.full((n_parts,), cap, jnp.int32), parts=parts)
+
+
+def _feasible_knapsack(res, kn):
+    ids = np.asarray(res.sol_ids).reshape(-1)
+    ids = ids[ids >= 0]
+    return float(np.asarray(kn.costs)[ids].sum()) <= kn.budget + 1e-5
+
+
+def _feasible_partition(res, pm):
+    ids = np.asarray(res.sol_ids).reshape(-1)
+    ids = ids[ids >= 0]
+    counts = np.bincount(np.asarray(pm.parts)[ids],
+                         minlength=np.asarray(pm.capacities).shape[0])
+    return bool(np.all(counts <= np.asarray(pm.capacities)))
+
+
+# ---------------------------------------------------------------------------
+# golden bit-identity: the refactor leaves cardinality-only runs untouched
+# ---------------------------------------------------------------------------
+
+def _load_golden():
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+def _assert_matches_golden(got, golden):
+    assert set(got) == set(golden)
+    for key in sorted(golden):
+        assert got[key]["sol_ids"] == golden[key]["sol_ids"], key
+        assert got[key]["value_hex"] == golden[key]["value_hex"], key
+
+
+def test_golden_replay_unconstrained():
+    """constraint=None reproduces the pre-refactor selections exactly:
+    same ids, same f32 value BYTES, every sim engine and the mesh path."""
+    _assert_matches_golden(compute_golden(), _load_golden())
+
+
+def test_golden_replay_degenerate_knapsack():
+    """Unit-cost Knapsack with budget k is |S| <= k in disguise: the full
+    constrained machinery (cost plane in the messages, density thresholds,
+    budget state across epochs) must reproduce the cardinality goldens
+    bit-for-bit on BOTH backends."""
+    def run_sim(oracle, fm, im, vm, cfg, key):
+        kn = Knapsack(budget=float(cfg.k),
+                      costs=jnp.ones((N,), jnp.float32))
+        res, _ = mr.two_round_sim(oracle, fm, im, vm,
+                                  dataclasses.replace(cfg, constraint=kn),
+                                  key)
+        return res
+
+    def run_mesh(spec, mesh, X, total, key):
+        spec2 = dataclasses.replace(spec, constraint="knapsack",
+                                    knapsack_budget=float(spec.k))
+        sel = DistributedSelector(spec2, mesh, n_total=N,
+                                  feat_dim=X.shape[1], total=total,
+                                  element_costs=jnp.ones((N,), jnp.float32))
+        return sel.select(X, key=key)
+
+    _assert_matches_golden(compute_golden(run_sim=run_sim,
+                                          run_mesh=run_mesh),
+                           _load_golden())
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_explicit_cardinality_bit_identical(engine):
+    """An explicit Cardinality() object takes the generic constrained code
+    path and must make identical selections to constraint=None."""
+    n, d, m, k = 256, 8, 4, 6
+    X = _nonneg(3, n, d)
+    oracle = FeatureCoverage(feat_dim=d)
+    fm, im, vm = _sharded(X, m)
+    base = MRConfig(k=k, n_total=n, n_machines=m, engine=engine, chunk=64)
+    res0, _ = mr.two_round_sim(oracle, fm, im, vm, base,
+                               jax.random.PRNGKey(0))
+    res1, _ = mr.two_round_sim(
+        oracle, fm, im, vm,
+        dataclasses.replace(base, constraint=Cardinality()),
+        jax.random.PRNGKey(0))
+    assert _pack(res0) == _pack(res1)
+
+
+# ---------------------------------------------------------------------------
+# engine agreement under each constraint
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["knapsack", "partition_matroid"])
+def test_engines_bit_identical_under_constraint(kind):
+    """dense / lazy / fused must agree exactly (ids + value bytes) on the
+    constrained accept decisions — the lazy hot-set pruning and the fused
+    cost-carry / scan sweeps are optimizations, not approximations."""
+    n, d, m, k = 256, 8, 4, 6
+    X = _nonneg(7, n, d)
+    oracle = FeatureCoverage(feat_dim=d)
+    fm, im, vm = _sharded(X, m)
+    cn = (_knapsack(7, n, budget=4.0) if kind == "knapsack"
+          else _partition(7, n, n_parts=4, cap=2))
+    packs = []
+    for engine in ENGINES:
+        cfg = MRConfig(k=k, n_total=n, n_machines=m, engine=engine,
+                       chunk=64, constraint=cn)
+        res, _ = mr.two_round_sim(oracle, fm, im, vm, cfg,
+                                  jax.random.PRNGKey(1))
+        feas = (_feasible_knapsack(res, cn) if kind == "knapsack"
+                else _feasible_partition(res, cn))
+        assert feas, engine
+        packs.append(_pack(res))
+    assert packs[0] == packs[1] == packs[2]
+
+
+# ---------------------------------------------------------------------------
+# byte accounting: the cost plane is on the wire, and both backends agree
+# ---------------------------------------------------------------------------
+
+def test_round_log_counts_cost_plane_sim_vs_mesh():
+    """A knapsack run ships d+1 columns per row.  The sim RoundLog must
+    equal epoch_round_log at the augmented width, the mesh selector's log
+    must match the sim log record-for-record, and both must be strictly
+    heavier than the unconstrained log."""
+    from repro.core import rounds
+
+    n, d, k = 512, 8, 8
+    X = _nonneg(11, n, d)
+    oracle = FeatureCoverage(feat_dim=d)
+    kn = _knapsack(11, n, budget=6.0)
+
+    m = 4
+    fm, im, vm = _sharded(X, m)
+    cfg = MRConfig(k=k, n_total=n, n_machines=m, constraint=kn)
+    _, log_c = mr.two_round_sim(oracle, fm, im, vm, cfg,
+                                jax.random.PRNGKey(0))
+    _, log_u = mr.two_round_sim(oracle, fm, im, vm,
+                                dataclasses.replace(cfg, constraint=None),
+                                jax.random.PRNGKey(0))
+    want = rounds.epoch_round_log(cfg, m, d + 1, 1, with_grid=True,
+                                  with_top=True)
+    assert [dataclasses.astuple(r) for r in log_c.records] == \
+        [dataclasses.astuple(r) for r in want.records]
+    assert log_c.total_bytes > log_u.total_bytes
+
+    mesh = make_mesh_for(len(jax.devices()), model_parallel=1)
+    spec = SelectorSpec(k=k, oracle="feature_coverage",
+                        algorithm="two_round", constraint="knapsack",
+                        knapsack_budget=6.0)
+    sel = DistributedSelector(spec, mesh, n_total=n, feat_dim=d,
+                              element_costs=kn.costs)
+    res = sel.select(X, key=jax.random.PRNGKey(0))
+    assert _feasible_knapsack(res, sel.constraint)
+    m_mesh = sel.cfg.n_machines
+    want_mesh = rounds.epoch_round_log(sel.cfg, m_mesh, d + 1, 1,
+                                       with_grid=True, with_top=True)
+    assert [dataclasses.astuple(r) for r in sel.round_log.records] == \
+        [dataclasses.astuple(r) for r in want_mesh.records]
+
+
+# ---------------------------------------------------------------------------
+# guarantee regressions vs constrained brute-force OPT
+# ---------------------------------------------------------------------------
+
+def test_knapsack_quality_vs_brute_force():
+    """Two-round knapsack selection lands in the constant-factor band of
+    the constrained OPT (Barbosa et al.-style composition of the density
+    rule with the paper's rounds; the band is an empirical regression
+    floor, not the theoretical constant)."""
+    n, d, m, k = 16, 6, 2, 4
+    X = _nonneg(13, n, d)
+    oracle = FeatureCoverage(feat_dim=d)
+    kn = _knapsack(13, n, budget=2.5)
+    fm, im, vm = _sharded(X, m)
+    cfg = MRConfig(k=k, n_total=n, n_machines=m, constraint=kn)
+    res, _ = mr.two_round_sim(oracle, fm, im, vm, cfg,
+                              jax.random.PRNGKey(2))
+    assert _feasible_knapsack(res, kn)
+    _, opt = brute_force_constrained(oracle, np.asarray(X), k, kn)
+    assert float(res.value) >= 0.3 * opt
+
+
+def test_partition_matroid_quality_vs_brute_force():
+    n, d, m, k = 16, 6, 2, 4
+    X = _nonneg(17, n, d)
+    oracle = FeatureCoverage(feat_dim=d)
+    pm = _partition(17, n, n_parts=4, cap=1)
+    fm, im, vm = _sharded(X, m)
+    cfg = MRConfig(k=k, n_total=n, n_machines=m, constraint=pm)
+    res, _ = mr.two_round_sim(oracle, fm, im, vm, cfg,
+                              jax.random.PRNGKey(2))
+    assert _feasible_partition(res, pm)
+    _, opt = brute_force_constrained(oracle, np.asarray(X), k, pm)
+    assert float(res.value) >= 0.45 * opt
+
+
+def test_multi_epoch_carries_constraint_state():
+    """Multi-epoch: the feasibility state must survive across epochs — a
+    later epoch can never overspend what an earlier epoch committed."""
+    n, d, m, k = 256, 8, 4, 8
+    X = _nonneg(19, n, d)
+    oracle = FeatureCoverage(feat_dim=d)
+    kn = _knapsack(19, n, budget=5.0)
+    fm, im, vm = _sharded(X, m)
+    cfg = MRConfig(k=k, n_total=n, n_machines=m, constraint=kn)
+    res, _ = mr.multi_epoch_sim(oracle, fm, im, vm, cfg,
+                                jax.random.PRNGKey(3), epochs=3)
+    assert _feasible_knapsack(res, kn)
+
+
+# ---------------------------------------------------------------------------
+# the mutual-information oracle through the stack
+# ---------------------------------------------------------------------------
+
+def test_mutual_information_is_half_logdet_through_driver():
+    """At noise=1 the MI objective is exactly 0.5 x the log-det objective,
+    and halving every gain and every threshold together flips no accept
+    decision: the two-round driver must pick the SAME ids with exactly
+    half the value."""
+    n, d, m, k = 256, 8, 4, 6
+    rng = np.random.default_rng(23)
+    X = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+    fm, im, vm = _sharded(X, m)
+    cfg = MRConfig(k=k, n_total=n, n_machines=m)
+    res_ld, _ = mr.two_round_sim(LogDetDiversity(feat_dim=d, k_max=k,
+                                                 alpha=1.0),
+                                 fm, im, vm, cfg, jax.random.PRNGKey(5))
+    res_mi, _ = mr.two_round_sim(MutualInformationGaussian(feat_dim=d,
+                                                           k_max=k),
+                                 fm, im, vm, cfg, jax.random.PRNGKey(5))
+    assert (np.asarray(res_mi.sol_ids).tolist()
+            == np.asarray(res_ld.sol_ids).tolist())
+    np.testing.assert_allclose(float(res_mi.value),
+                               0.5 * float(res_ld.value), rtol=1e-6)
+
+
+def test_mutual_information_selector_guarantee():
+    n, d, k = 256, 8, 6
+    rng = np.random.default_rng(29)
+    X = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+    mesh = make_mesh_for(len(jax.devices()), model_parallel=1)
+    spec = SelectorSpec(k=k, oracle="mutual_information", mi_noise=0.8)
+    sel = DistributedSelector(spec, mesh, n_total=n, feat_dim=d)
+    res = sel.select(X, key=jax.random.PRNGKey(0))
+    _, _, gval = greedy(sel.oracle, X, jnp.ones(n, bool), k)
+    assert float(res.value) >= (0.5 - spec.eps) * float(gval)
+
+
+# ---------------------------------------------------------------------------
+# streaming sieve under constraints
+# ---------------------------------------------------------------------------
+
+def test_sieve_constraint_feasible_and_cardinality_identical():
+    n, d, k = 384, 8, 6
+    X = np.asarray(_nonneg(31, n, d))
+    oracle = FeatureCoverage(feat_dim=d)
+
+    def run(constraint):
+        spec = SieveSpec(k=k, eps=0.2, constraint=constraint)
+        ss = StreamingSelector(oracle, spec, d, chunk_elems=128)
+        ss.ingest(X)
+        return ss.select()
+
+    res0, res1 = run(None), run(Cardinality())
+    assert _pack(res0) == _pack(res1)
+
+    kn = _knapsack(31, n, budget=4.0)
+    assert _feasible_knapsack(run(kn), kn)
+    pm = _partition(31, n, n_parts=3, cap=2)
+    assert _feasible_partition(run(pm), pm)
+
+
+# ---------------------------------------------------------------------------
+# validation and refusal surfaces
+# ---------------------------------------------------------------------------
+
+def test_validation_errors():
+    with pytest.raises(TypeError):
+        MRConfig(k=4, n_total=16, n_machines=2, constraint="knapsack")
+    with pytest.raises(ValueError):
+        SelectorSpec(k=4, constraint="bogus")
+    with pytest.raises(TypeError):
+        SieveSpec(k=4, constraint="knapsack")
+    with pytest.raises(ValueError):
+        make_constraint("nope")
+    with pytest.raises(ValueError):
+        make_constraint("knapsack")          # needs costs + budget
+    with pytest.raises(ValueError):
+        make_constraint("partition_matroid")  # needs parts + capacities
+    assert make_constraint("cardinality") is None
+
+
+def test_batch_drivers_refuse_constraints():
+    """Per-query feasibility states don't compose with the shared
+    sample/gather rounds — the query-batched drivers must refuse loudly
+    instead of silently ignoring the constraint."""
+    n, d, m, k = 64, 4, 2, 4
+    X = _nonneg(37, n, d)
+    fm, im, vm = _sharded(X, m)
+    cfg = MRConfig(k=k, n_total=n, n_machines=m,
+                   constraint=_knapsack(37, n, budget=3.0))
+    qb = mr.make_query_batch([2, 3])
+    with pytest.raises(NotImplementedError):
+        mr.two_round_batch_sim(FeatureCoverage(feat_dim=d), fm, im, vm,
+                               qb, cfg, jax.random.PRNGKey(0))

@@ -642,3 +642,82 @@ def test_accept_scan_vs_kernel_property(B, d, seed, budget, tau_scale):
                           interpret=True)
     want = ref.coverage_accept(x, state, None, elig, tau, budget)
     _assert_accept_matches(got, want, d, jnp.float32, "coverage_accept")
+
+
+# ---------------------------------------------------------------------------
+# logdet_accept kernel (log-det scale=1 / mutual-information scale=0.5)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.logdet_accept import logdet_accept  # noqa: E402
+
+
+def _logdet_accept_case(seed, B, k, d):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = _rand(k1, (B, d), jnp.float32)
+    U = _rand(k2, (k, d), jnp.float32) * 0.3
+    if k > 1:
+        U = U.at[-1].set(0.0)               # room left in the basis
+    elig = jax.random.uniform(k3, (B,)) < 0.8
+    return x, U, elig
+
+
+def _assert_logdet_accept_matches(got, want, name, tol=2e-4):
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]),
+                                  err_msg=f"{name}: accept masks differ")
+    for g, w in zip(got[1:], want[1:]):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=tol, atol=tol, err_msg=name)
+
+
+@pytest.mark.parametrize("B,k,d", [(32, 8, 64), (13, 3, 20), (1, 1, 1),
+                                   (64, 16, 300), (129, 33, 40)])
+@pytest.mark.parametrize("scale", [1.0, 0.5])
+def test_logdet_accept_matches_ref(B, k, d, scale):
+    x, U, elig = _logdet_accept_case(B * 7 + k, B, k, d)
+    tau = float(jnp.median(ref.logdet_marginals(x, U, alpha=0.8))) * scale
+    budget = max(1, min(B, k) // 2)
+    got = logdet_accept(x, U, 0.3, 1, elig, tau, budget, alpha=0.8,
+                        scale=scale, interpret=True)
+    want = ref.logdet_accept(x, U, 0.3, 1, elig, tau, budget, alpha=0.8,
+                             scale=scale)
+    _assert_logdet_accept_matches(got, want, f"logdet_accept scale={scale}")
+
+
+@pytest.mark.parametrize("B,k,d", [(32, 8, 64), (13, 3, 20), (64, 16, 48)])
+def test_logdet_accept_with_cost_matches_ref(B, k, d):
+    """The knapsack variant: per-row costs + a cost budget gate accepts
+    alongside tau and the cardinality budget."""
+    x, U, elig = _logdet_accept_case(B * 11 + k, B, k, d)
+    cost = jnp.abs(_rand(jax.random.PRNGKey(B + d), (B,), jnp.float32)) + 0.1
+    tau = float(jnp.median(ref.logdet_marginals(x, U, alpha=0.8)))
+    budget = max(1, min(B, k) // 2)
+    cost_budget = float(jnp.sum(cost)) / 4.0
+    got = logdet_accept(x, U, 0.0, 1, elig, tau, budget, alpha=0.8,
+                        cost=cost, cost_budget=cost_budget, interpret=True)
+    want = ref.logdet_accept(x, U, 0.0, 1, elig, tau, budget, alpha=0.8,
+                             cost=cost, cost_budget=cost_budget)
+    _assert_logdet_accept_matches(got, want, "logdet_accept+cost")
+    # spent cost of the accepted rows never exceeds the cost budget
+    mask = np.asarray(got[0])
+    assert float(np.sum(np.asarray(cost)[mask])) <= cost_budget + 1e-5
+
+
+def test_mutual_information_oracle_kernel_accept_route():
+    """MutualInformationGaussian(use_kernel=True).chunk_accept == the plain
+    scan path (the kernel shares logdet_accept at compile-time scale=0.5)."""
+    from repro.core.functions import MutualInformationGaussian
+
+    rng = np.random.default_rng(31)
+    X = jnp.asarray(rng.standard_normal((40, 24)).astype(np.float32))
+    plain = MutualInformationGaussian(feat_dim=24, k_max=8, noise=0.7)
+    fused = MutualInformationGaussian(feat_dim=24, k_max=8, noise=0.7,
+                                      use_kernel=True)
+    st0 = plain.init_state()
+    tau = float(jnp.median(plain.chunk_marginals(st0, X)))
+    elig = jnp.asarray(rng.random(40) < 0.8)
+    got = fused.chunk_accept(st0, X, elig, tau, 6)
+    want = plain.chunk_accept(st0, X, elig, tau, 6)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    for g, w in zip(jax.tree.leaves(got[1]), jax.tree.leaves(want[1])):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-4)
