@@ -1,0 +1,109 @@
+"""Benchmark: selection quality under injected faults (DESIGN.md §9).
+
+Claims validated here
+  * graceful degradation: with shard-loss rates up to 0.5 the two-round
+    and multi-epoch drivers COMPLETE (no crash, no silent drop) and
+    report ``degraded=True`` with fault records in the round log;
+  * the loss-compensation bound: at loss <= 0.25 the degraded value stays
+    >= 0.9x the fault-free value on every oracle in the zoo (the sample
+    round is statistically loss-tolerant — losing shards under random
+    partitioning is a smaller sample, and the boosted sample probability
+    + padded tau grid recover most of it);
+  * the reported ``haircut`` tracks the worst realized survivor fraction
+    (M-m)/M — the factor the (1/2 - eps) / (1-1/e-eps) guarantees scale
+    by.
+
+Columns: per (driver, oracle, fault kind, rate) the degraded/fault-free
+value ratio, the realized degraded flag + haircut, and the fault-event
+counts out of the round log.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import instance, print_table, save
+from repro.core import FaultPlan, MRConfig, multi_epoch_sim, two_round_sim
+from repro.core.faults import fault_summary
+
+#: value floor asserted at loss_rate <= 0.25 (the ISSUE acceptance bar)
+VALUE_FLOOR = 0.9
+
+
+#: FaultPlan field for each pure-kind sweep (launch/select.py's chaos
+#: profile mixes the kinds; sweeping one at a time keeps the ratio
+#: attributable)
+_KIND_FIELD = {"shard_loss": "loss_rate", "msg_drop": "drop_rate",
+               "msg_corrupt": "corrupt_rate", "straggler": "straggler_rate"}
+
+
+def _make_plan(kind: str, rate: float, seed: int = 3) -> FaultPlan:
+    return FaultPlan(**{_KIND_FIELD[kind]: rate}, seed=seed)
+
+
+def run(quick: bool = False) -> list:
+    rows = []
+    n, d, m, k = (1024, 16, 8, 16) if quick else (2048, 16, 8, 24)
+    kinds = ("coverage", "facility", "graph_cut") if quick else \
+        ("coverage", "facility", "saturated", "graph_cut", "log_det",
+         "exemplar")
+    fault_kinds = ("shard_loss",) if quick else \
+        ("shard_loss", "msg_drop", "msg_corrupt")
+    rates = (0.25,) if quick else (0.1, 0.25, 0.5)
+    drivers = (("two_round", two_round_sim),
+               ("multi_epoch", multi_epoch_sim))
+
+    for okind in kinds:
+        oracle, X, fm, im, vm = instance(seed=7, n=n, d=d, m=m, kind=okind,
+                                         k=k)
+        key = jax.random.PRNGKey(5)
+        for dname, driver in drivers:
+            # fault-free baseline: the denominator of every ratio below
+            cfg0 = MRConfig(k=k, n_total=n, n_machines=m)
+            res0, _ = driver(oracle, fm, im, vm, cfg0, key)
+            base = float(res0.value)
+            assert int(res0.degraded) == 0 and float(res0.haircut) == 1.0
+            rows.append({"driver": dname, "oracle": okind, "fault": "none",
+                         "rate": 0.0, "value": base, "ratio": 1.0,
+                         "degraded": 0, "haircut": 1.0,
+                         "faulted_rounds": 0})
+            for fkind in fault_kinds:
+                for rate in rates:
+                    cfg = MRConfig(k=k, n_total=n, n_machines=m,
+                                   faults=_make_plan(fkind, rate))
+                    res, log = driver(oracle, fm, im, vm, cfg, key)
+                    val = float(res.value)
+                    realized, frac = fault_summary(log)
+                    ev = log.fault_events()
+                    ratio = val / base if base > 0 else float("nan")
+                    rows.append({"driver": dname, "oracle": okind,
+                                 "fault": fkind, "rate": rate,
+                                 "value": val, "ratio": ratio,
+                                 "degraded": int(res.degraded),
+                                 "haircut": float(res.haircut),
+                                 "faulted_rounds":
+                                     ev.get("faulted_rounds", 0)})
+                    # completion + reporting: a realized fault must be
+                    # flagged degraded — never silently absorbed
+                    assert int(res.sol_size) > 0, \
+                        f"{dname}/{okind}/{fkind}@{rate}: empty selection"
+                    assert int(res.degraded) == int(realized), \
+                        f"{dname}/{okind}/{fkind}@{rate}: fault records " \
+                        f"and degraded flag disagree"
+                    if realized:
+                        assert abs(float(res.haircut) - frac) < 1e-6
+                    # the quality floor the ISSUE pins: >= 0.9x fault-free
+                    # at loss <= 0.25
+                    if rate <= 0.25:
+                        assert ratio >= VALUE_FLOOR, \
+                            f"{dname}/{okind}/{fkind}@{rate}: ratio " \
+                            f"{ratio:.3f} < {VALUE_FLOOR}"
+
+    print_table("fault_tolerance (degraded-mode value vs fault-free)", rows)
+    save("fault_tolerance", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--quick" in sys.argv)

@@ -11,6 +11,7 @@
   streaming               one-pass sieve throughput, value ratios, warm-start
   precision               bf16 storage vs f32: throughput, bytes, value ratio
   constrained_quality     knapsack/partition ratios vs constrained OPT + throughput
+  fault_tolerance         degraded-mode value under injected shard loss
   selection_roofline      §Perf pair-3 report (paper technique on the pod)
   roofline_report         aggregates results/dryrun into §Roofline rows
 
@@ -39,7 +40,7 @@ import traceback
 MODULES = ("approx_ratio", "epoch_quality", "adversarial", "memory_rounds",
            "distributed_baselines", "selection_throughput", "selection_qps",
            "selection_slo", "streaming", "precision", "constrained_quality",
-           "selection_roofline", "roofline_report")
+           "fault_tolerance", "selection_roofline", "roofline_report")
 
 
 def _missing_outputs(mod, name: str, t0: float) -> list:

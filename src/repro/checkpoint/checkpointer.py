@@ -20,10 +20,19 @@ import json
 import os
 import shutil
 import threading
+import time
+import zipfile
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint on disk is truncated or corrupted (bad zip/CRC, leaf
+    count or byte length disagreeing with the manifest) — restore refuses
+    it loudly instead of surfacing a raw unpickling traceback or, worse,
+    silently loading damaged state."""
 
 
 def _flatten(tree, prefix="") -> List[Tuple[str, Any]]:
@@ -42,9 +51,17 @@ def _flatten(tree, prefix="") -> List[Tuple[str, Any]]:
 
 
 class Checkpointer:
-    def __init__(self, directory: str, keep: int = 3):
+    def __init__(self, directory: str, keep: int = 3,
+                 retry_attempts: int = 3, retry_backoff_s: float = 0.05):
         self.dir = directory
         self.keep = keep
+        # transient write failures (full-ish disk, NFS hiccup) get
+        # retry_attempts tries with exponential backoff before the save is
+        # declared dead; n_retries counts every retried failure so the
+        # serving stats can report flakiness that never became an error
+        self.retry_attempts = max(1, int(retry_attempts))
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.n_retries = 0
         os.makedirs(directory, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
@@ -63,9 +80,12 @@ class Checkpointer:
         pairs = _flatten(state)
         flat = {f"a{i}": np.asarray(jax.device_get(v))
                 for i, (_, v) in enumerate(pairs)}
-        manifest = {"step": step, "paths": [p for p, _ in pairs]}
+        manifest = {"step": step, "paths": [p for p, _ in pairs],
+                    "n_leaves": len(pairs),
+                    "nbytes": [int(flat[f"a{i}"].nbytes)
+                               for i in range(len(pairs))]}
 
-        def write():
+        def write_once():
             tmp = os.path.join(self.dir, f".tmp_step_{step}")
             final = os.path.join(self.dir, f"step_{step}")
             os.makedirs(tmp, exist_ok=True)
@@ -76,6 +96,21 @@ class Checkpointer:
                 shutil.rmtree(final)
             os.rename(tmp, final)
             self._rotate()
+
+        def write():
+            for attempt in range(self.retry_attempts):
+                try:
+                    write_once()
+                    return
+                except Exception:       # noqa: BLE001
+                    # scrap the half-written tmp dir before trying again —
+                    # a partial arrays.npz must never survive into a retry
+                    shutil.rmtree(os.path.join(self.dir, f".tmp_step_{step}"),
+                                  ignore_errors=True)
+                    if attempt == self.retry_attempts - 1:
+                        raise
+                    self.n_retries += 1
+                    time.sleep(self.retry_backoff_s * (2 ** attempt))
 
         if blocking:
             write()
@@ -101,8 +136,8 @@ class Checkpointer:
         if self._error is not None:
             err, self._error = self._error, None
             raise RuntimeError(
-                "async checkpoint save failed (the checkpoint was NOT "
-                "written)") from err
+                f"async checkpoint save failed after {self.retry_attempts} "
+                "attempts (the checkpoint was NOT written)") from err
 
     def _rotate(self):
         steps = self.all_steps()
@@ -131,18 +166,51 @@ class Checkpointer:
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
         path = os.path.join(self.dir, f"step_{step}")
-        with open(os.path.join(path, "manifest.json")) as f:
-            manifest = json.load(f)
-        arrays = np.load(os.path.join(path, "arrays.npz"))
+        try:
+            with open(os.path.join(path, "manifest.json")) as f:
+                manifest = json.load(f)
+        except FileNotFoundError:
+            raise
+        except (OSError, json.JSONDecodeError, UnicodeDecodeError) as e:
+            raise CheckpointCorruptError(
+                f"unreadable manifest in {path}: {e}") from e
+        try:
+            arrays = np.load(os.path.join(path, "arrays.npz"))
+        except (OSError, ValueError, zipfile.BadZipFile, EOFError) as e:
+            raise CheckpointCorruptError(
+                f"unreadable arrays.npz in {path} (truncated/corrupted "
+                f"archive): {e}") from e
         tmpl_pairs = _flatten(template)
         if [p for p, _ in tmpl_pairs] != manifest["paths"]:
             raise ValueError(
                 "checkpoint/template tree mismatch:\n"
                 f"  ckpt: {manifest['paths'][:5]}...\n"
                 f"  tmpl: {[p for p, _ in tmpl_pairs][:5]}...")
+        # manifests written since the fault-tolerance change carry leaf
+        # count + per-leaf byte lengths; when present, disagreement with
+        # the archive means truncation/bit damage, not a version skew
+        n_leaves = manifest.get("n_leaves")
+        if n_leaves is not None and len(arrays.files) != n_leaves:
+            raise CheckpointCorruptError(
+                f"checkpoint {path} truncated: manifest promises "
+                f"{n_leaves} leaves, archive holds {len(arrays.files)}")
+        nbytes = manifest.get("nbytes")
         leaves = []
         for i, (_, tmpl) in enumerate(tmpl_pairs):
-            arr = arrays[f"a{i}"]
+            try:
+                # eager materialization — npz members are CRC-checked by
+                # zipfile on read, so bit flips surface here
+                arr = arrays[f"a{i}"]
+            except CheckpointCorruptError:
+                raise
+            except Exception as e:     # noqa: BLE001  (BadZipFile, zlib, Key)
+                raise CheckpointCorruptError(
+                    f"leaf a{i} of {path} is unreadable (corrupted "
+                    f"archive member): {e}") from e
+            if nbytes is not None and int(arr.nbytes) != int(nbytes[i]):
+                raise CheckpointCorruptError(
+                    f"leaf a{i} of {path} has {arr.nbytes} bytes, manifest "
+                    f"promises {nbytes[i]} — truncated or damaged")
             want = np.dtype(getattr(tmpl, "dtype", arr.dtype))
             leaves.append(jax.numpy.asarray(arr.astype(want)))
         return jax.tree.unflatten(jax.tree.structure(template), leaves), step

@@ -4,6 +4,8 @@ maximization in the MapReduce model (Liu–Vondrák, SOSA 2019)."""
 from repro.core.constraints import (CONSTRAINT_NAMES, Cardinality,
                                     Constraint, Knapsack, PartitionMatroid,
                                     make_constraint, split_plane)
+from repro.core.faults import (FAULT_KINDS, FaultPlan, FaultyRounds,
+                               chaos_plan, fault_summary)
 from repro.core.functions import (AdversarialThreshold, ExemplarClustering,
                                   FacilityLocation, FeatureCoverage,
                                   GraphCut, LogDetDiversity,
@@ -30,6 +32,8 @@ __all__ = [
     "GreedyStats",
     "CONSTRAINT_NAMES", "Cardinality", "Constraint", "Knapsack",
     "PartitionMatroid", "make_constraint", "split_plane",
+    "FAULT_KINDS", "FaultPlan", "FaultyRounds", "chaos_plan",
+    "fault_summary",
     "AdversarialThreshold", "ExemplarClustering", "FacilityLocation",
     "FeatureCoverage", "GraphCut", "LogDetDiversity",
     "MutualInformationGaussian", "SaturatedCoverage",

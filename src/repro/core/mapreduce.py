@@ -38,6 +38,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import constraints as constraints_mod
+from repro.core import faults as faults_mod
 from repro.core import grids, rounds
 from repro.core import precision as precision_mod
 from repro.core.functions import bind_query, consumes_query_params
@@ -56,6 +57,14 @@ class SelectionResult(NamedTuple):
     #                               means the unknown-OPT estimate had no
     #                               signal and the affected path selected
     #                               nothing instead of everything
+    degraded: jax.Array = 0       # () int32 — 1 when fault injection (or a
+    #                               real outage routed through FaultyRounds)
+    #                               degraded this run; the fault records are
+    #                               in the driver's RoundLog
+    haircut: jax.Array = 1.0      # () f32 — estimated multiplicative
+    #                               guarantee factor under the recorded
+    #                               faults: worst per-round survivor
+    #                               fraction (faults.fault_summary)
 
 
 class QueryBatch(NamedTuple):
@@ -117,6 +126,10 @@ class MRConfig:
     #                                       through every epoch driver; None
     #                                       is plain k-cardinality (the
     #                                       pre-constraint fast path)
+    faults: Optional[faults_mod.FaultPlan] = None
+    #                                       deterministic chaos schedule
+    #                                       (core/faults.py); None is the
+    #                                       untouched production fast path
 
     def __post_init__(self):
         # trace-time knob validation with the config as the call site —
@@ -130,6 +143,11 @@ class MRConfig:
                 "MRConfig: constraint must be a repro.core.constraints."
                 f"Constraint (or None), got {type(self.constraint).__name__}"
                 "; build one with constraints.make_constraint(...)")
+        if self.faults is not None and not isinstance(
+                self.faults, faults_mod.FaultPlan):
+            raise TypeError(
+                "MRConfig: faults must be a repro.core.faults.FaultPlan "
+                f"(or None), got {type(self.faults).__name__}")
 
     @property
     def constraint_planes(self) -> int:
@@ -188,8 +206,14 @@ class MRConfig:
         return s_cap, f_cap, t_cap
 
     def grid_size(self) -> int:
-        # one tau_j within (1+eps) of OPT/2k needs ~log_{1+eps}(k) points
-        return grids.grid_size(self.k, self.eps, self.n_grid)
+        # one tau_j within (1+eps) of OPT/2k needs ~log_{1+eps}(k) points;
+        # under a fault plan the sampled v estimate can sag by the loss
+        # fraction, so the derived grid gets statically padded (an explicit
+        # n_grid is respected as-is)
+        J = grids.grid_size(self.k, self.eps, self.n_grid)
+        if self.n_grid is None and self.faults is not None:
+            J += self.faults.grid_pad(self.eps)
+        return J
 
 
 # Thin aliases: the drivers' central/local pieces live in repro.core.rounds
@@ -303,8 +327,9 @@ def two_round_known_opt_sim(oracle, feats_mk, ids_mk, valid_mk, opt,
     rr = SimRounds(oracle, feats_mk, ids_mk, valid_mk,
                    precision=cfg.precision_policy, constraint=cfg.constraint)
     log = rounds.epoch_round_log(cfg, m, rr.feat_dim, 1)
+    rr = faults_mod.with_faults(rr, cfg.faults, log, m, cfg.n_total)
     res = _known_opt_select(oracle, rr, cfg, [opt / (2.0 * cfg.k)], [key])
-    return res, log
+    return faults_mod.apply_fault_flags(res, log), log
 
 
 def multi_threshold_sim(oracle, feats_mk, ids_mk, valid_mk, opt, t: int,
@@ -322,9 +347,10 @@ def multi_threshold_sim(oracle, feats_mk, ids_mk, valid_mk, opt, t: int,
     sched = (list(schedule) if schedule is not None
              else grids.alg5_schedule(opt, cfg.k, t))
     log = rounds.epoch_round_log(cfg, m, rr.feat_dim, t, level_suffix=True)
+    rr = faults_mod.with_faults(rr, cfg.faults, log, m, cfg.n_total)
     res = _known_opt_select(oracle, rr, cfg, sched,
                             rounds.chain_keys(key, t))
-    return res, log
+    return faults_mod.apply_fault_flags(res, log), log
 
 
 def dense_two_round_sim(oracle, feats_mk, ids_mk, valid_mk, cfg: MRConfig,
@@ -336,9 +362,10 @@ def dense_two_round_sim(oracle, feats_mk, ids_mk, valid_mk, cfg: MRConfig,
     rr = SimRounds(oracle, feats_mk, ids_mk, valid_mk,
                    precision=cfg.precision_policy, constraint=cfg.constraint)
     log = rounds.epoch_round_log(cfg, m, rr.feat_dim, 1, with_grid=True)
+    rr = faults_mod.with_faults(rr, cfg.faults, log, m, cfg.n_total)
     res = _epoch_select(oracle, rr, cfg, [key], 1, cfg.schedule_kind,
                         with_sparse=False)
-    return res, log
+    return faults_mod.apply_fault_flags(res, log), log
 
 
 def sparse_two_round_sim(oracle, feats_mk, ids_mk, valid_mk, cfg: MRConfig,
@@ -354,6 +381,7 @@ def sparse_two_round_sim(oracle, feats_mk, ids_mk, valid_mk, cfg: MRConfig,
     rounds.log_gather(log, "gather-top-singletons", t_cap, m, rr.feat_dim,
                       f"top {t_cap}/machine",
                       itemsize=cfg.precision_policy.storage_itemsize)
+    rr = faults_mod.with_faults(rr, cfg.faults, log, m, cfg.n_total)
     L, tdrop = rr.tops(oracle, t_cap)
     taus, tau_fb = _tau_grid(oracle, cfg, *L)
     sol_j, size_j, val_j = rounds.sparse_sweep(oracle, L, [taus], cfg,
@@ -363,7 +391,7 @@ def sparse_two_round_sim(oracle, feats_mk, ids_mk, valid_mk, cfg: MRConfig,
     best = jnp.argmax(val_j)
     res = SelectionResult(sol_j[best], size_j[best], val_j[best], tdrop,
                           tau_fb)
-    return res, log
+    return faults_mod.apply_fault_flags(res, log), log
 
 
 def multi_epoch_sim(oracle, feats_mk, ids_mk, valid_mk, cfg: MRConfig, key,
@@ -389,16 +417,18 @@ def multi_epoch_sim(oracle, feats_mk, ids_mk, valid_mk, cfg: MRConfig, key,
                  else grids.epoch_schedule(opt / (2.0 * cfg.k), E, cfg.eps,
                                            kind))
         log = rounds.epoch_round_log(cfg, m, rr.feat_dim, E)
+        rr = faults_mod.with_faults(rr, cfg.faults, log, m, cfg.n_total)
         # chained keys = multi_threshold_sim's derivation, so the known-OPT
         # paper-schedule instantiation IS Algorithm 5 bit-for-bit
         res = _known_opt_select(oracle, rr, cfg, sched,
                                 rounds.chain_keys(key, E))
-        return res, log
+        return faults_mod.apply_fault_flags(res, log), log
     kd, _ks = jax.random.split(key)
     log = rounds.epoch_round_log(cfg, m, rr.feat_dim, E, with_grid=True,
                                  with_top=True)
+    rr = faults_mod.with_faults(rr, cfg.faults, log, m, cfg.n_total)
     res = _epoch_select(oracle, rr, cfg, _epoch_keys_split(kd, E), E, kind)
-    return res, log
+    return faults_mod.apply_fault_flags(res, log), log
 
 
 def two_round_sim(oracle, feats_mk, ids_mk, valid_mk, cfg: MRConfig,
@@ -439,6 +469,7 @@ def two_round_batch_sim(oracle, feats_mk, ids_mk, valid_mk, qb: QueryBatch,
     log = _batch_round_log(cfg, m, d, Q, shared_stats)
     rr = SimRounds(oracle, feats_mk, ids_mk, valid_mk,
                    precision=cfg.precision_policy)
+    rr = faults_mod.with_faults(rr, cfg.faults, log, m, cfg.n_total)
 
     # shared round 1a: one Bernoulli sample serves all Q queries
     kd, _ks = jax.random.split(key)
@@ -473,7 +504,7 @@ def two_round_batch_sim(oracle, feats_mk, ids_mk, valid_mk, qb: QueryBatch,
     sols, sizes, vals, rdrops, fbs = jax.vmap(one_query)(
         qb.k, qb.graph_cut_lam, qb.logdet_alpha)
     res = SelectionResult(sols, sizes, vals, sdrop + rdrops, fbs)
-    return res, log
+    return faults_mod.apply_fault_flags(res, log), log
 
 
 # ---------------------------------------------------------------------------
@@ -584,6 +615,7 @@ def two_round_known_opt_mesh(oracle, cfg: MRConfig, mesh: Mesh,
         rr = MeshRounds(oracle, feats, ids, ids >= 0, gather_axes,
                         precision=cfg.precision_policy,
                         constraint=cfg.constraint)
+        rr = faults_mod.with_faults(rr, cfg.faults, log, m, cfg.n_total)
         return _known_opt_select(oracle, rr, cfg, [opt / (2.0 * cfg.k)],
                                  [key])
 
@@ -595,7 +627,7 @@ def two_round_known_opt_mesh(oracle, cfg: MRConfig, mesh: Mesh,
 
     def run(feats_global, ids_global, opt, key):
         out = fn(feats_global, ids_global, jnp.asarray(opt, jnp.float32), key)
-        return SelectionResult(*out)
+        return faults_mod.apply_fault_flags(SelectionResult(*out), log)
 
     return run, log
 
@@ -613,6 +645,7 @@ def multi_threshold_mesh(oracle, cfg: MRConfig, t: int, mesh: Mesh,
         rr = MeshRounds(oracle, feats, ids, ids >= 0, gather_axes,
                         precision=cfg.precision_policy,
                         constraint=cfg.constraint)
+        rr = faults_mod.with_faults(rr, cfg.faults, log, m, cfg.n_total)
         return _known_opt_select(oracle, rr, cfg,
                                  grids.alg5_schedule(opt, cfg.k, t),
                                  rounds.chain_keys(key, t))
@@ -625,7 +658,7 @@ def multi_threshold_mesh(oracle, cfg: MRConfig, t: int, mesh: Mesh,
 
     def run(feats_global, ids_global, opt, key):
         out = fn(feats_global, ids_global, jnp.asarray(opt, jnp.float32), key)
-        return SelectionResult(*out)
+        return faults_mod.apply_fault_flags(SelectionResult(*out), log)
 
     return run, log
 
@@ -649,6 +682,7 @@ def multi_epoch_mesh(oracle, cfg: MRConfig, mesh: Mesh, axes=("data",),
         rr = MeshRounds(oracle, feats, ids, ids >= 0, gather_axes,
                         precision=cfg.precision_policy,
                         constraint=cfg.constraint)
+        rr = faults_mod.with_faults(rr, cfg.faults, log, m, cfg.n_total)
         return _epoch_select(oracle, rr, cfg, _epoch_keys_split(key, E), E,
                              kind)
 
@@ -660,7 +694,7 @@ def multi_epoch_mesh(oracle, cfg: MRConfig, mesh: Mesh, axes=("data",),
 
     def run(feats_global, ids_global, key):
         out = fn(feats_global, ids_global, key)
-        return SelectionResult(*out)
+        return faults_mod.apply_fault_flags(SelectionResult(*out), log)
 
     return run, log
 
@@ -704,8 +738,15 @@ def two_round_batch_mesh(oracle, cfg: MRConfig, mesh: Mesh,
     feat_dim = oracle.feat_dim
     shared_stats = not consumes_query_params(oracle)
 
+    # fault records live in one driver-held log (the per-Q round logs a
+    # service builds below share its list, so selector/service stats see
+    # the same records)
+    fault_log = RoundLog()
+
     def round_log(n_queries: int) -> RoundLog:
-        return _batch_round_log(cfg, m, feat_dim, n_queries, shared_stats)
+        blog = _batch_round_log(cfg, m, feat_dim, n_queries, shared_stats)
+        blog.faults = fault_log.faults
+        return blog
 
     def body(feats, ids, qk, qlam, qalpha, key):
         valid = ids >= 0
@@ -715,6 +756,8 @@ def two_round_batch_mesh(oracle, cfg: MRConfig, mesh: Mesh,
         feats = cfg.precision_policy.cast_storage(feats)
         rr = MeshRounds(oracle, feats, ids, valid, gather_axes,
                         precision=cfg.precision_policy)
+        rr = faults_mod.with_faults(rr, cfg.faults, fault_log, m,
+                                    cfg.n_total)
 
         # ---- round 1: shared sample + per-query tops, one gather --------
         # (same key derivation as two_round_mesh, so a Q=1 batch with
@@ -736,6 +779,8 @@ def two_round_batch_mesh(oracle, cfg: MRConfig, mesh: Mesh,
             Ltf = rounds.gather_packed(tf, gather_axes, lead=1)  # (Q, m*t_cap, d)
             Lti = rounds.gather_packed(ti, gather_axes, lead=1)
             Ltv = rounds.gather_packed(tv, gather_axes, lead=1)
+            (Ltf, Lti, Ltv), _ = faults_mod.degrade_gathered(
+                rr, (Ltf, Lti, Ltv), jnp.zeros((), jnp.int32))
             top_axis = 0
 
         # ---- central phase 1 + local survivor filter, per query ---------
@@ -758,6 +803,8 @@ def two_round_batch_mesh(oracle, cfg: MRConfig, mesh: Mesh,
         Rf = rounds.gather_packed(rf, gather_axes, lead=2)  # (Q, J, m*f_cap, d)
         Ri = rounds.gather_packed(ri, gather_axes, lead=2)
         Rv = rounds.gather_packed(rv, gather_axes, lead=2)
+        (Rf, Ri, Rv), _ = faults_mod.degrade_gathered(
+            rr, (Rf, Ri, Rv), jnp.zeros((), jnp.int32))
 
         # ---- central phase 2 + sparse path, per query -------------------
         def phase_b(kq, lam, alpha, taus, st_j, sol_j, size_j, f_j, i_j, v_j,
@@ -786,6 +833,6 @@ def two_round_batch_mesh(oracle, cfg: MRConfig, mesh: Mesh,
     def run(feats_global, ids_global, qb: QueryBatch, key):
         out = fn(feats_global, ids_global, qb.k, qb.graph_cut_lam,
                  qb.logdet_alpha, key)
-        return SelectionResult(*out)
+        return faults_mod.apply_fault_flags(SelectionResult(*out), fault_log)
 
     return run, round_log

@@ -50,6 +50,23 @@ class RoundRecord:
     detail: str = ""
 
 
+@dataclasses.dataclass(frozen=True)
+class FaultRecord:
+    """One realized fault, recorded beside the Lemma-2/6 byte accounting.
+
+    ``eff_machines``/``eff_n`` are the *degraded* effective machine count
+    and ground-set size after this fault landed — what the guarantee
+    haircut is computed from (see faults.fault_summary)."""
+    kind: str                  # faults.FAULT_KINDS
+    epoch: int                 # epoch the fault landed in
+    round_index: int           # gather index within the driver's trace
+    machines: tuple            # affected machine indices
+    n_machines: int            # configured M
+    eff_machines: int          # survivors after this fault
+    eff_n: int                 # degraded effective ground-set size
+    detail: str = ""
+
+
 @dataclasses.dataclass
 class RoundLog:
     records: List[RoundRecord] = dataclasses.field(default_factory=list)
@@ -58,6 +75,9 @@ class RoundLog:
     #: static.  Values may be (device) scalars; they are only coerced to
     #: int when summarized, so noting them never forces a sync.
     events: Dict[str, object] = dataclasses.field(default_factory=dict)
+    #: realized fault-injection records (faults.FaultyRounds) — static per
+    #: (plan, config) like ``records``, rebuilt from scratch on retrace
+    faults: List[FaultRecord] = dataclasses.field(default_factory=list)
 
     def add(self, name: str, bytes_per_machine: int, bytes_total: int,
             detail: str = "") -> None:
@@ -70,6 +90,26 @@ class RoundLog:
         device scalar; it is summed symbolically and realized in summary()."""
         prev = self.events.get(name)
         self.events[name] = count if prev is None else prev + count
+
+    def fault(self, rec: FaultRecord) -> None:
+        self.faults.append(rec)
+
+    def fault_events(self) -> Dict[str, int]:
+        """Aggregate the fault records into flat counters, mirroring
+        ``runtime_events()`` on the selectors so service stats expose shard
+        losses/drops/corruptions/stragglers uniformly: per-kind affected-
+        machine counts, the number of distinct faulted gathers, and the
+        worst-round survivor count."""
+        out: Dict[str, int] = {}
+        for rec in self.faults:
+            key = f"{rec.kind}_machines"
+            out[key] = out.get(key, 0) + len(rec.machines)
+        if self.faults:
+            out["faulted_rounds"] = len(
+                {(rec.epoch, rec.round_index) for rec in self.faults})
+            out["min_eff_machines"] = min(
+                rec.eff_machines for rec in self.faults)
+        return out
 
     @property
     def n_rounds(self) -> int:
@@ -93,6 +133,12 @@ class RoundLog:
             counts = " ".join(f"{k}={int(v)}"
                               for k, v in sorted(self.events.items()))
             lines.append(f"  events: {counts}")
+        for rec in self.faults:
+            lines.append(
+                f"  FAULT [{rec.kind}] epoch={rec.epoch} "
+                f"gather={rec.round_index} machines={list(rec.machines)} "
+                f"eff=(M={rec.eff_machines}/{rec.n_machines}, "
+                f"n~{rec.eff_n}) {rec.detail}")
         return "\n".join(lines)
 
 
@@ -243,6 +289,11 @@ class SimRounds:
         self.feats_mk, self.ids_mk, self.valid_mk = feats_mk, ids_mk, valid_mk
         self.m, self.n_local, self.feat_dim = feats_mk.shape
 
+    def begin_epoch(self, e: int) -> None:
+        """Epoch-boundary hook (run_epochs announces each level): a no-op
+        on the bare substrates, where faults.FaultyRounds realizes its
+        per-epoch shard-loss mask."""
+
     def sample(self, key, p, cap):
         m, d = self.m, self.feat_dim
         keys = jax.random.split(key, m)
@@ -314,6 +365,9 @@ class MeshRounds:
         self.feats, self.ids, self.valid = feats, ids, valid
         self.gather_axes = gather_axes
         self.machine_index = jax.lax.axis_index(gather_axes)
+
+    def begin_epoch(self, e: int) -> None:
+        """Epoch-boundary hook — see SimRounds.begin_epoch."""
 
     def _gather3(self, f, i, v, lead: int = 0):
         return tuple(gather_packed(x, self.gather_axes, lead=lead)
@@ -456,6 +510,10 @@ def run_epochs(oracle, rounds, schedule, epoch_keys, cfg, k_dyn=None,
     carry = None
     drops = jnp.zeros((), jnp.int32)
     for e, taus in enumerate(schedule):
+        # announce the epoch boundary so a fault-injecting wrapper can
+        # realize its per-epoch shard-loss mask (no-op on bare substrates;
+        # idempotent when the unknown-OPT drivers pre-drew epoch 1's sample)
+        rounds.begin_epoch(e)
         if e == 0 and first_sample is not None:
             S, sdrop = first_sample
         else:

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import constraints as constraints_mod
+from repro.core import faults as faults_mod
 from repro.core import functions as F
 from repro.core import mapreduce as mr
 from repro.core import precision as precision_mod
@@ -64,6 +65,11 @@ class SelectorSpec:
     knapsack_budget: Optional[float] = None   # constraint="knapsack" budget
     mi_noise: float = 1.0              # MutualInformationGaussian sensor
     #                                    noise variance sigma^2
+    faults: Optional[faults_mod.FaultPlan] = None
+    #                                    deterministic chaos schedule
+    #                                    injected at the round boundaries
+    #                                    (core/faults.py); None is the
+    #                                    untouched production fast path
 
     def __post_init__(self):
         precision_mod.validate(self.precision, where="SelectorSpec")
@@ -72,6 +78,11 @@ class SelectorSpec:
         if self.algorithm not in ALGORITHMS:
             raise ValueError(f"SelectorSpec: unknown algorithm "
                              f"{self.algorithm!r}; choose from {ALGORITHMS}")
+        if self.faults is not None and not isinstance(
+                self.faults, faults_mod.FaultPlan):
+            raise TypeError(
+                "SelectorSpec: faults must be a repro.core.faults.FaultPlan "
+                f"(or None), got {type(self.faults).__name__}")
 
     @property
     def precision_policy(self):
@@ -169,7 +180,8 @@ class DistributedSelector:
                                epochs=spec.epochs,
                                schedule_kind=spec.schedule_kind,
                                precision=spec.precision,
-                               constraint=self.constraint)
+                               constraint=self.constraint,
+                               faults=spec.faults)
         self.cfg.require_even_shards(where="DistributedSelector data sharding")
         tp = mesh.shape.get("model", 1)
         self.tp = (spec.oracle_tp and tp > 1 and feat_dim % tp == 0 and
@@ -231,6 +243,7 @@ class DistributedSelector:
         # that inspect the raw SelectionResult.
         self.round_log.note("tau_fallback", res.tau_fallback)
         self.round_log.note("n_dropped", res.n_dropped)
+        self.round_log.note("degraded_selects", res.degraded)
         return res
 
     def select_batch(self, embeddings, queries: mr.QueryBatch, key=None
@@ -272,19 +285,34 @@ class DistributedSelector:
         res = self._batch_run(embeddings, ids, queries, key)
         self.round_log_batch.note("tau_fallback", jnp.sum(res.tau_fallback))
         self.round_log_batch.note("n_dropped", jnp.sum(res.n_dropped))
+        self.round_log_batch.note("degraded_selects", res.degraded)
         return res
 
     def runtime_events(self) -> dict:
-        """Realized runtime counters (tau_fallback, n_dropped, ...) summed
-        across every select()/select_batch() this selector served — the
-        single-query round log plus every slot-width batch log.  This is
-        the one place the lazy device scalars are forced to ints, so
-        serving stats/SLO dashboards read one dict instead of reaching
-        into per-Q RoundLogs."""
+        """Realized runtime counters (tau_fallback, n_dropped,
+        degraded_selects, ...) summed across every select()/select_batch()
+        this selector served — the single-query round log plus every
+        slot-width batch log — merged with the fault-injection records
+        (``fault_*`` keys, from RoundLog.fault_events()).  This is the one
+        place the lazy device scalars are forced to ints, so serving
+        stats/SLO dashboards read one dict instead of reaching into per-Q
+        RoundLogs."""
         out: dict = {}
+        seen_faults = set()
         for log in (self.round_log, *self._batch_logs.values()):
             for name, v in log.events.items():
                 out[name] = out.get(name, 0) + int(v)
+            # every batch-width log shares ONE fault record list (the
+            # driver's) — aggregate each distinct list once, not per width
+            if id(log.faults) in seen_faults:
+                continue
+            seen_faults.add(id(log.faults))
+            for name, v in log.fault_events().items():
+                key = f"fault_{name}"
+                if name == "min_eff_machines":
+                    out[key] = min(out.get(key, v), v)
+                else:
+                    out[key] = out.get(key, 0) + v
         return out
 
     def opt_upper_bound(self, embeddings) -> jax.Array:

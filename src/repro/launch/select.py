@@ -19,6 +19,7 @@ import jax.numpy as jnp
 # CLI choices derive from the central registries — registering a new
 # oracle/engine/constraint makes it launchable with no CLI edit
 from repro.core.constraints import CONSTRAINT_NAMES
+from repro.core.faults import chaos_plan, fault_summary
 from repro.core.grids import SCHEDULE_KINDS
 from repro.core.precision import PRECISION_NAMES
 from repro.core.selector import (ALGORITHMS, ORACLE_NAMES,
@@ -70,6 +71,13 @@ def main() -> None:
     ap.add_argument("--schedule", default="paper",
                     choices=list(SCHEDULE_KINDS),
                     help="multi_epoch descending-threshold schedule family")
+    ap.add_argument("--fault-rate", type=float, default=0.0,
+                    help="chaos injection: per-epoch shard-loss rate (with "
+                         "message drop/corrupt/straggler at rate/2, /4, /4)"
+                         "; faults are recorded in the round log and the "
+                         "result reports degraded + guarantee haircut")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed of the deterministic fault schedule")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -99,6 +107,7 @@ def main() -> None:
         cap = max(1, args.k // args.n_parts)
         part_caps = jnp.full((args.n_parts,), cap, jnp.int32)
 
+    faults = chaos_plan(args.fault_rate, seed=args.fault_seed)
     spec = SelectorSpec(k=args.k, oracle=args.oracle,
                         algorithm=args.algorithm, t=args.t,
                         eps=args.eps, epochs=args.epochs,
@@ -108,7 +117,8 @@ def main() -> None:
                         precision=args.precision,
                         constraint=args.constraint,
                         knapsack_budget=budget,
-                        mi_noise=args.mi_noise)
+                        mi_noise=args.mi_noise,
+                        faults=faults)
     sel = DistributedSelector(spec, mesh, n_total=args.n, feat_dim=args.d,
                               reference=reference, total=total,
                               element_costs=element_costs, parts=parts,
@@ -146,6 +156,18 @@ def main() -> None:
     print(sel.round_log.summary())
     print(f"[select] f(S)={float(res.value):.4f} |S|={int(res.sol_size)} "
           f"dropped={int(res.n_dropped)} wall={dt * 1e3:.0f}ms")
+    if faults is not None:
+        realized, frac = fault_summary(sel.round_log)
+        ev = sel.round_log.fault_events()
+        print(f"[select] chaos rate={args.fault_rate:g} "
+              f"seed={args.fault_seed}: degraded={int(res.degraded)} "
+              f"haircut={float(res.haircut):.3f} events={ev}")
+        # a realized fault must be REPORTED degraded — silent degradation
+        # is the failure mode this subsystem exists to prevent
+        assert int(res.degraded) == int(realized), \
+            "fault records and the result's degraded flag disagree"
+        if realized:
+            assert abs(float(res.haircut) - frac) < 1e-6
 
 
 if __name__ == "__main__":

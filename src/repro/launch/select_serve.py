@@ -106,7 +106,8 @@ class SelectionService:
 
     def __init__(self, spec: SelectorSpec, mesh, init_corpus,
                  reference=None, total=None, stream_chunk: int = 512,
-                 constraint=None):
+                 constraint=None, retry_attempts: int = 3,
+                 retry_backoff_s: float = 0.05):
         # corpus statistics are accumulate-plane quantities: compute them
         # in f32, then hold the corpus itself at the policy's storage dtype
         # (identity under the default f32 policy)
@@ -148,10 +149,16 @@ class SelectionService:
         self._stream_started = False
         self._init_used_batch = False
         self._init_used_stream = False
+        # transient-failure policy for the serving paths (ingest absorb,
+        # checkpoint writes): bounded retries with exponential backoff,
+        # every retry and every exhausted failure counted — never silent
+        self.retry_attempts = max(1, int(retry_attempts))
+        self.retry_backoff_s = float(retry_backoff_s)
         self.stats = {"served": 0, "shed": 0, "deadline_miss": 0,
                       "tau_fallback_batch": 0, "tau_fallback_warm": 0,
                       "n_dropped": 0, "ingested": int(n0),
-                      "warm_selects": 0}
+                      "warm_selects": 0, "ingest_retries": 0,
+                      "ingest_failures": 0, "checkpoint_retries": 0}
 
     def _maybe_release_init(self):
         """Both serve paths hold their own copy now (device corpus / sieve
@@ -203,11 +210,33 @@ class SelectionService:
         self.stats["deadline_miss"] += n_miss
 
     # ---- online ingestion path -----------------------------------------
+    def _retrying(self, what: str, fn):
+        """Run ``fn`` with bounded retry + exponential backoff.  Each
+        retried failure bumps ``<what>_retries``; exhaustion bumps
+        ``<what>_failures`` and re-raises (the caller reports the reason —
+        a failure is never swallowed here)."""
+        for attempt in range(self.retry_attempts):
+            try:
+                return fn()
+            except Exception:       # noqa: BLE001
+                if attempt == self.retry_attempts - 1:
+                    self.stats[f"{what}_failures"] = \
+                        self.stats.get(f"{what}_failures", 0) + 1
+                    raise
+                self.stats[f"{what}_retries"] = \
+                    self.stats.get(f"{what}_retries", 0) + 1
+                time.sleep(self.retry_backoff_s * (2 ** attempt))
+
     def ingest(self, docs) -> dict:
         """Admit new documents between serve steps: host-side append +
-        one-pass sieve absorption (each document streamed exactly once)."""
+        one-pass sieve absorption (each document streamed exactly once).
+        The append happens ONCE, outside the retry loop — retrying it
+        would duplicate documents; the absorb that follows is cursor-
+        driven and idempotent, so retrying it never re-streams a row."""
         self._ensure_stream()
-        info = self.stream.ingest(docs)
+        first = self.stream.corpus.append(docs)
+        info = self._retrying("ingest", self.stream.absorb)
+        info["first_id"] = first
         self.stats["ingested"] = info["n_total"]
         return info
 
@@ -227,10 +256,15 @@ class SelectionService:
         Flushes nothing — the snapshot is read-only, so saving mid-stream
         never perturbs the replay."""
         self._ensure_stream()   # the snapshot must cover the initial corpus
+        # the checkpointer retries transient write failures internally
+        # (bounded + backoff); surface its running retry count in the
+        # service stats so flakiness that never became an error is visible
+        self.stats["checkpoint_retries"] = int(ckpt.n_retries)
         state = {"stream": persist.snapshot_selector(self.stream),
                  "stats": {k: np.asarray(v, np.int64)
                            for k, v in self.stats.items()}}
         ckpt.save(step, state, blocking=blocking)
+        self.stats["checkpoint_retries"] = int(ckpt.n_retries)
 
     def restore(self, ckpt: Checkpointer, step: Optional[int] = None) -> int:
         """Warm-start from a checkpoint: the restored service continues
@@ -255,7 +289,10 @@ class SelectionService:
                 f"warm={s['warm_selects']} ingested={s['ingested']} docs; "
                 f"events: tau_fallback_batch={s['tau_fallback_batch']} "
                 f"tau_fallback_warm={s['tau_fallback_warm']} "
-                f"n_dropped={s['n_dropped']}")
+                f"n_dropped={s['n_dropped']}; retries: "
+                f"ingest={s.get('ingest_retries', 0)}"
+                f"(+{s.get('ingest_failures', 0)} failed) "
+                f"checkpoint={s.get('checkpoint_retries', 0)}")
 
 
 # ---------------------------------------------------------------------------
@@ -553,14 +590,24 @@ def main() -> None:
                     loop.step % args.ingest_every == 0:
                 t0o = time.time()
                 docs = synth_docs(ki, loop.step, args.ingest_docs, args.d)
-                info = svc.ingest(docs)
-                warm = svc.select_warm()
-                jax.block_until_ready(warm.value)
+                try:
+                    info = svc.ingest(docs)
+                    warm = svc.select_warm()
+                    jax.block_until_ready(warm.value)
+                    print(f"[select_serve] step {loop.step}: ingested "
+                          f"{args.ingest_docs} docs "
+                          f"(corpus={info['n_total']}), "
+                          f"warm f(S)={float(warm.value):.4f} "
+                          f"|S|={int(warm.sol_size)}")
+                except Exception as e:      # noqa: BLE001
+                    # retries exhausted: report the reason (shed-style,
+                    # never silent) and keep serving the batch path — the
+                    # cursor-driven absorb will catch up next cadence step
+                    print(f"[select_serve] step {loop.step}: INGEST "
+                          f"FAILED after {svc.retry_attempts} attempts "
+                          f"({type(e).__name__}: {e}) — continuing; "
+                          f"absorb resumes at the stream cursor")
                 t_online += time.time() - t0o
-                print(f"[select_serve] step {loop.step}: ingested "
-                      f"{args.ingest_docs} docs (corpus={info['n_total']}), "
-                      f"warm f(S)={float(warm.value):.4f} "
-                      f"|S|={int(warm.sol_size)}")
 
             # ---- admit (EDF, shed infeasible) / serve / retire ----------
             loop.run_step()
@@ -568,7 +615,15 @@ def main() -> None:
             # ---- async checkpoint on its own cadence --------------------
             if ckpt and args.checkpoint_every and loop.step and \
                     loop.step % args.checkpoint_every == 0:
-                svc.save(ckpt, loop.step, blocking=False)
+                try:
+                    svc.save(ckpt, loop.step, blocking=False)
+                except RuntimeError as e:
+                    # a PREVIOUS async save exhausted its retries; report
+                    # it (never silent) and try again this step — the
+                    # final blocking save below re-raises if it persists
+                    print(f"[select_serve] step {loop.step}: CHECKPOINT "
+                          f"FAILED ({e}) — retrying this step")
+                    svc.save(ckpt, loop.step, blocking=False)
     if ckpt:
         svc.save(ckpt, max(loop.step, 1))   # final blocking save (+ waits
         #                                     out and surfaces async errors)

@@ -13,7 +13,8 @@ from repro.streaming.distributed_sieve import (sieve_and_merge_mesh,
                                                sieve_and_merge_sim)
 from repro.streaming.ingest import (HostCorpus, StreamingSelector,
                                     prefetch_to_device)
-from repro.streaming.persist import (restore_selector, selector_template,
+from repro.streaming.persist import (CheckpointCorruptError,
+                                     restore_selector, selector_template,
                                      snapshot_selector)
 from repro.streaming.sieve import (SieveSpec, SieveState, merge_pool,
                                    sieve_best, sieve_chunks, sieve_finish,
@@ -24,5 +25,6 @@ __all__ = [
     "sieve_finish", "sieve_init", "sieve_run", "sieve_update",
     "sieve_and_merge_mesh", "sieve_and_merge_sim",
     "HostCorpus", "StreamingSelector", "prefetch_to_device",
+    "CheckpointCorruptError",
     "restore_selector", "selector_template", "snapshot_selector",
 ]

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core import faults as faults_mod
 from repro.core.mapreduce import SelectionResult
 from repro.core.rounds import RoundLog, gather_packed, log_gather
 from repro.core.threshold import pack_by_mask
@@ -75,10 +76,14 @@ def _local_sieve(oracle, spec: SieveSpec, feats, ids, valid,
 
 def sieve_and_merge_sim(oracle, feats_mk, ids_mk, valid_mk, spec: SieveSpec,
                         chunk_elems: int = 512,
-                        pool_cap: Optional[int] = None
+                        pool_cap: Optional[int] = None,
+                        faults: Optional[faults_mod.FaultPlan] = None
                         ) -> Tuple[SelectionResult, RoundLog]:
     """Sieve-and-merge with the m machines as a vmap axis.
-    feats_mk: (m, n/m, d) — the same layout the MapReduce sims take."""
+    feats_mk: (m, n/m, d) — the same layout the MapReduce sims take.
+    ``faults`` injects the plan's epoch-0/gather-0 faults on the single
+    survivor gather (the ride-along best-lane/v_max statistics of dead
+    machines are masked too — a lost shard contributes nothing)."""
     m, n_loc, d = feats_mk.shape
     cap = _pool_cap(spec, pool_cap)
     msg = cap + spec.tops     # packed lane survivors + top-singleton ride
@@ -92,25 +97,39 @@ def sieve_and_merge_sim(oracle, feats_mk, ids_mk, valid_mk, spec: SieveSpec,
                f"{spec.tops}/machine",
                itemsize=spec.precision_policy.storage_itemsize)
 
+    pool = (pf.reshape(m * msg, d), pi.reshape(-1), pv.reshape(-1))
+    b_eff = jnp.where(b_size > 0, b_val, -jnp.inf)
+    v_all = v_loc
+    if faults is not None:
+        w = faults_mod.FaultyRounds(None, faults, log, m, m * n_loc)
+        pool, _ = w.degrade(pool, jnp.zeros((), jnp.int32))
+        if w.last_dead is not None:
+            dm = jnp.asarray(w.last_dead)
+            b_eff = jnp.where(dm, -jnp.inf, b_eff)
+            v_all = jnp.where(dm, -jnp.inf, v_all)
+
     # central completion on the gathered pool; the best local lane solution
     # rides along so merge never returns less than the best machine
-    best = jnp.argmax(jnp.where(b_size > 0, b_val, -jnp.inf))
-    res = merge_pool(oracle, spec,
-                     pf.reshape(m * msg, d), pi.reshape(-1),
-                     pv.reshape(-1), jnp.max(v_loc),
+    best = jnp.argmax(b_eff)
+    ride_val = b_val[best] if faults is None else b_eff[best]
+    res = merge_pool(oracle, spec, *pool, jnp.max(v_all),
                      b_sol[best], b_size[best],
-                     jnp.maximum(b_val[best], 0.0))
-    return res._replace(n_dropped=jnp.sum(dropped)), log
+                     jnp.maximum(ride_val, 0.0))
+    res = res._replace(n_dropped=jnp.sum(dropped))
+    return faults_mod.apply_fault_flags(res, log), log
 
 
 def sieve_and_merge_mesh(oracle, spec: SieveSpec, mesh: Mesh,
                          axes=("data",), data_spec=None,
                          chunk_elems: int = 512,
-                         pool_cap: Optional[int] = None):
+                         pool_cap: Optional[int] = None,
+                         faults: Optional[faults_mod.FaultPlan] = None):
     """Sieve-and-merge on a device mesh.  Returns a jit-able
     (feats_global, ids_global) -> SelectionResult plus the RoundLog.
     feats_global: (n, d) sharded over ``axes`` on dim 0; each shard is that
-    machine's stream.  No RNG input: the whole driver is deterministic."""
+    machine's stream.  No RNG input: the whole driver is deterministic —
+    including under ``faults``, whose seeded plan realizes the same dead
+    machines as the sim driver (record parity by construction)."""
     axes = tuple(a for a in axes if a in mesh.shape)
     m = math.prod(mesh.shape[a] for a in axes)
     cap = _pool_cap(spec, pool_cap)
@@ -132,14 +151,23 @@ def sieve_and_merge_mesh(oracle, spec: SieveSpec, mesh: Mesh,
         Pf = gather_packed(pf, gather_axes)
         Pi = gather_packed(pi, gather_axes)
         Pv = gather_packed(pv, gather_axes)
-        v_max = jax.lax.pmax(v_loc, gather_axes)
+        pool = (Pf, Pi, Pv)
+        v_all = jax.lax.all_gather(v_loc, gather_axes)
         # replicate every machine's best-lane candidate, keep the argmax
         b_vals = jax.lax.all_gather(jnp.where(b_size > 0, b_val, -jnp.inf),
                                     gather_axes)
         b_sols = jax.lax.all_gather(b_sol, gather_axes)
         b_sizes = jax.lax.all_gather(b_size, gather_axes)
+        if faults is not None:
+            w = faults_mod.FaultyRounds(None, faults, log, m,
+                                        m * feats.shape[0])
+            pool, _ = w.degrade(pool, jnp.zeros((), jnp.int32))
+            if w.last_dead is not None:
+                dm = jnp.asarray(w.last_dead)
+                b_vals = jnp.where(dm, -jnp.inf, b_vals)
+                v_all = jnp.where(dm, -jnp.inf, v_all)
         best = jnp.argmax(b_vals)
-        res = merge_pool(oracle, spec, Pf, Pi, Pv, v_max, b_sols[best],
+        res = merge_pool(oracle, spec, *pool, jnp.max(v_all), b_sols[best],
                          b_sizes[best], jnp.maximum(b_vals[best], 0.0))
         return res._replace(n_dropped=jax.lax.psum(dropped, gather_axes))
 
@@ -148,6 +176,7 @@ def sieve_and_merge_mesh(oracle, spec: SieveSpec, mesh: Mesh,
                    out_specs=P(), check_rep=False)
 
     def run(feats_global, ids_global):
-        return SelectionResult(*fn(feats_global, ids_global))
+        res = SelectionResult(*fn(feats_global, ids_global))
+        return faults_mod.apply_fault_flags(res, log)
 
     return run, log

@@ -198,6 +198,17 @@ class StreamingSelector:
         chunk (full chunks only — the tail waits for more documents or for
         the next select()'s flush).  Returns ingest stats."""
         first = self.corpus.append(docs)
+        info = self.absorb()
+        info["first_id"] = first
+        return info
+
+    def absorb(self) -> dict:
+        """Stream every newly completed chunk through the sieve.  Split
+        out from ingest() so a serving layer can retry it: absorb is
+        driven by the ``n_streamed`` cursor, so re-calling after a
+        failed/partial absorb continues exactly where it stopped — no row
+        is ever streamed twice (the append happened once, outside any
+        retry loop)."""
         n_chunks = 0
         for f, i, v in prefetch_to_device(
                 self.corpus.chunks(self.n_streamed, full_only=True)):
@@ -206,8 +217,8 @@ class StreamingSelector:
             n_chunks += 1
         if not self.retain_streamed:
             self.corpus.prune(self.n_streamed)
-        return {"first_id": first, "n_total": self.n_total,
-                "streamed": self.n_streamed, "chunks": n_chunks}
+        return {"n_total": self.n_total, "streamed": self.n_streamed,
+                "chunks": n_chunks}
 
     def _flush(self) -> None:
         for f, i, v in prefetch_to_device(

@@ -32,7 +32,15 @@ from __future__ import annotations
 import jax
 import numpy as np
 
+# re-exported: the checkpoint layer raises this for truncated/corrupted
+# files (bad zip/CRC, leaf-count or byte-length mismatch vs the manifest);
+# restore_selector raises it for a snapshot whose tail bytes disagree
+# with its own cursor — serving callers catch ONE error type either way
+from repro.checkpoint.checkpointer import CheckpointCorruptError
 from repro.streaming.ingest import HostCorpus, StreamingSelector
+
+__all__ = ["CheckpointCorruptError", "snapshot_selector",
+           "selector_template", "restore_selector"]
 
 
 def snapshot_selector(sel: StreamingSelector) -> dict:
@@ -99,10 +107,15 @@ def restore_selector(sel: StreamingSelector, snap: dict) -> None:
             f"checkpoint")
     corpus = HostCorpus(sel.corpus.feat_dim, chunk_elems, base=n_streamed,
                         dtype=sel.corpus.dtype)
+    if n_streamed + tail.shape[0] != n_total:
+        # the cursor and the tail bytes were written atomically together;
+        # disagreement means the snapshot is truncated/damaged, not a
+        # spec mismatch — refuse it as corruption
+        raise CheckpointCorruptError(
+            f"snapshot tail holds {tail.shape[0]} rows but the cursor "
+            f"promises [{n_streamed}, {n_total}) — truncated or damaged "
+            f"checkpoint")
     if tail.shape[0]:
         corpus.append(tail)
-    assert corpus.n_total == n_total, \
-        f"tail rows {tail.shape[0]} inconsistent with cursor " \
-        f"[{n_streamed}, {n_total})"
     sel.corpus = corpus
     sel.n_streamed = n_streamed

@@ -278,3 +278,149 @@ def test_service_stats_split_batch_vs_warm():
     # the selector-side aggregate view realizes the same counters
     ev = svc.selector.runtime_events()
     assert ev.get("tau_fallback", 0) == svc.stats["tau_fallback_batch"]
+
+
+# ---------------------------------------------------------------------------
+# retrying serving paths + corrupted-checkpoint rejection (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+def test_checkpointer_retries_transient_write_failures(monkeypatch):
+    """A save that fails transiently is retried with backoff (counted in
+    n_retries) and succeeds; the checkpoint on disk restores cleanly."""
+    state = {"a": np.arange(6, dtype=np.float32)}
+    fails = {"left": 2}
+    real_savez = np.savez
+
+    def flaky_savez(path, **kw):
+        if fails["left"]:
+            fails["left"] -= 1
+            raise OSError("disk hiccup")
+        real_savez(path, **kw)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        ck = Checkpointer(tmp, retry_attempts=3, retry_backoff_s=0.0)
+        monkeypatch.setattr(np, "savez", flaky_savez)
+        ck.save(1, state)
+        monkeypatch.setattr(np, "savez", real_savez)
+        assert ck.n_retries == 2
+        got, step = ck.restore({"a": np.zeros(6, np.float32)})
+        assert step == 1
+        np.testing.assert_array_equal(np.asarray(got["a"]), state["a"])
+
+
+def test_checkpointer_async_exhaustion_raises_from_wait(monkeypatch):
+    """Retries exhausted on the async path: the worker stashes the error
+    and wait() re-raises it with the attempt count — never silent."""
+    def always_fail(path, **kw):
+        raise OSError("disk gone")
+
+    with tempfile.TemporaryDirectory() as tmp:
+        ck = Checkpointer(tmp, retry_attempts=3, retry_backoff_s=0.0)
+        monkeypatch.setattr(np, "savez", always_fail)
+        ck.async_save(1, {"a": np.zeros(3, np.float32)})
+        with pytest.raises(RuntimeError, match="3 attempts"):
+            ck.wait()
+        assert ck.n_retries == 2          # 2 retried + 1 final failure
+        # the failed save left no half-written checkpoint behind
+        assert ck.latest_step() is None
+
+
+def test_bit_flipped_checkpoint_raises_corrupt_error():
+    """A single flipped byte in arrays.npz must surface as
+    CheckpointCorruptError on restore, not a raw zip/unpickling traceback
+    or silently damaged state."""
+    import glob
+    import os
+
+    from repro.streaming import CheckpointCorruptError
+
+    state = {"a": np.arange(512, dtype=np.float32)}
+    tmpl = {"a": np.zeros(512, np.float32)}
+    with tempfile.TemporaryDirectory() as tmp:
+        ck = Checkpointer(tmp)
+        ck.save(1, state)
+        [npz] = glob.glob(os.path.join(tmp, "step_1", "arrays.npz"))
+        blob = bytearray(open(npz, "rb").read())
+        blob[len(blob) // 2] ^= 0xFF      # flip one payload byte
+        open(npz, "wb").write(bytes(blob))
+        with pytest.raises(CheckpointCorruptError):
+            Checkpointer(tmp).restore(tmpl)
+
+
+def test_truncated_checkpoint_raises_corrupt_error():
+    import os
+
+    from repro.checkpoint.checkpointer import CheckpointCorruptError
+
+    state = {"a": np.arange(512, dtype=np.float32),
+             "b": np.ones(64, np.float32)}
+    with tempfile.TemporaryDirectory() as tmp:
+        ck = Checkpointer(tmp)
+        ck.save(1, state)
+        npz = os.path.join(tmp, "step_1", "arrays.npz")
+        blob = open(npz, "rb").read()
+        open(npz, "wb").write(blob[: len(blob) // 2])   # truncate
+        with pytest.raises(CheckpointCorruptError):
+            Checkpointer(tmp).restore(
+                {"a": np.zeros(512, np.float32),
+                 "b": np.zeros(64, np.float32)})
+
+
+def test_service_ingest_retry_is_idempotent(monkeypatch):
+    """The ingest path retries absorb() (cursor-driven, idempotent) but
+    appends exactly once: after two injected _update failures the final
+    state is bit-identical to a never-failed run, and the retries are
+    counted in the service stats."""
+    n, d, k = 128, 8, 4
+    emb = _corpus(n, d, 20)
+    docs = _corpus(96, d, 21)
+    spec = SelectorSpec(k=k)
+    mesh = _mesh()
+
+    plain = SelectionService(spec, mesh, emb, stream_chunk=32)
+    plain.ingest(docs)
+    res_plain = plain.select_warm()
+
+    flaky = SelectionService(spec, mesh, emb, stream_chunk=32,
+                             retry_backoff_s=0.0)
+    flaky._ensure_stream()
+    real_update = flaky.stream._update
+    fails = {"left": 2}
+
+    def flaky_update(st, f, i, v):
+        if fails["left"]:
+            fails["left"] -= 1
+            raise RuntimeError("transient device error")
+        return real_update(st, f, i, v)
+
+    monkeypatch.setattr(flaky.stream, "_update", flaky_update)
+    info = flaky.ingest(docs)
+    assert flaky.stats["ingest_retries"] == 2
+    assert flaky.stats["ingest_failures"] == 0
+    assert info["n_total"] == n + 96
+    res_flaky = flaky.select_warm()
+
+    np.testing.assert_array_equal(np.asarray(res_plain.sol_ids),
+                                  np.asarray(res_flaky.sol_ids))
+    assert np.asarray(res_plain.value).tobytes() == \
+        np.asarray(res_flaky.value).tobytes()
+    # no row was double-streamed: the cursors agree
+    assert flaky.stream.n_streamed == plain.stream.n_streamed
+
+
+def test_service_ingest_retry_exhaustion_reports(monkeypatch):
+    n, d, k = 128, 8, 4
+    svc = SelectionService(SelectorSpec(k=k), _mesh(), _corpus(n, d, 22),
+                           stream_chunk=32, retry_attempts=2,
+                           retry_backoff_s=0.0)
+    svc._ensure_stream()
+
+    def always_fail(st, f, i, v):
+        raise RuntimeError("device gone")
+
+    monkeypatch.setattr(svc.stream, "_update", always_fail)
+    with pytest.raises(RuntimeError, match="device gone"):
+        svc.ingest(_corpus(64, d, 23))
+    assert svc.stats["ingest_retries"] == 1
+    assert svc.stats["ingest_failures"] == 1
+    assert "ingest=1(+1 failed)" in svc.summary()
